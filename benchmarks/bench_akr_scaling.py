@@ -1,0 +1,35 @@
+"""Beyond-paper ablation: AKR sensitivity to τ (temperature) and θ
+(mass threshold) — the paper fixes τ and θ; we sweep them to map the
+relevance/diversity/cost frontier."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.scenario import build_scenario, coverage
+from repro.core.pipeline import VenusConfig
+
+
+def run() -> None:
+    base = build_scenario(n_scenes=10, seed=51)
+    world, oracle = base.world, base.oracle
+    queries = world.make_queries(12, seed=53)
+
+    for tau in (0.03, 0.07, 0.15):
+        for theta in (0.7, 0.9):
+            sys_ = base.system
+            sys_.cfg = VenusConfig(tau=tau, theta=theta)
+            covs, nsel = [], []
+            for q in queries:
+                qe = oracle.embed_query(q)
+                res = sys_.query(q.text, query_emb=qe)
+                covs.append(coverage(world, q, res.frame_ids))
+                nsel.append(res.n_drawn)
+            emit(f"akr_scaling/tau{tau}_theta{theta}", 0.0,
+                 {"coverage": f"{np.mean(covs):.3f}",
+                  "mean_draws": f"{np.mean(nsel):.1f}"})
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Paper Fig. 12: end-to-end query latency breakdown per processing step.
+
+Venus steps (measured on this host + modeled comm/cloud): query embed,
+similarity, sampling, expand, upload, VLM. Vanilla steps include the
+query-time embedding backlog (frames not yet embedded when the query
+arrives)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.scenario import build_scenario, per_frame_embeddings
+from repro.core.costmodel import venus_query_latency
+
+
+def run() -> None:
+    sc = build_scenario(n_scenes=10, seed=41)
+    world, oracle, system = sc.world, sc.oracle, sc.system
+    queries = world.make_queries(8, seed=43)
+
+    agg = {}
+    n_up = []
+    for q in queries:
+        qe = oracle.embed_query(q)
+        res = system.query(q.text, query_emb=qe)
+        b = venus_query_latency(measured_edge_s=res.timings,
+                                n_frames_uploaded=len(res.frame_ids))
+        n_up.append(len(res.frame_ids))
+        for k, v in b.parts.items():
+            agg.setdefault(k, []).append(v)
+    for k, v in agg.items():
+        emit(f"fig12/venus/{k}", float(np.mean(v)))
+    emit("fig12/venus/total", float(np.sum([np.mean(v)
+                                            for v in agg.values()])),
+         {"frames_uploaded": f"{np.mean(n_up):.1f}"})
+
+    # vanilla: embedding backlog at query time (10% of stream pending)
+    t0 = time.perf_counter()
+    per_frame_embeddings(world, oracle, stride=10)
+    backlog_s = time.perf_counter() - t0
+    emit("fig12/vanilla/embed_backlog", backlog_s)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Kernel microbenchmarks: jnp reference path timed on this host (the
+Pallas path targets TPU; interpret mode is not a performance proxy, so we
+time the XLA-compiled reference and report shapes + bytes touched)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.kernels import ops
+
+
+def run() -> None:
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 8)
+
+    b, h, hkv, d, c = 4, 32, 8, 128, 8192
+    q = jax.random.normal(ks[0], (b, 1, h, d), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, c, hkv, d), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, c, hkv, d), jnp.bfloat16)
+    valid = jnp.ones((b, c), bool)
+    jf = jax.jit(lambda: ops.decode_attention(
+        q, k, v, valid, scale=d ** -0.5, q_per_kv=h // hkv))
+    s = time_call(lambda: jf().block_until_ready())
+    emit("kernels/decode_attention_8k", s,
+         {"kv_bytes": 2 * b * c * hkv * d * 2})
+
+    n, dim = 8192, 768
+    query = jax.random.normal(ks[3], (1, dim))
+    index = jax.random.normal(ks[4], (n, dim))
+    vmask = jnp.ones((n,), bool)
+    jf = jax.jit(lambda: ops.similarity(query, index, tau=0.07,
+                                        valid=vmask)[1])
+    s = time_call(lambda: jf().block_until_ready())
+    emit("kernels/similarity_8k", s, {"index_mb": n * dim * 4 / 1e6})
+
+    frames = jax.random.uniform(ks[5], (32, 224, 224, 3))
+    jf = jax.jit(lambda: ops.scene_score(frames, (1.0, 1.0, 1.0, 2.0)))
+    s = time_call(lambda: jf().block_until_ready())
+    emit("kernels/scene_score_224", s,
+         {"per_frame_us": f"{s / 32 * 1e6:.1f}"})
+
+
+if __name__ == "__main__":
+    run()

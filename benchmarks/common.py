@@ -1,0 +1,29 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (harness
+contract) — ``derived`` carries the benchmark's headline metric
+(accuracy, coverage, speedup, ...) as ``key=value|key=value``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+
+def time_call(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time of fn() in seconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, seconds: float, derived: Dict | None = None) -> None:
+    d = "|".join(f"{k}={v}" for k, v in (derived or {}).items())
+    print(f"{name},{seconds * 1e6:.1f},{d}")

@@ -1,0 +1,87 @@
+"""§Perf hillclimb driver: lower one (arch × shape) with the CURRENT code
+and compare its roofline terms against the baseline dry-run artifact.
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch minicpm3-4b \
+      --shape train_4k --tag chunked_attn
+
+Writes experiments/perf/<arch>_<shape>_<tag>.json and prints the
+before/after table used in EXPERIMENTS.md §Perf.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+
+from repro.launch.dryrun import lower_combo  # noqa: E402  (sets flags)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--baseline-dir", default="experiments/dryrun")
+    ap.add_argument("--no-chunked", action="store_true",
+                    help="disable query-chunked causal attention (iter A)")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="sequence-parallel attention constraint (iter C)")
+    ap.add_argument("--q-chunk", type=int, default=0,
+                    help="override SDPA_Q_CHUNK (shard-aligned chunking)")
+    ap.add_argument("--serve-bf16", action="store_true",
+                    help="bf16 weights for serving shapes (iter D)")
+    ap.add_argument("--zero3", action="store_true",
+                    help="ZeRO-3 FSDP placement (iter F)")
+    args = ap.parse_args()
+
+    from repro.models import attention as A
+    if args.zero3:
+        import repro.launch.dryrun as DR
+        DR.TRAIN_SHARDING_MODE = "train_zero3"
+    A.CHUNKED_SDPA = not args.no_chunked
+    if args.q_chunk:
+        A.SDPA_Q_CHUNK = args.q_chunk
+    if args.seq_parallel:
+        A.set_seq_parallel_attn((("data",), "model"))
+    if args.serve_bf16:
+        import repro.launch.dryrun as DR
+        from repro.launch.specs import adapt_config as _ac
+        import repro.launch.specs as SP
+        _orig = SP.adapt_config
+        def patched(cfg, shape):
+            cfg = _orig(cfg, shape)
+            if shape.kind in ("decode", "prefill"):
+                cfg = cfg.replace(param_dtype="bfloat16")
+            return cfg
+        SP.adapt_config = patched
+        DR.adapt_config = patched
+
+    res = lower_combo(args.arch, args.shape, multi_pod=False,
+                      verbose=False)
+    os.makedirs("experiments/perf", exist_ok=True)
+    out = f"experiments/perf/{args.arch}_{args.shape}_{args.tag}.json"
+    with open(out, "w") as f:
+        json.dump(res, f, indent=1)
+
+    base_path = os.path.join(args.baseline_dir,
+                             f"{args.arch}_{args.shape}_16x16.json")
+    from benchmarks.roofline import analyse
+    new = analyse(res)
+    print(f"== {args.arch} × {args.shape} [{args.tag}] ==")
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            base = analyse(json.load(f))
+        for k in ("compute", "memory", "collective", "useful_ratio"):
+            b, n = base[k], new[k]
+            delta = (n - b) / b * 100 if b else float("nan")
+            print(f"  {k:12s} {b:12.4f} -> {n:12.4f}  ({delta:+.1f}%)")
+        print(f"  dominant     {base['dominant']} -> {new['dominant']}")
+    else:
+        print(json.dumps(new, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch × shape) on the single-pod mesh:
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / ICI_bw_effective
+
+ICI_bw_effective = links_used × 50 GB/s. On a v5e 2D torus each chip has
+~4 usable links; collectives on one mesh axis use 2 (bidirectional ring).
+We charge 2 links (documented, conservative).
+
+Also reports MODEL_FLOPS = 6·N·D (train; N = non-embedding params, active
+for MoE) or 2·N·D (inference forward) and the usefulness ratio
+MODEL_FLOPS / HLO_FLOPs (catches remat/redundant compute).
+
+HLO-FLOPs caveats (EXPERIMENTS.md §Roofline): metrics come from two
+reduced-depth *unrolled* lowers extrapolated linearly in depth (exact for
+depth-additive modules); XLA counts the RWKV time-scan body once —
+undercounting its WKV flops, which are <2% of that arch's projections.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.configs.base import get_shape
+from repro.launch.mesh import HARDWARE
+from repro.launch.specs import adapt_config
+from repro.models.params import (count_active_params_analytic,
+                                 count_params_analytic)
+
+PEAK = HARDWARE["peak_bf16_flops"]
+HBM = HARDWARE["hbm_bw"]
+ICI = 2 * HARDWARE["ici_bw"]        # 2 links per chip charged
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), os.pardir,
+                          "experiments", "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic useful FLOPs for the whole step, global (all chips)."""
+    shape = get_shape(shape_name)
+    cfg = adapt_config(get_config(arch), shape)
+    n_active = count_active_params_analytic(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch      # decode: 1 token/seq
+
+
+def analyse(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    n = rec["n_chips"]
+    t_c = rec["flops_per_device"] / PEAK
+    # HBM traffic estimate: every allocated byte is written+read at least
+    # once (args+outputs once, temps twice). XLA's "bytes accessed" is a
+    # fusion-blind per-op upper bound — reported separately as bytes_upper.
+    mem = rec["memory"]
+    traffic = (mem["argument_bytes"] + mem["output_bytes"]
+               + 2 * mem["temp_bytes"])
+    t_m = traffic / HBM
+    coll = sum(rec["collective_bytes_per_device"].values())
+    t_x = coll / ICI
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = rec["flops_per_device"] * n
+    return {
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dom,
+        "model_flops_global": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": round(mf / hlo_global, 4) if hlo_global else 0.0,
+        "roofline_step_s": round(max(terms.values()), 6),
+        "bytes_upper_s": round(
+            rec["bytes_accessed_per_device"] / HBM, 4),
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+    }
+
+
+def load_all(mesh: str = "16x16") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR,
+                                              f"*_{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyse(rec)
+        if row:
+            out.append(row)
+    return out
+
+
+def run() -> None:
+    from benchmarks.common import emit
+    rows = load_all()
+    for r in rows:
+        emit(f"roofline/{r['arch']}/{r['shape']}",
+             r["roofline_step_s"],
+             {"dominant": r["dominant"],
+              "compute_s": f"{r['compute']:.4f}",
+              "memory_s": f"{r['memory']:.4f}",
+              "collective_s": f"{r['collective']:.4f}",
+              "useful_ratio": r["useful_ratio"]})
+    if not rows:
+        emit("roofline/no_dryrun_artifacts", 0.0,
+             {"hint": "run python -m repro.launch.dryrun --all first"})
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    rows = load_all(mesh)
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful ratio |\n|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute']:.4f} | "
+            f"{r['memory']:.4f} | {r['collective']:.4f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

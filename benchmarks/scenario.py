@@ -1,0 +1,68 @@
+"""Shared benchmark scenario: synthetic world + ingested Venus system.
+
+All accuracy-shaped benchmarks (Tables I/II, Figs 10/11/12) run on the
+same procedural world with ground-truth events; "accuracy" is event/scene
+coverage of the retrieved frame set (the measurable analogue of VQA
+accuracy — a cloud VLM answers correctly iff the relevant scenes are in
+the frames it receives; see DESIGN.md §1)."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.pipeline import VenusConfig, VenusSystem
+from repro.data.video import OracleEmbedder, Query, VideoWorld, WorldConfig
+
+
+@dataclass
+class Scenario:
+    world: VideoWorld
+    oracle: OracleEmbedder
+    system: VenusSystem
+    ingest_seconds: float
+    ingest_timings: Dict[str, float]
+
+
+_CACHE = {}
+
+
+def build_scenario(n_scenes: int = 10, seed: int = 3,
+                   cfg: VenusConfig = VenusConfig(),
+                   chunk: int = 64) -> Scenario:
+    key = (n_scenes, seed, cfg)
+    if key in _CACHE:
+        return _CACHE[key]
+    world = VideoWorld(WorldConfig(n_scenes=n_scenes, seed=seed))
+    oracle = OracleEmbedder(world, dim=64)
+    system = VenusSystem(cfg, oracle, embed_dim=64)
+    t0 = time.perf_counter()
+    agg: Dict[str, float] = {}
+    for i in range(0, world.total_frames, chunk):
+        t = system.ingest(world.frames[i:i + chunk])
+        for k, v in t.items():
+            agg[k] = agg.get(k, 0.0) + v
+    system.flush()
+    out = Scenario(world, oracle, system, time.perf_counter() - t0, agg)
+    _CACHE[key] = out
+    return out
+
+
+def coverage(world: VideoWorld, q: Query, frame_ids) -> float:
+    """Fraction of relevant scenes whose *event window* was hit — the
+    VLM can only answer if the evidence frames are in the upload."""
+    hit = {int(world.scene_of_frame[int(f)]) for f in frame_ids
+           if world.frame_in_window(int(f))}
+    rel = set(q.relevant_scenes)
+    return len(rel & hit) / max(len(rel), 1)
+
+
+def per_frame_embeddings(world: VideoWorld, oracle: OracleEmbedder,
+                         stride: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+    """Vanilla baseline index: every (strided) frame embedded."""
+    ids = np.arange(0, world.total_frames, stride)
+    embs = oracle.embed_frames(None, frame_ids=ids)
+    return ids, embs

@@ -1,0 +1,17 @@
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    RWKVConfig,
+    SSMConfig,
+    ShapeSpec,
+    get_shape,
+)
+from repro.configs.registry import (  # noqa: F401
+    ARCH_IDS,
+    SKIPPED_COMBOS,
+    combo_is_skipped,
+    get_config,
+    get_smoke_config,
+)

@@ -1,0 +1,51 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig
+
+# arch id -> module under repro.configs
+_ARCH_MODULES: Dict[str, str] = {
+    "minicpm3-4b": "minicpm3_4b",
+    "nemotron-4-15b": "nemotron4_15b",
+    "glm4-9b": "glm4_9b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "whisper-base": "whisper_base",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "deepseek-7b": "deepseek_7b",
+}
+
+ARCH_IDS: List[str] = sorted(_ARCH_MODULES)
+
+# (arch, shape) combinations that are skipped by design; see DESIGN.md
+# §Arch-applicability for the rationale.
+SKIPPED_COMBOS = {
+    ("whisper-base", "long_500k"): (
+        "enc-dec audio model: no 524k-token decoder-stream analogue"),
+}
+
+
+def _module(arch: str):
+    try:
+        mod = _ARCH_MODULES[arch]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).smoke_config()
+
+
+def combo_is_skipped(arch: str, shape: str) -> str | None:
+    return SKIPPED_COMBOS.get((arch, shape))

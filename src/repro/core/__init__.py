@@ -1,0 +1,6 @@
+from repro.core.pipeline import (  # noqa: F401
+    MEMEmbedder,
+    QueryResult,
+    VenusConfig,
+    VenusSystem,
+)

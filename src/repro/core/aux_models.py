@@ -1,0 +1,54 @@
+"""Auxiliary model stubs (paper Eq. 2): OCR / detector text prompts.
+
+The paper runs lightweight proprietary models (EasyOCR, YOLO) over each
+indexed frame and formats their outputs into textual templates that are
+embedded *jointly* with the frame by the MEM. Their vision backbones are
+out of scope (assignment carve-out); the interface is real: an AuxModel
+maps a frame (+ optional ground-truth annotations from the synthetic
+world) to template text, and the pipeline turns that text into tokens for
+the MEM text tower.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Protocol, Sequence
+
+import numpy as np
+
+
+class AuxModel(Protocol):
+    name: str
+
+    def describe(self, frame: np.ndarray,
+                 annotations: Optional[Dict] = None) -> str: ...
+
+
+@dataclass
+class OCRStub:
+    """Emits the synthetic world's text annotation (what EasyOCR would
+    read off the frame)."""
+    name: str = "ocr"
+
+    def describe(self, frame, annotations=None) -> str:
+        if annotations and annotations.get("text"):
+            return f"text: {annotations['text']}"
+        return ""
+
+
+@dataclass
+class DetectorStub:
+    """Emits object labels (what YOLO would detect)."""
+    name: str = "yolo"
+
+    def describe(self, frame, annotations=None) -> str:
+        if annotations and annotations.get("objects"):
+            return "objects: " + ", ".join(annotations["objects"])
+        return ""
+
+
+def build_aux_prompt(models: Sequence[AuxModel], frame: np.ndarray,
+                     annotations: Optional[Dict] = None) -> str:
+    """Eq. 2: t_i = AuxModels(k_i), formatted into one template string."""
+    parts = [m.describe(frame, annotations) for m in models]
+    return " | ".join(p for p in parts if p)

@@ -1,0 +1,106 @@
+"""Incremental frame clustering within a scene partition (paper §IV-B2).
+
+The first frame seeds cluster c₀; each subsequent frame joins the nearest
+existing centroid if its L2 distance is within ``threshold``, otherwise it
+seeds a new cluster. Centroids are running means of their members (the
+temporal-contiguity property the paper wants falls out of processing
+frames in order). Implemented as a fixed-capacity ``lax.scan`` so it jits:
+state carries (centroid sums, counts, n_clusters) with a max-clusters
+bound; overflow joins the nearest cluster regardless of threshold.
+
+``cluster_partition`` returns per-frame assignments plus, per cluster, the
+**index frame** — the member closest to the final centroid (the paper's
+"centroid frame") — which is what gets embedded into memory.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def frame_vectors(frames: jnp.ndarray, pool: int = 8) -> jnp.ndarray:
+    """(T,H,W,3) -> (T, d) pooled+flattened pixel vectors (the paper's
+    "flatten raw pixel values", made cheap via average pooling)."""
+    t, h, w, c = frames.shape
+    ph, pw = h // pool, w // pool
+    x = frames[:, : ph * pool, : pw * pool]
+    x = x.reshape(t, ph, pool, pw, pool, c).mean(axis=(2, 4))
+    return x.reshape(t, -1)
+
+
+class ClusterResult(NamedTuple):
+    assignments: jnp.ndarray       # (T,) int32 cluster id per frame
+    n_clusters: jnp.ndarray        # () int32
+    centroids: jnp.ndarray         # (K_max, d) running-mean centroids
+    counts: jnp.ndarray            # (K_max,) member counts
+    index_frames: jnp.ndarray      # (K_max,) member idx closest to centroid
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def cluster_partition(vecs: jnp.ndarray, *, threshold: float,
+                      max_clusters: int) -> ClusterResult:
+    """vecs: (T, d) frame vectors of one partition.
+
+    Pads T to the next power of two so the jit cache sees O(log T)
+    distinct shapes instead of one per partition length (online
+    partitions have arbitrary lengths)."""
+    t = vecs.shape[0]
+    tp = _next_pow2(t)
+    padded = jnp.pad(vecs, ((0, tp - t), (0, 0)))
+    n_valid = jnp.asarray(t, jnp.int32)
+    res = _cluster_padded(padded, n_valid, threshold=float(threshold),
+                          max_clusters=int(max_clusters))
+    return ClusterResult(res.assignments[:t], res.n_clusters,
+                         res.centroids, res.counts, res.index_frames)
+
+
+@functools.partial(jax.jit, static_argnames=("threshold", "max_clusters"))
+def _cluster_padded(vecs: jnp.ndarray, n_valid: jnp.ndarray, *,
+                    threshold: float, max_clusters: int) -> ClusterResult:
+    t, d = vecs.shape
+    kmax = max_clusters
+
+    def step(state, inp):
+        sums, counts, n = state
+        i, v = inp
+        ok = i < n_valid
+        means = sums / jnp.maximum(counts, 1.0)[:, None]
+        dist = jnp.sqrt(jnp.sum((means - v[None]) ** 2, axis=-1) + 1e-12)
+        dist = jnp.where(jnp.arange(kmax) < n, dist, jnp.inf)
+        nearest = jnp.argmin(dist)
+        near_ok = dist[nearest] <= threshold
+        can_new = n < kmax
+        make_new = ((~near_ok) & can_new) | (n == 0)
+        cid = jnp.where(make_new, n, nearest).astype(jnp.int32)
+        cid = jnp.where(ok, cid, 0)
+        upd = ok.astype(jnp.float32)
+        sums = sums.at[cid].add(v * upd)
+        counts = counts.at[cid].add(upd)
+        n = n + (make_new & ok).astype(jnp.int32)
+        return (sums, counts, n), cid
+
+    init = (jnp.zeros((kmax, d), jnp.float32),
+            jnp.zeros((kmax,), jnp.float32),
+            jnp.zeros((), jnp.int32))
+    (sums, counts, n), assignments = jax.lax.scan(
+        step, init, (jnp.arange(t), vecs.astype(jnp.float32)))
+    centroids = sums / jnp.maximum(counts, 1.0)[:, None]
+
+    # index frame per cluster: member closest to the final centroid
+    d2 = jnp.sum((vecs.astype(jnp.float32)[:, None, :]
+                  - centroids[None, :, :]) ** 2, axis=-1)   # (T, K)
+    member = ((assignments[:, None] == jnp.arange(kmax)[None, :])
+              & (jnp.arange(t)[:, None] < n_valid))
+    d2 = jnp.where(member, d2, jnp.inf)
+    index_frames = jnp.argmin(d2, axis=0).astype(jnp.int32)
+    return ClusterResult(assignments, n, centroids, counts, index_frames)

@@ -1,0 +1,115 @@
+"""Distributed Venus memory: the index sharded across the pod.
+
+On a real deployment the edge keeps its own small index, but Venus's
+memory also has a *fleet* story (DESIGN.md §5): a site with many cameras
+aggregates indexed vectors into one pod-resident memory, sharded over the
+``model`` mesh axis. Retrieval is then a shard_map program:
+
+  1. every shard scans its local slice with the fused similarity kernel
+     (Eq. 4) — embarrassingly parallel, MXU-bound;
+  2. each shard reduces its slice to its local top-M candidates
+     (M = n_max, so no recall loss for any budget ≤ n_max);
+  3. one small all_gather of (M scores, M global ids) per shard —
+     K·M·8 bytes, independent of index size;
+  4. the temperature softmax (Eq. 5) + sampling/AKR run on the gathered
+     candidate set exactly as in the single-node path.
+
+Exactness: softmax probabilities of the true global top-(≤M) survivors
+are identical to the dense computation restricted to them; AKR's mass
+accounting is conservative (it can only under-count tail mass it would
+never have sampled at θ ≤ the candidate mass).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.kernels import ops as kops
+
+
+@functools.partial(jax.jit, static_argnames=("top_m", "mesh", "mesh_axis"))
+def _sharded_scan(query: jnp.ndarray, index: jnp.ndarray,
+                  valid: jnp.ndarray, *, top_m: int, mesh,
+                  mesh_axis: str = "model"):
+    """query (d,) replicated; index (N, d) + valid (N,) sharded on axis 0
+    over ``mesh_axis``. Returns (scores (K·M,), ids (K·M,)) gathered."""
+
+    def local(q, idx, val):
+        # idx: (N/K, d) local slice
+        sims, _ = kops.similarity(q[None], idx, tau=1.0, valid=val)
+        s = jnp.where(val, sims[0], -jnp.inf)
+        m = min(top_m, s.shape[0])
+        top_s, top_i = jax.lax.top_k(s, m)
+        shard = jax.lax.axis_index(mesh_axis)
+        gids = top_i + shard * s.shape[0]          # global ids
+        # per-shard candidates; the sharded out_specs stitch them into
+        # (K·M,) arrays — the all-gather happens at the consumer
+        return top_s, gids
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(mesh_axis, None), P(mesh_axis)),
+        out_specs=(P(mesh_axis), P(mesh_axis)))(query, index, valid)
+
+
+class DistributedVenusMemory:
+    """Pod-resident index: insert on host, retrieve via shard_map."""
+
+    def __init__(self, capacity: int, dim: int, mesh, *,
+                 mesh_axis: str = "model", top_m: int = 64):
+        k = dict(mesh.shape)[mesh_axis]
+        assert capacity % k == 0, (capacity, k)
+        self.capacity, self.dim = capacity, dim
+        self.mesh, self.mesh_axis, self.top_m = mesh, mesh_axis, top_m
+        sh = NamedSharding(mesh, P(mesh_axis, None))
+        shv = NamedSharding(mesh, P(mesh_axis))
+        self._emb = jax.device_put(jnp.zeros((capacity, dim), jnp.float32),
+                                   sh)
+        self._valid = jax.device_put(jnp.zeros((capacity,), bool), shv)
+        self._size = 0
+
+    @property
+    def size(self) -> int:
+        return self._size
+
+    def insert(self, embeddings) -> None:
+        """Append a batch of indexed vectors (host-side, like FAISS add).
+
+        Round-robins rows across shards so load stays balanced."""
+        embeddings = jnp.asarray(embeddings, jnp.float32)
+        n = embeddings.shape[0]
+        if self._size + n > self.capacity:
+            raise RuntimeError("distributed memory capacity exhausted")
+        k = dict(self.mesh.shape)[self.mesh_axis]
+        per = self.capacity // k
+        for row in embeddings:      # slot s -> shard s%k, offset size//k
+            s = self._size
+            pos = (s % k) * per + s // k
+            self._emb = self._emb.at[pos].set(row)
+            self._valid = self._valid.at[pos].set(True)
+            self._size += 1
+
+    def global_id_to_insert_order(self, gid: int) -> int:
+        k = dict(self.mesh.shape)[self.mesh_axis]
+        per = self.capacity // k
+        shard, off = divmod(int(gid), per)
+        return off * k + shard
+
+    def search(self, query_emb, *, tau: float
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (candidate insert-order ids (K·M,), probs (K·M,)) —
+        Eq. 4+5 over the gathered global candidate set."""
+        scores, gids = _sharded_scan(
+            jnp.asarray(query_emb, jnp.float32), self._emb,
+            self._valid, top_m=self.top_m, mesh=self.mesh,
+            mesh_axis=self.mesh_axis)
+        logits = jnp.where(jnp.isfinite(scores), scores / tau, -1e30)
+        probs = jax.nn.softmax(logits)
+        ids = jnp.asarray([self.global_id_to_insert_order(g)
+                           for g in jax.device_get(gids)])
+        return ids, probs

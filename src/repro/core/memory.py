@@ -1,0 +1,135 @@
+"""Hierarchical memory (paper §IV-C): index layer over a raw data layer.
+
+* **Raw data layer** — every captured frame, archived as-is. Here it is a
+  ``FrameStore`` holding frames by absolute index (the paper's NVMe
+  archive); reasoning-time expansion pulls raw frames from it.
+* **Index data layer** — one vector per *indexed frame* (cluster
+  centroid), stored in a fixed-capacity packed array that is directly
+  shardable over the ``model`` mesh axis (DESIGN.md: brute-force MXU
+  similarity replaces FAISS ANN on TPU). Each indexed vector is linked to
+  its scene cluster via a bounded **member reservoir** — up to
+  ``member_cap`` member frame ids kept uniformly at random, so
+  "uniformly sample n(oᵢ) frames from cluster c(oᵢ)" (§IV-D1) stays a
+  fixed-shape gather.
+
+Inserts are cheap O(K·d) host-side appends (as in FAISS); the query-path
+similarity scan is the jit/Pallas hot path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+
+class FrameStore:
+    """Raw data layer: append-only archive of frames by absolute index."""
+
+    def __init__(self):
+        self._frames: List[np.ndarray] = []
+
+    def append(self, frames: np.ndarray) -> None:
+        for f in np.asarray(frames):
+            self._frames.append(f)
+
+    def __len__(self) -> int:
+        return len(self._frames)
+
+    def get(self, idx: Sequence[int]) -> np.ndarray:
+        return np.stack([self._frames[int(i)] for i in idx])
+
+
+@dataclass
+class IndexEntry:
+    scene_id: int
+    cluster_id: int
+    ts: int                      # timestamp (frame index) of indexed frame
+
+
+class VenusMemory:
+    """Index layer: packed vector store + cluster member reservoirs."""
+
+    def __init__(self, capacity: int, dim: int, member_cap: int = 128,
+                 seed: int = 0):
+        self.capacity = capacity
+        self.dim = dim
+        self.member_cap = member_cap
+        self._emb = np.zeros((capacity, dim), np.float32)
+        self._members = np.zeros((capacity, member_cap), np.int32)
+        self._member_count = np.zeros((capacity,), np.int32)
+        self._index_frame = np.zeros((capacity,), np.int32)
+        self._scene_id = np.zeros((capacity,), np.int32)
+        self._size = 0
+        self._rng = np.random.default_rng(seed)
+        self._device_cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
+
+    # ------------------------------------------------------------- ingestion
+    def insert_cluster(self, embedding: np.ndarray, *, scene_id: int,
+                       index_frame: int, member_frames: Sequence[int]
+                       ) -> int:
+        """Insert one indexed vector linked to its cluster members."""
+        if self._size >= self.capacity:
+            raise RuntimeError("memory capacity exhausted")
+        i = self._size
+        self._emb[i] = np.asarray(embedding, np.float32)
+        members = np.asarray(member_frames, np.int32)
+        m = len(members)
+        if m > self.member_cap:            # uniform reservoir
+            keep = self._rng.choice(m, self.member_cap, replace=False)
+            members = members[np.sort(keep)]
+            m = self.member_cap
+        self._members[i, :m] = members
+        self._member_count[i] = m
+        self._index_frame[i] = index_frame
+        self._scene_id[i] = scene_id
+        self._size += 1
+        self._device_cache = None
+        return i
+
+    # ----------------------------------------------------------------- query
+    @property
+    def size(self) -> int:
+        return self._size
+
+    def device_index(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(embeddings (cap, d), valid (cap,)) as device arrays (cached)."""
+        if self._device_cache is None:
+            valid = np.arange(self.capacity) < self._size
+            self._device_cache = (jnp.asarray(self._emb),
+                                  jnp.asarray(valid))
+        return self._device_cache
+
+    def search(self, query_emb: jnp.ndarray, *, tau: float
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """query_emb (Q,d) -> (sims (Q,cap), probs (Q,cap)) — Eq. 4+5."""
+        emb, valid = self.device_index()
+        return kops.similarity(query_emb, emb, tau=tau, valid=valid)
+
+    # ------------------------------------------------- cluster-level expand
+    def members_table(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return jnp.asarray(self._members), jnp.asarray(self._member_count)
+
+    def expand_draws(self, draws: np.ndarray, valid: np.ndarray,
+                     seed: int = 0) -> np.ndarray:
+        """Map index draws to frame ids: each draw of index i samples one
+        member uniformly from cluster c(oᵢ) (paper §IV-D1). Returns the
+        deduplicated, time-ordered frame ids."""
+        rng = np.random.default_rng(seed)
+        out = []
+        for i, ok in zip(np.asarray(draws), np.asarray(valid)):
+            if not ok:
+                continue
+            cnt = int(self._member_count[i])
+            if cnt == 0:
+                continue
+            out.append(int(self._members[i, rng.integers(cnt)]))
+        return np.unique(np.asarray(out, np.int64))
+
+    def index_frames(self, idx: Sequence[int]) -> np.ndarray:
+        return self._index_frame[np.asarray(idx, np.int64)]

@@ -1,0 +1,181 @@
+"""Query-relevant keyframe retrieval (paper §IV-D) + all baselines.
+
+* ``sampling_retrieve`` — Eq. 5: N draws from the temperature-softmax
+  distribution over indexed vectors (relevance + diversity).
+* ``akr_progressive`` — Eq. 6/7: threshold-driven progressive sampling
+  with the N_min lower bound and an N_max transmission-budget cap,
+  implemented as a fixed-shape ``lax.while_loop`` (TPU needs static
+  shapes; unsampled slots carry a validity mask).
+* Baselines: greedy Top-K (the paper's "vanilla"), uniform sampling,
+  MDF-style dominant-frame filtering, BOLT inverse-transform sampling,
+  and an AKS-style judge-&-split selection. The latter three follow the
+  cited papers' core selection rules (not their full pipelines — noted in
+  DESIGN.md) so Table I/II-shaped comparisons are possible.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Venus: fixed-budget sampling retrieval (Eq. 5)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def sampling_retrieve(probs: jnp.ndarray, key, n: int
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """probs: (cap,) — returns (draws (n,) int32, counts (cap,) int32)."""
+    logits = jnp.where(probs > 0, jnp.log(probs), NEG_INF)
+    draws = jax.random.categorical(key, logits, shape=(n,))
+    counts = jnp.zeros_like(probs, jnp.int32).at[draws].add(1)
+    return draws.astype(jnp.int32), counts
+
+
+# ---------------------------------------------------------------------------
+# Venus: adaptive keyframe retrieval (Eq. 6 / 7)
+# ---------------------------------------------------------------------------
+
+
+class AKRResult(NamedTuple):
+    draws: jnp.ndarray          # (n_max,) int32 sampled index per step
+    valid: jnp.ndarray          # (n_max,) bool — slot actually drawn
+    n_drawn: jnp.ndarray        # () int32 total draws
+    mass: jnp.ndarray           # () f32 cumulative prob of distinct indices
+    n_min: jnp.ndarray          # () int32 Eq. 7 lower bound
+
+
+@functools.partial(jax.jit, static_argnames=("n_max",))
+def akr_progressive(probs: jnp.ndarray, key, *, theta: float = 0.9,
+                    beta: float = 1.0, n_max: int = 32) -> AKRResult:
+    """Threshold-driven progressive sampling.
+
+    Draw from P until the cumulative probability mass of the *distinct*
+    selected indices satisfies mass/β ≥ θ (Eq. 6), with at least
+    N_min = β·⌈θ / max pⱼ⌉ draws (Eq. 7) and at most n_max (bandwidth
+    bound). Narrow queries (peaked P) stop after a few draws; dispersed
+    queries keep sampling for coverage.
+    """
+    cap = probs.shape[0]
+    logits = jnp.where(probs > 0, jnp.log(probs), NEG_INF)
+    n_min = (beta * jnp.ceil(theta / jnp.maximum(
+        jnp.max(probs), 1e-9))).astype(jnp.int32)
+    n_min = jnp.minimum(jnp.maximum(n_min, 1), n_max)
+
+    def cond(state):
+        _, _, selected_mask, n, mass = state
+        done = (mass / beta >= theta) & (n >= n_min)
+        return (~done) & (n < n_max)
+
+    def body(state):
+        key, draws, selected_mask, n, mass = state
+        key, sub = jax.random.split(key)
+        idx = jax.random.categorical(sub, logits).astype(jnp.int32)
+        new = ~selected_mask[idx]
+        mass = mass + jnp.where(new, probs[idx], 0.0)
+        selected_mask = selected_mask.at[idx].set(True)
+        draws = draws.at[n].set(idx)
+        return key, draws, selected_mask, n + 1, mass
+
+    state = (key, jnp.full((n_max,), -1, jnp.int32),
+             jnp.zeros((cap,), bool), jnp.zeros((), jnp.int32),
+             jnp.zeros((), jnp.float32))
+    _, draws, _, n, mass = jax.lax.while_loop(cond, body, state)
+    valid = jnp.arange(n_max) < n
+    return AKRResult(draws, valid, n, mass, n_min)
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+
+def topk_retrieve(sims: jnp.ndarray, valid: jnp.ndarray, k: int
+                  ) -> jnp.ndarray:
+    """Greedy Top-K over similarity (the paper's vanilla; Fig. 5b/10)."""
+    masked = jnp.where(valid, sims, NEG_INF)
+    _, idx = jax.lax.top_k(masked, k)
+    return idx.astype(jnp.int32)
+
+
+def uniform_retrieve(total_frames: int, n: int) -> jnp.ndarray:
+    """Uniform sampling baseline: fixed-interval frame ids."""
+    return jnp.linspace(0, total_frames - 1, n).astype(jnp.int32)
+
+
+def bolt_inverse_transform(sims: jnp.ndarray, valid: jnp.ndarray, n: int,
+                           *, tau: float = 0.1) -> jnp.ndarray:
+    """BOLT [arXiv CVPR'25]: inverse transform sampling — deterministic
+    quantiles of the (time-ordered) similarity CDF."""
+    logits = jnp.where(valid, sims / tau, NEG_INF)
+    p = jax.nn.softmax(logits)
+    cdf = jnp.cumsum(p)
+    u = (jnp.arange(n) + 0.5) / n
+    idx = jnp.searchsorted(cdf, u)
+    return jnp.clip(idx, 0, sims.shape[0] - 1).astype(jnp.int32)
+
+
+def mdf_retrieve(embs: jnp.ndarray, valid: jnp.ndarray, n: int,
+                 *, sim_threshold: float = 0.95) -> jnp.ndarray:
+    """MDF-style query-agnostic dominant-frame filtering: scan in time
+    order, keep frames dissimilar to the last kept one, then uniformly
+    sub-sample the kept set to n."""
+    x = embs.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.sum(x * x, -1, keepdims=True) + 1e-12)
+
+    def step(carry, inp):
+        last, kept_count = carry
+        v, ok = inp
+        sim = jnp.sum(last * v)
+        keep = ok & (sim < sim_threshold)
+        last = jnp.where(keep, v, last)
+        return (last, kept_count + keep.astype(jnp.int32)), keep
+
+    (_, _), keep = jax.lax.scan(step, (jnp.zeros_like(x[0]),
+                                       jnp.zeros((), jnp.int32)),
+                                (x, valid))
+    kept_idx = jnp.nonzero(keep, size=x.shape[0], fill_value=0)[0]
+    n_kept = jnp.maximum(jnp.sum(keep.astype(jnp.int32)), 1)
+    pick = (jnp.arange(n) * n_kept // n).astype(jnp.int32)
+    return kept_idx[pick].astype(jnp.int32)
+
+
+def aks_retrieve(sims: jnp.ndarray, valid: jnp.ndarray, n: int,
+                 *, depth: int = 3) -> jnp.ndarray:
+    """AKS-style judge-&-split: recursively split the timeline, allocate
+    the frame budget proportionally to each half's relevance mass, then
+    take top scores within leaf regions (coverage + relevance)."""
+    cap = sims.shape[0]
+    s = jnp.where(valid, sims, NEG_INF)
+    mass = jnp.where(valid, jax.nn.softmax(jnp.where(valid, sims, NEG_INF)),
+                     0.0)
+
+    def alloc(lo: int, hi: int, budget: int, d: int):
+        if budget <= 0:
+            return []
+        if d == 0 or hi - lo <= budget:
+            region = s[lo:hi]
+            k = min(budget, hi - lo)
+            _, idx = jax.lax.top_k(region, k)
+            return [idx + lo]
+        mid = (lo + hi) // 2
+        m_l = jnp.sum(mass[lo:mid])
+        m_r = jnp.sum(mass[mid:hi])
+        b_l = jnp.round(budget * m_l / jnp.maximum(m_l + m_r, 1e-9))
+        b_l = int(jnp.clip(b_l, 0, budget))      # static via concretisation
+        return (alloc(lo, mid, b_l, d - 1)
+                + alloc(mid, hi, budget - b_l, d - 1))
+
+    parts = alloc(0, cap, n, depth)
+    idx = jnp.concatenate(parts) if parts else jnp.zeros((0,), jnp.int32)
+    pad = n - idx.shape[0]
+    if pad > 0:
+        idx = jnp.concatenate([idx, jnp.zeros((pad,), idx.dtype)])
+    return idx[:n].astype(jnp.int32)

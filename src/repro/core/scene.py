@@ -1,0 +1,113 @@
+"""Scene detection & segmentation (paper §IV-B1, Eq. 1).
+
+The stream is partitioned where the frame-difference score φ exceeds a
+threshold; a *maximum* partition duration handles static cameras (the
+paper's "minimum temporal threshold": if no scene change occurs within a
+set duration, the period becomes one partition).
+
+Two entry points:
+* ``scene_scores`` — φ per frame (Pallas kernel or jnp oracle).
+* ``segment`` — boundary decisions as a ``lax.scan`` over φ, carrying the
+  frames-since-boundary counter; returns a boundary mask and per-frame
+  partition ids so downstream stages stay fixed-shape under jit.
+
+``StreamSegmenter`` is the online wrapper: it consumes chunks of frames,
+maintains carry state across chunks (the previous chunk's tail φ counter)
+and emits closed partitions.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+DEFAULT_WEIGHTS = (1.0, 1.0, 1.0, 2.0)       # (hue, sat, light, edge)
+
+
+def scene_scores(frames: jnp.ndarray,
+                 weights: Tuple[float, float, float, float] = DEFAULT_WEIGHTS
+                 ) -> jnp.ndarray:
+    """frames: (T,H,W,3) float in [0,1] -> φ (T,); φ[0]=0."""
+    return kops.scene_score(frames, weights)
+
+
+def segment(phi: jnp.ndarray, *, threshold: float,
+            max_partition_len: int,
+            carry_in: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Boundary decision per frame.
+
+    Returns (boundary (T,) bool — True means frame i *starts* a new
+    partition; part_id (T,) int32 0-based within this call; carry_out —
+    frames since the last boundary after the final frame).
+    """
+    carry0 = jnp.zeros((), jnp.int32) if carry_in is None else carry_in
+
+    def step(since, p):
+        new = (p > threshold) | (since >= max_partition_len)
+        since = jnp.where(new, 1, since + 1)
+        return since, new
+
+    carry_out, boundary = jax.lax.scan(step, carry0, phi)
+    # frame 0 with no carry begins partition 0 implicitly
+    boundary = boundary.at[0].set(boundary[0] | (carry0 == 0))
+    part_id = jnp.cumsum(boundary.astype(jnp.int32)) - 1
+    part_id = jnp.maximum(part_id, 0)
+    return boundary, part_id, carry_out
+
+
+@dataclass
+class Partition:
+    """A closed scene partition: [start, end) absolute frame indices."""
+    start: int
+    end: int
+
+
+@dataclass
+class StreamSegmenter:
+    threshold: float = 0.08
+    max_partition_len: int = 256
+    weights: Tuple[float, float, float, float] = DEFAULT_WEIGHTS
+
+    _since: int = 0
+    _open_start: int = 0
+    _abs: int = 0
+    _started: bool = False
+    _last_frame: Optional[jnp.ndarray] = None
+
+    def ingest(self, frames: jnp.ndarray) -> List[Partition]:
+        """Consume a chunk (T,H,W,3); return partitions closed by it."""
+        if self._last_frame is not None:
+            ext = jnp.concatenate([self._last_frame[None], frames], axis=0)
+            phi = np.asarray(scene_scores(ext, self.weights))[1:]
+        else:
+            phi = np.asarray(scene_scores(frames, self.weights))
+        self._last_frame = frames[-1]
+        closed: List[Partition] = []
+        for i, p in enumerate(phi):
+            t = self._abs + i
+            is_boundary = (self._started
+                           and (p > self.threshold
+                                or self._since >= self.max_partition_len))
+            if is_boundary:
+                closed.append(Partition(self._open_start, t))
+                self._open_start = t
+                self._since = 1
+            else:
+                self._since += 1
+            self._started = True
+        self._abs += len(phi)
+        return closed
+
+    def flush(self) -> List[Partition]:
+        if self._started and self._abs > self._open_start:
+            part = [Partition(self._open_start, self._abs)]
+            self._open_start = self._abs
+            return part
+        return []

@@ -1,0 +1,6 @@
+from repro.data.video import (  # noqa: F401
+    OracleEmbedder,
+    Query,
+    VideoWorld,
+    WorldConfig,
+)

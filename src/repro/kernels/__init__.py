@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the paper's compute hot spots:
+#   scene_score       - Eq. 1 fused HSLE frame-difference (ingestion)
+#   similarity        - Eq. 4/5 fused cosine + temperature softmax (query)
+#   decode_attention  - flash-decode GQA/MLA (cloud VLM serving)
+# Each has a pure-jnp oracle in ref.py and a dispatch wrapper in ops.py.

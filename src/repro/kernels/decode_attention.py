@@ -1,0 +1,192 @@
+"""Flash-decode Pallas kernels: one query token vs a long KV cache.
+
+TPU-native tiling: the KV cache is streamed HBM→VMEM in ``(BLK_S, Hkv, D)``
+blocks along the sequence; online-softmax accumulators (running max,
+normaliser, weighted value sum) live in VMEM scratch across grid steps.
+GQA query groups are packed as an (Hkv·G, D) matrix so the score matmul
+hits the MXU. Two variants:
+
+* ``gqa_decode``: scores q·kᵀ over head_dim; accumulates over v.
+* ``mla_decode``: latent (matrix-absorbed) form — scores
+  q_abs·ckvᵀ + q_rope·kropeᵀ, accumulates over ckv itself, so per-token
+  cache traffic is kv_lora + rope bytes (576 B/token for DeepSeek-V2).
+
+Grid: ``(B, S/BLK_S)`` with the sequence axis sequential ("arbitrary")
+so scratch carries across blocks; batch is parallel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLK_S = 512
+
+
+def _gqa_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
+                m_ref, l_ref, acc_ref, *, scale, softcap, q_per_kv,
+                blocks):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (H, D)
+    k = k_ref[0].astype(jnp.float32)             # (BLK, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)             # (BLK, Hkv, Dv)
+    valid = valid_ref[0]                         # (BLK,)
+
+    h, d = q.shape
+    hkv = k.shape[1]
+    qg = q.reshape(hkv, q_per_kv, d)
+    # scores: (Hkv, G, BLK)
+    s = jax.lax.dot_general(
+        qg, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32) * scale
+    if softcap and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    s = s.reshape(h, -1)                         # (H, BLK)
+
+    m_prev = m_ref[...]                          # (H, 1)
+    m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=-1))[:, None]
+    corr = jnp.exp(m_prev - m_new)               # (H, 1)
+    p = jnp.exp(s - m_new)                       # (H, BLK)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+    # ctx: (Hkv, G, Dv) from p (Hkv, G, BLK) x v (BLK, Hkv, Dv)
+    pg = p.reshape(hkv, q_per_kv, -1)
+    ctx = jax.lax.dot_general(
+        pg, v, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)      # (Hkv, G, Dv)
+    acc_ref[...] = acc_ref[...] * corr + ctx.reshape(h, -1)
+    m_ref[...] = m_new
+
+    @pl.when(i == blocks - 1)
+    def _final():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "q_per_kv",
+                                             "blk_s", "interpret"))
+def gqa_decode(q, k, v, valid, *, scale: float, softcap: float = 0.0,
+               q_per_kv: int = 1, blk_s: int = DEFAULT_BLK_S,
+               interpret: bool = True):
+    """q: (B,1,H,D); k/v: (B,C,Hkv,D[v]); valid: (B,C) bool -> (B,1,H,Dv)."""
+    b, _, h, d = q.shape
+    c = k.shape[1]
+    dv = v.shape[-1]
+    hkv = k.shape[2]
+    blk = min(blk_s, c)
+    assert c % blk == 0, (c, blk)
+    blocks = c // blk
+
+    kernel = functools.partial(_gqa_kernel, scale=scale, softcap=softcap,
+                               q_per_kv=q_per_kv, blocks=blocks)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, h, d), lambda bi, i: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, blk, hkv, d), lambda bi, i: (bi, i, 0, 0)),
+            pl.BlockSpec((1, blk, hkv, dv), lambda bi, i: (bi, i, 0, 0)),
+            pl.BlockSpec((1, blk), lambda bi, i: (bi, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, h, dv), lambda bi, i: (bi, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1, h, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, dv), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, valid)
+
+
+# ---------------------------------------------------------------------------
+# MLA latent decode
+# ---------------------------------------------------------------------------
+
+
+def _mla_kernel(qa_ref, qr_ref, ckv_ref, kr_ref, valid_ref, o_ref,
+                m_ref, l_ref, acc_ref, *, scale, blocks):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qa = qa_ref[0, 0].astype(jnp.float32)        # (H, R)
+    qr = qr_ref[0, 0].astype(jnp.float32)        # (H, Dr)
+    ckv = ckv_ref[0].astype(jnp.float32)         # (BLK, R)
+    kr = kr_ref[0].astype(jnp.float32)           # (BLK, Dr)
+    valid = valid_ref[0]                         # (BLK,)
+
+    s = (jax.lax.dot_general(qa, ckv, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+         + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)) * scale
+    s = jnp.where(valid[None, :], s, NEG_INF)    # (H, BLK)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=-1))[:, None]
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+    ctx = jax.lax.dot_general(p, ckv, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (H, R)
+    acc_ref[...] = acc_ref[...] * corr + ctx
+    m_ref[...] = m_new
+
+    @pl.when(i == blocks - 1)
+    def _final():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "blk_s", "interpret"))
+def mla_decode(q_abs, q_rope, ckv, krope, valid, *, scale: float,
+               blk_s: int = DEFAULT_BLK_S, interpret: bool = True):
+    """q_abs: (B,1,H,R); q_rope: (B,1,H,Dr); ckv: (B,C,R); krope: (B,C,Dr);
+    valid: (B,C) -> latent ctx (B,1,H,R)."""
+    b, _, h, r = q_abs.shape
+    c = ckv.shape[1]
+    dr = q_rope.shape[-1]
+    blk = min(blk_s, c)
+    assert c % blk == 0, (c, blk)
+    blocks = c // blk
+
+    kernel = functools.partial(_mla_kernel, scale=scale, blocks=blocks)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, h, r), lambda bi, i: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, 1, h, dr), lambda bi, i: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, blk, r), lambda bi, i: (bi, i, 0)),
+            pl.BlockSpec((1, blk, dr), lambda bi, i: (bi, i, 0)),
+            pl.BlockSpec((1, blk), lambda bi, i: (bi, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, h, r), lambda bi, i: (bi, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1, h, r), q_abs.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, r), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(q_abs, q_rope, ckv, krope, valid)

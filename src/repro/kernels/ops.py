@@ -1,0 +1,100 @@
+"""Kernel dispatch layer.
+
+Every hot-spot op has two implementations: the Pallas TPU kernel and the
+pure-jnp oracle (``ref.py``). The backend is selected by
+``REPRO_KERNEL_BACKEND`` (default ``jnp`` — XLA fuses the references well
+on CPU, and the dry-run lowers the jnp path so cost_analysis reflects
+plain HLO). ``pallas`` switches to the kernels; on CPU they execute in
+interpret mode, on TPU they compile natively.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "jnp")
+
+
+def backend() -> str:
+    return _BACKEND
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("jnp", "pallas"), name
+    _BACKEND = name
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q, k, v, valid, *, scale: float, softcap: float = 0.0,
+                     q_per_kv: int = 1) -> jnp.ndarray:
+    """q: (B,1,H,D); k/v: (B,C,Hkv,D); valid: (B or 1, C) -> (B,1,H,D)."""
+    if _BACKEND == "pallas":
+        from repro.kernels import decode_attention as dk
+        b, c = q.shape[0], k.shape[1]
+        vmask = jnp.broadcast_to(valid, (b, c))
+        blk = c if c <= dk.DEFAULT_BLK_S else _largest_divisor_blk(
+            c, dk.DEFAULT_BLK_S)
+        return dk.gqa_decode(q, k, v, vmask, scale=scale, softcap=softcap,
+                             q_per_kv=q_per_kv, blk_s=blk,
+                             interpret=_interpret())
+    return ref.decode_attention_ref(q, k, v, valid, scale=scale,
+                                    softcap=softcap, q_per_kv=q_per_kv)
+
+
+def mla_decode_attention(q_abs, q_rope, ckv, krope, valid, *,
+                         scale: float) -> jnp.ndarray:
+    if _BACKEND == "pallas":
+        from repro.kernels import decode_attention as dk
+        b, c = q_abs.shape[0], ckv.shape[1]
+        vmask = jnp.broadcast_to(valid, (b, c))
+        blk = c if c <= dk.DEFAULT_BLK_S else _largest_divisor_blk(
+            c, dk.DEFAULT_BLK_S)
+        return dk.mla_decode(q_abs, q_rope, ckv, krope, vmask, scale=scale,
+                             blk_s=blk, interpret=_interpret())
+    return ref.mla_decode_attention_ref(q_abs, q_rope, ckv, krope, valid,
+                                        scale=scale)
+
+
+def similarity(query, index, *, tau: float, valid
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """query (Q,d) × index (N,d) -> (sims (Q,N), probs (Q,N))."""
+    if _BACKEND == "pallas":
+        from repro.kernels import similarity as sk
+        n = index.shape[0]
+        blk = n if n <= sk.DEFAULT_BLK_N else _largest_divisor_blk(
+            n, sk.DEFAULT_BLK_N)
+        sims, m, l = sk.similarity_scan(query, index, valid, tau=tau,
+                                        blk_n=blk, interpret=_interpret())
+        logits = jnp.where(valid[None, :], sims / tau, ref.NEG_INF)
+        probs = jnp.exp(logits - m) / jnp.maximum(l, 1e-30)
+        return sims.astype(query.dtype), probs
+    return ref.similarity_ref(query, index, tau=tau, valid=valid)
+
+
+def scene_score(frames, weights) -> jnp.ndarray:
+    """frames (T,H,W,3) in [0,1] -> φ (T,)."""
+    if _BACKEND == "pallas":
+        from repro.kernels import scene_score as sk
+        return sk.scene_score(frames, tuple(weights),
+                              interpret=_interpret())
+    return ref.scene_score_ref(frames, tuple(weights))
+
+
+def _largest_divisor_blk(n: int, target: int) -> int:
+    for b in range(target, 0, -1):
+        if n % b == 0:
+            return b
+    return n

@@ -1,0 +1,127 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness references: each kernel's test sweeps shapes and
+dtypes and asserts allclose against the function here. They are also the
+default execution backend on CPU (``REPRO_KERNEL_BACKEND=jnp``), so the
+whole system runs without Pallas in the loop.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+# ---------------------------------------------------------------------------
+# decode attention (GQA)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         valid: jnp.ndarray, *, scale: float,
+                         softcap: float = 0.0,
+                         q_per_kv: int = 1) -> jnp.ndarray:
+    """q: (B,1,H,D); k/v: (B,C,Hkv,D); valid: (B or 1, C) -> (B,1,H,D)."""
+    b, _, h, d = q.shape
+    hkv = k.shape[2]
+    qg = q.reshape(b, 1, hkv, q_per_kv, d).astype(jnp.float32)
+    logits = jnp.einsum("bqkgd,bskd->bkgs", qg,
+                        k.astype(jnp.float32)) * scale
+    if softcap and softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    mask = jnp.broadcast_to(valid, (b, valid.shape[-1]))
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
+    return ctx.reshape(b, 1, h, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (MLA, matrix-absorbed latent form)
+# ---------------------------------------------------------------------------
+
+
+def mla_decode_attention_ref(q_abs: jnp.ndarray, q_rope: jnp.ndarray,
+                             ckv: jnp.ndarray, krope: jnp.ndarray,
+                             valid: jnp.ndarray, *, scale: float
+                             ) -> jnp.ndarray:
+    """q_abs: (B,1,H,R); q_rope: (B,1,H,Dr); ckv: (B,C,R);
+    krope: (B,C,Dr); valid: (B or 1, C) -> latent context (B,1,H,R)."""
+    b, _, h, r = q_abs.shape
+    f32 = jnp.float32
+    logits = (jnp.einsum("bqhr,bsr->bhs", q_abs.astype(f32),
+                         ckv.astype(f32))
+              + jnp.einsum("bqhd,bsd->bhs", q_rope.astype(f32),
+                           krope.astype(f32))) * scale
+    mask = jnp.broadcast_to(valid, (b, valid.shape[-1]))
+    logits = jnp.where(mask[:, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", probs, ckv.astype(f32))
+    return ctx[:, None].astype(q_abs.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused cosine-similarity + temperature softmax over the memory index
+# ---------------------------------------------------------------------------
+
+
+def similarity_ref(query: jnp.ndarray, index: jnp.ndarray, *, tau: float,
+                   valid: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """query: (Q,d); index: (N,d); valid: (N,) bool.
+
+    Returns (sims (Q,N) cosine, probs (Q,N) temperature softmax over valid
+    entries) — Eq. 4 + Eq. 5 of the paper in one op.
+    """
+    f32 = jnp.float32
+    q = query.astype(f32)
+    x = index.astype(f32)
+    qn = q * jax.lax.rsqrt(jnp.sum(q * q, -1, keepdims=True) + 1e-12)
+    xn = x * jax.lax.rsqrt(jnp.sum(x * x, -1, keepdims=True) + 1e-12)
+    sims = qn @ xn.T                                        # (Q,N)
+    logits = jnp.where(valid[None, :], sims / tau, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return sims.astype(query.dtype), probs.astype(f32)
+
+
+# ---------------------------------------------------------------------------
+# scene score (Eq. 1): fused HSL+edge frame-difference metric
+# ---------------------------------------------------------------------------
+
+
+def _hsle(frame: jnp.ndarray) -> jnp.ndarray:
+    """frame: (H,W,3) float in [0,1] -> (H,W,4) hue/sat/light/edge maps."""
+    f32 = jnp.float32
+    rgb = frame.astype(f32)
+    r, g, b = rgb[..., 0], rgb[..., 1], rgb[..., 2]
+    mx = jnp.maximum(jnp.maximum(r, g), b)
+    mn = jnp.minimum(jnp.minimum(r, g), b)
+    c = mx - mn
+    light = 0.5 * (mx + mn)
+    sat = c / (1.0 - jnp.abs(2.0 * light - 1.0) + 1e-6)
+    safe_c = jnp.where(c > 0, c, 1.0)
+    hue = jnp.where(
+        mx == r, jnp.mod((g - b) / safe_c, 6.0),
+        jnp.where(mx == g, (b - r) / safe_c + 2.0,
+                  (r - g) / safe_c + 4.0)) / 6.0
+    hue = jnp.where(c > 0, hue, 0.0)
+    # edge map: L1 gradient magnitude of lightness (zero-padded)
+    dx = jnp.abs(jnp.diff(light, axis=1, prepend=light[:, :1]))
+    dy = jnp.abs(jnp.diff(light, axis=0, prepend=light[:1, :]))
+    edge = dx + dy
+    return jnp.stack([hue, sat, light, edge], axis=-1)
+
+
+def scene_score_ref(frames: jnp.ndarray,
+                    weights: Tuple[float, float, float, float]
+                    ) -> jnp.ndarray:
+    """frames: (T,H,W,3) in [0,1] -> phi (T,) per Eq. 1; phi[0] = 0."""
+    w = jnp.asarray(weights, jnp.float32)
+    feats = jax.vmap(_hsle)(frames)                       # (T,H,W,4)
+    diffs = jnp.abs(feats[1:] - feats[:-1])               # (T-1,H,W,4)
+    num = jnp.einsum("thwc,c->t", diffs, w)
+    hw = frames.shape[1] * frames.shape[2]
+    phi = num / (jnp.sum(w) * hw)
+    return jnp.concatenate([jnp.zeros((1,), jnp.float32), phi])

@@ -1,0 +1,105 @@
+"""Fused cosine-similarity scan over the Venus memory index (Eq. 4–5).
+
+The memory index is an (N, d) matrix of MEM embeddings; each query scans
+all of it (exact search — see DESIGN.md on why brute-force MXU matmul
+replaces FAISS ANN on TPU). The kernel streams the index HBM→VMEM in
+(BLK_N, d) blocks, L2-normalises rows in-register, computes the (Q, BLK_N)
+cosine block on the MXU, and maintains online max / sum-exp accumulators
+so the temperature-softmax denominator (Eq. 5) comes out of the same pass.
+The wrapper finishes probs = exp(s/τ − m)/l — an O(N) vector epilogue XLA
+fuses with the consumer.
+
+Grid: ``(N/BLK_N,)`` sequential, queries resident in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLK_N = 1024
+
+
+def _sim_kernel(q_ref, x_ref, valid_ref, sims_ref, m_ref, l_ref,
+                m_acc, l_acc, *, tau, blocks):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+        l_acc[...] = jnp.zeros_like(l_acc)
+
+    q = q_ref[...].astype(jnp.float32)            # (Q, d) pre-normalised
+    x = x_ref[...].astype(jnp.float32)            # (BLK, d)
+    valid = valid_ref[0]                          # (BLK,)
+
+    xn = x * jax.lax.rsqrt(jnp.sum(x * x, -1, keepdims=True) + 1e-12)
+    s = jax.lax.dot_general(q, xn, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, BLK)
+    sims_ref[...] = s.astype(sims_ref.dtype)
+
+    logit = jnp.where(valid[None, :], s / tau, NEG_INF)
+    m_prev = m_acc[...]                           # (Q, 1)
+    m_new = jnp.maximum(m_prev[:, 0], jnp.max(logit, -1))[:, None]
+    corr = jnp.exp(m_prev - m_new)
+    l_acc[...] = l_acc[...] * corr + jnp.sum(
+        jnp.exp(logit - m_new), -1, keepdims=True)
+    m_acc[...] = m_new
+
+    @pl.when(i == blocks - 1)
+    def _final():
+        m_ref[...] = m_acc[...]
+        l_ref[...] = l_acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "blk_n", "interpret"))
+def similarity_scan(query, index, valid, *, tau: float,
+                    blk_n: int = DEFAULT_BLK_N, interpret: bool = True):
+    """query: (Q,d); index: (N,d); valid: (N,) bool.
+
+    Returns (sims (Q,N), m (Q,1), l (Q,1)) — cosine scores plus the online
+    softmax statistics. probs = exp(sims/τ − m) / l on valid entries.
+    """
+    qn, d = query.shape
+    n = index.shape[0]
+    blk = min(blk_n, n)
+    assert n % blk == 0, (n, blk)
+    blocks = n // blk
+
+    q32 = query.astype(jnp.float32)
+    qnorm = q32 * jax.lax.rsqrt(
+        jnp.sum(q32 * q32, -1, keepdims=True) + 1e-12)
+
+    kernel = functools.partial(_sim_kernel, tau=tau, blocks=blocks)
+    sims, m, l = pl.pallas_call(
+        kernel,
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((qn, d), lambda i: (0, 0)),
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, blk), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((qn, blk), lambda i: (0, i)),
+            pl.BlockSpec((qn, 1), lambda i: (0, 0)),
+            pl.BlockSpec((qn, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, n), jnp.float32),
+            jax.ShapeDtypeStruct((qn, 1), jnp.float32),
+            jax.ShapeDtypeStruct((qn, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((qn, 1), jnp.float32),
+            pltpu.VMEM((qn, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(qnorm, index, valid[None, :])
+    return sims, m, l

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Target: TPU v5e, 256 chips/pod. Single-pod mesh is (data=16, model=16);
+multi-pod adds a leading "pod" axis: (pod=2, data=16, model=16) = 512
+chips. A *function* (not a module constant) so importing this module
+never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first init.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh on whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    names = mesh.axis_names
+    return tuple(a for a in names if a in ("pod", "data"))
+
+
+HARDWARE = {
+    "name": "TPU v5e",
+    "peak_bf16_flops": 197e12,        # per chip
+    "hbm_bw": 819e9,                  # bytes/s per chip
+    "ici_bw": 50e9,                   # bytes/s per link (~3 links usable)
+    "hbm_bytes": 16e9,
+    "chips_per_pod": 256,
+}

@@ -1,0 +1,81 @@
+"""ShapeDtypeStruct stand-ins for every (architecture × input shape).
+
+``input_specs(cfg, shape)`` returns the exact abstract inputs the step
+function lowers against — weak-type-correct, shardable, zero allocation.
+
+Shape semantics (assignment):
+* train_4k / prefill_32k — ``seq_len`` is the TOTAL sequence; for the VLM
+  the stubbed vision embeddings take ``vision_tokens`` of it and tokens
+  cover the rest; whisper adds the fixed 1500-frame encoder input.
+* decode shapes — one new token against a ``seq_len`` KV cache.
+* long_500k — sub-quadratic context required: native for SSM/hybrid;
+  full-attention archs get the sliding-window variant (window 8192),
+  EXCEPT MLA archs whose compact latent cache (576 B/token) holds the
+  full 524k context sharded over the mesh — the stronger, paper-relevant
+  configuration (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec, get_shape
+from repro.models.transformer import Transformer
+
+SDS = jax.ShapeDtypeStruct
+LONG_CONTEXT_WINDOW = 8192
+
+
+def adapt_config(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    """Per-shape config adaptation (long-context attention policy)."""
+    if shape.name == "long_500k":
+        if cfg.attn_type == "gqa" and cfg.sliding_window == 0 \
+                and cfg.family not in ("ssm",):
+            cfg = cfg.replace(sliding_window=LONG_CONTEXT_WINDOW)
+        # MLA archs keep the full latent cache (no window): 576 B/token
+        # × 524k fits sharded. SSM archs are natively O(1).
+    if cfg.max_seq_len < shape.seq_len:
+        cfg = cfg.replace(max_seq_len=shape.seq_len)
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract inputs for the step function of this shape's kind."""
+    b, s = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+
+    if shape.kind == "train":
+        s_text = s - (cfg.vision_tokens if cfg.family == "vlm" else 0)
+        batch = {"tokens": SDS((b, s_text), i32),
+                 "labels": SDS((b, s_text), i32)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = SDS((b, cfg.vision_tokens,
+                                          cfg.d_model), bf16)
+        if cfg.family == "audio":
+            batch["encoder_frames"] = SDS((b, cfg.encoder_seq_len,
+                                           cfg.d_model), bf16)
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        s_text = s - (cfg.vision_tokens if cfg.family == "vlm" else 0)
+        out = {"tokens": SDS((b, s_text), i32)}
+        if cfg.family == "vlm":
+            out["vision_embeds"] = SDS((b, cfg.vision_tokens,
+                                        cfg.d_model), bf16)
+        if cfg.family == "audio":
+            out["encoder_frames"] = SDS((b, cfg.encoder_seq_len,
+                                         cfg.d_model), bf16)
+        return out
+
+    assert shape.kind == "decode"
+    model = Transformer(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(b, s, jnp.bfloat16))
+    return {"tokens": SDS((b, 1), i32), "cache": cache}
+
+
+def params_shape(cfg: ModelConfig) -> Any:
+    model = Transformer(cfg)
+    return jax.eval_shape(model.init, jax.random.key(0))

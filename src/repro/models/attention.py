@@ -1,0 +1,448 @@
+"""Attention blocks: GQA (with sliding-window ring cache) and MLA.
+
+Single-layer functional modules; the model builder stacks them over layers
+with ``lax.scan``. Cache conventions:
+
+* GQA cache: ``{"k": (B, C, Hkv, Dk), "v": (B, C, Hkv, Dv)}`` where
+  ``C = min(max_len, window or max_len)``. Sliding-window caches are ring
+  buffers indexed by ``pos % C`` — keys are stored post-RoPE, so slot
+  order is irrelevant to the (order-invariant) softmax sum.
+* MLA cache: ``{"ckv": (B, C, kv_lora), "krope": (B, C, rope_dim)}`` —
+  the compact latent cache (576 B/token for DeepSeek-V2); decode uses the
+  matrix-absorbed form so heads are never materialised per cache token.
+
+``mode``: "train" (no cache), "prefill" (fills cache[0:S]), "decode"
+(S == 1, attends to the cache at position ``cache_pos``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (apply_mrope, apply_rope, dense_init,
+                                 rms_norm)
+
+NEG_INF = -1e30
+
+
+def _softcap(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap and cap > 0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def causal_window_mask(s_q: int, s_k: int, window: int,
+                       offset: int = 0) -> jnp.ndarray:
+    """(s_q, s_k) bool mask; query i attends key j iff
+    j <= i+offset and (window == 0 or i+offset - j < window)."""
+    qi = jnp.arange(s_q)[:, None] + offset
+    kj = jnp.arange(s_k)[None, :]
+    m = kj <= qi
+    if window:
+        m &= (qi - kj) < window
+    return m
+
+
+# ===========================================================================
+# GQA
+# ===========================================================================
+
+
+def gqa_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, dtype=dtype),
+        "wk": dense_init(ks[1], d, hkv * hd, dtype=dtype),
+        "wv": dense_init(ks[2], d, hkv * hd, dtype=dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.ones((hd,), dtype=dtype)
+        p["k_scale"] = jnp.ones((hd,), dtype=dtype)
+    return p
+
+
+def gqa_cache_init(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> dict:
+    c = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, c, hkv, hd), dtype),
+            "v": jnp.zeros((batch, c, hkv, hd), dtype)}
+
+
+def _position_embed(cfg: ModelConfig, q, k, positions, mrope_positions):
+    if cfg.pos_type == "rope":
+        q = apply_rope(q, positions, theta=cfg.rope_theta,
+                       fraction=cfg.rope_fraction)
+        k = apply_rope(k, positions, theta=cfg.rope_theta,
+                       fraction=cfg.rope_fraction)
+    elif cfg.pos_type == "mrope":
+        assert mrope_positions is not None, "mrope needs (3,B,S) positions"
+        q = apply_mrope(q, mrope_positions, theta=cfg.rope_theta,
+                        sections=cfg.mrope_sections)
+        k = apply_mrope(k, mrope_positions, theta=cfg.rope_theta,
+                        sections=cfg.mrope_sections)
+    # "learned" / "none": positions handled at the embedding layer.
+    return q, k
+
+
+def _sdpa(q, k, v, mask, scale, softcap, q_per_kv):
+    """q: (B,Sq,H,D), k/v: (B,Sk,Hkv,D'), mask: (Sq,Sk) or (B,Sq,Sk).
+
+    §Perf iteration G: operands stay in the model dtype with f32 MXU
+    accumulation (preferred_element_type) instead of materialising f32
+    copies of q/k/v — halves attention HBM/ICI traffic in bf16 models
+    (the probs are requantised to the model dtype for the value matmul,
+    standard flash-attention practice)."""
+    b, sq, h, dq = q.shape
+    hkv = k.shape[2]
+    qg = q.reshape(b, sq, hkv, q_per_kv, dq)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = _softcap(logits, softcap)
+    if mask.ndim == 2:
+        mask = mask[None]
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return ctx.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+# §Perf iteration C (beyond-paper): sequence-parallel attention.
+# When num_heads is not divisible by the model-axis size (qwen2-vl: 28,
+# minicpm3: 40 on a 16-way axis), GSPMD splits the flattened (H·hd) dim
+# *through* head boundaries and turns the score einsum into a partial-sum
+# contraction — observed as a 60 GB f32[S,S,heads] all-reduce per layer at
+# prefill_32k. Constraining q to be sharded over the *sequence* on the
+# model axis (and k/v gathered) makes attention shard-local: the gather is
+# S·Hkv·hd bytes (~34 MB/layer) instead. The launcher enables this per
+# arch via set_seq_parallel_attn(); off by default (no mesh in tests).
+_SEQ_PARALLEL_SPEC = None     # (data_axes, model_axis) or None
+
+
+def set_seq_parallel_attn(spec):
+    """spec: None to disable, or (data_axes tuple, model_axis name)."""
+    global _SEQ_PARALLEL_SPEC
+    _SEQ_PARALLEL_SPEC = spec
+
+
+def _seq_shard(q, k, v):
+    if _SEQ_PARALLEL_SPEC is None:
+        return q, k, v
+    from jax.sharding import PartitionSpec as P
+    daxes, model = _SEQ_PARALLEL_SPEC
+    csp = jax.lax.with_sharding_constraint
+    q = csp(q, P(daxes, model, None, None))
+    k = csp(k, P(daxes, None, None, None))
+    v = csp(v, P(daxes, None, None, None))
+    return q, k, v
+
+
+# §Perf iteration A (beyond-paper): query-chunked causal attention.
+# The naive _sdpa materialises the full (Sq, Sk) logits — half of which
+# the causal mask throws away — so long-sequence train/prefill is both
+# compute-inflated (2×) and memory-inflated (S²·4B live logits). Chunking
+# queries into Q_BLK blocks with *static* per-chunk key bounds skips the
+# fully-masked key range entirely and bounds live logits at Q_BLK·Sk.
+SDPA_Q_CHUNK = 512
+CHUNKED_SDPA = True          # flip off to reproduce the naive baseline
+
+
+def _sdpa_causal_chunked(q, k, v, scale, softcap, q_per_kv, window,
+                         kv_lengths):
+    """Causal SDPA over query chunks; exact same math as _sdpa with a
+    causal(+window)(+kv_lengths) mask."""
+    b, sq, h, dq = q.shape
+    sk = k.shape[1]
+    cq = SDPA_Q_CHUNK
+    if sq <= cq or sq % cq != 0 or sq != sk:
+        mask = causal_window_mask(sq, sk, window)
+        if kv_lengths is not None:
+            mask = mask[None] & (jnp.arange(sk)[None, None, :]
+                                 < kv_lengths[:, None, None])
+        return _sdpa(q, k, v, mask, scale, softcap, q_per_kv)
+
+    outs = []
+    for i in range(sq // cq):
+        q_lo = i * cq
+        # earliest key any query in this chunk can see (chunk-aligned)
+        k_lo = 0
+        if window:
+            k_lo = max(0, ((q_lo - window + 1) // cq) * cq)
+        k_hi = q_lo + cq                            # causal bound, static
+        qc = q[:, q_lo:q_lo + cq]
+        kc = k[:, k_lo:k_hi]
+        vc = v[:, k_lo:k_hi]
+        mask = causal_window_mask(cq, k_hi - k_lo, window,
+                                  offset=q_lo - k_lo)
+        if kv_lengths is not None:
+            kpos = jnp.arange(k_lo, k_hi)
+            mask = mask[None] & (kpos[None, None, :]
+                                 < kv_lengths[:, None, None])
+        outs.append(_sdpa(qc, kc, vc, mask, scale, softcap, q_per_kv))
+    return jnp.concatenate(outs, axis=1)
+
+
+def gqa_attention(
+    p: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    *,
+    positions: jnp.ndarray,
+    mrope_positions: Optional[jnp.ndarray] = None,
+    cache: Optional[dict] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+    mode: str = "train",
+    kv_lengths: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b, s, d = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = x.dtype
+
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, h, hd)
+    k = (x @ p["wk"].astype(dt)).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_scale"], cfg.norm_eps)
+        k = rms_norm(k, p["k_scale"], cfg.norm_eps)
+    q, k = _position_embed(cfg, q, k, positions, mrope_positions)
+    scale = 1.0 / (hd ** 0.5)
+
+    if mode in ("train", "prefill"):
+        q, k, v = _seq_shard(q, k, v)
+        if CHUNKED_SDPA:
+            ctx = _sdpa_causal_chunked(q, k, v, scale,
+                                       cfg.attn_logit_softcap,
+                                       cfg.q_per_kv, cfg.sliding_window,
+                                       kv_lengths)
+        else:
+            mask = causal_window_mask(s, s, cfg.sliding_window)
+            if kv_lengths is not None:   # right-padded prompts: mask pads
+                mask = mask[None] & (jnp.arange(s)[None, None, :]
+                                     < kv_lengths[:, None, None])
+            ctx = _sdpa(q, k, v, mask, scale, cfg.attn_logit_softcap,
+                        cfg.q_per_kv)
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            c = cache["k"].shape[1]
+            if c >= s:
+                new_cache = {
+                    "k": jax.lax.dynamic_update_slice(
+                        cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+                    "v": jax.lax.dynamic_update_slice(
+                        cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+                }
+            else:
+                # sliding-window cache shorter than the prompt: keep the
+                # ring-consistent tail (token t lives at slot t % c).
+                tail_k, tail_v = k[:, s - c:], v[:, s - c:]
+                shift = s % c
+                new_cache = {
+                    "k": jnp.roll(tail_k, shift, axis=1).astype(
+                        cache["k"].dtype),
+                    "v": jnp.roll(tail_v, shift, axis=1).astype(
+                        cache["v"].dtype),
+                }
+        return ctx.reshape(b, s, h * hd) @ p["wo"].astype(dt), new_cache
+
+    # ---- decode: s == 1 ---------------------------------------------------
+    # cache_pos: (B,) per-slot token counts (continuous batching).
+    assert cache is not None and cache_pos is not None
+    c = cache["k"].shape[1]
+    slot = (cache_pos % c).astype(jnp.int32)                 # (B,)
+    upd = jax.vmap(
+        lambda buf, new, s: jax.lax.dynamic_update_slice(
+            buf, new, (s, 0, 0)))
+    k_cache = upd(cache["k"], k.astype(cache["k"].dtype), slot)
+    v_cache = upd(cache["v"], v.astype(cache["v"].dtype), slot)
+    # valid slots: all written slots; ring buffer is full once pos+1 >= c.
+    n_written = jnp.minimum(cache_pos + 1, c)                # (B,)
+    valid = jnp.arange(c)[None, :] < n_written[:, None]      # (B, C)
+
+    from repro.kernels import ops as kops
+    ctx = kops.decode_attention(
+        q, k_cache.astype(dt), v_cache.astype(dt), valid,
+        scale=scale, softcap=cfg.attn_logit_softcap, q_per_kv=cfg.q_per_kv)
+    out = ctx.reshape(b, 1, h * hd) @ p["wo"].astype(dt)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# ===========================================================================
+# Cross attention (whisper decoder)
+# ===========================================================================
+
+
+def cross_attn_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * hd, dtype=dtype),
+        "wk": dense_init(ks[1], d, h * hd, dtype=dtype),
+        "wv": dense_init(ks[2], d, h * hd, dtype=dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype=dtype),
+    }
+
+
+def cross_attention(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                    enc: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, Sq, d) decoder states; enc: (B, Sk, d) encoder output."""
+    b, sq, d = x.shape
+    sk = enc.shape[1]
+    h, hd = cfg.num_heads, cfg.head_dim
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(b, sq, h, hd)
+    k = (enc @ p["wk"].astype(dt)).reshape(b, sk, h, hd)
+    v = (enc @ p["wv"].astype(dt)).reshape(b, sk, h, hd)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    ctx = _sdpa(q, k, v, mask, 1.0 / (hd ** 0.5), 0.0, 1)
+    return ctx.reshape(b, sq, h * hd) @ p["wo"].astype(dt)
+
+
+# ===========================================================================
+# MLA (Multi-head Latent Attention)
+# ===========================================================================
+
+
+def mla_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 8)
+    p = {}
+    if m.q_lora_rank:
+        p["w_dq"] = dense_init(ks[0], d, m.q_lora_rank, dtype=dtype)
+        p["q_norm"] = jnp.ones((m.q_lora_rank,), dtype=dtype)
+        p["w_uq"] = dense_init(ks[1], m.q_lora_rank, h * m.qk_head_dim,
+                               dtype=dtype)
+    else:
+        p["w_q"] = dense_init(ks[1], d, h * m.qk_head_dim, dtype=dtype)
+    p["w_dkv"] = dense_init(ks[2], d, m.kv_lora_rank, dtype=dtype)
+    p["kv_norm"] = jnp.ones((m.kv_lora_rank,), dtype=dtype)
+    p["w_kr"] = dense_init(ks[3], d, m.qk_rope_head_dim, dtype=dtype)
+    p["w_uk"] = dense_init(ks[4], m.kv_lora_rank, h * m.qk_nope_head_dim,
+                           dtype=dtype)
+    p["w_uv"] = dense_init(ks[5], m.kv_lora_rank, h * m.v_head_dim,
+                           dtype=dtype)
+    p["wo"] = dense_init(ks[6], h * m.v_head_dim, d, dtype=dtype)
+    return p
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> dict:
+    m = cfg.mla
+    c = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    return {"ckv": jnp.zeros((batch, c, m.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, c, m.qk_rope_head_dim), dtype)}
+
+
+def _mla_qkv(p, cfg, x, positions):
+    """Shared projection path; returns q_nope, q_rope, ckv, k_rope."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dt = x.dtype
+    if m.q_lora_rank:
+        cq = rms_norm(x @ p["w_dq"].astype(dt), p["q_norm"], cfg.norm_eps)
+        q = (cq @ p["w_uq"].astype(dt)).reshape(b, s, h, m.qk_head_dim)
+    else:
+        q = (x @ p["w_q"].astype(dt)).reshape(b, s, h, m.qk_head_dim)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions,
+                        theta=cfg.rope_theta)
+    ckv = rms_norm(x @ p["w_dkv"].astype(dt), p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope((x @ p["w_kr"].astype(dt))[:, :, None, :],
+                        positions, theta=cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_attention(
+    p: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    *,
+    positions: jnp.ndarray,
+    cache: Optional[dict] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+    mode: str = "train",
+    kv_lengths: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dt = x.dtype
+    scale = 1.0 / (m.qk_head_dim ** 0.5)
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, cfg, x, positions)
+
+    if mode in ("train", "prefill"):
+        # naive (expanded-head) form — optimal for seq-parallel prefill.
+        k_nope = (ckv @ p["w_uk"].astype(dt)).reshape(
+            b, s, h, m.qk_nope_head_dim)
+        v = (ckv @ p["w_uv"].astype(dt)).reshape(b, s, h, m.v_head_dim)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, s, h, m.qk_rope_head_dim))],
+            axis=-1)
+        q, k, v = _seq_shard(q, k, v)
+        if CHUNKED_SDPA:
+            ctx = _sdpa_causal_chunked(q, k, v, scale, 0.0, 1,
+                                       cfg.sliding_window, kv_lengths)
+        else:
+            mask = causal_window_mask(s, s, cfg.sliding_window)
+            if kv_lengths is not None:   # right-padded prompts: mask pads
+                mask = mask[None] & (jnp.arange(s)[None, None, :]
+                                     < kv_lengths[:, None, None])
+            ctx = _sdpa(q, k, v, mask, scale, 0.0, 1)
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            c = cache["ckv"].shape[1]
+            if c >= s:
+                new_cache = {
+                    "ckv": jax.lax.dynamic_update_slice(
+                        cache["ckv"], ckv.astype(cache["ckv"].dtype),
+                        (0, 0, 0)),
+                    "krope": jax.lax.dynamic_update_slice(
+                        cache["krope"], k_rope.astype(cache["krope"].dtype),
+                        (0, 0, 0)),
+                }
+            else:
+                shift = s % c
+                new_cache = {
+                    "ckv": jnp.roll(ckv[:, s - c:], shift, axis=1).astype(
+                        cache["ckv"].dtype),
+                    "krope": jnp.roll(k_rope[:, s - c:], shift,
+                                      axis=1).astype(cache["krope"].dtype),
+                }
+        out = ctx.reshape(b, s, h * m.v_head_dim) @ p["wo"].astype(dt)
+        return out, new_cache
+
+    # ---- decode: matrix-absorbed latent attention --------------------------
+    # cache_pos: (B,) per-slot token counts (continuous batching).
+    assert cache is not None and cache_pos is not None
+    c = cache["ckv"].shape[1]
+    slot = (cache_pos % c).astype(jnp.int32)                 # (B,)
+    upd = jax.vmap(
+        lambda buf, new, s: jax.lax.dynamic_update_slice(buf, new, (s, 0)))
+    ckv_cache = upd(cache["ckv"], ckv.astype(cache["ckv"].dtype), slot)
+    kr_cache = upd(cache["krope"], k_rope.astype(cache["krope"].dtype),
+                   slot)
+    n_written = jnp.minimum(cache_pos + 1, c)                # (B,)
+    valid = jnp.arange(c)[None, :] < n_written[:, None]      # (B, C)
+
+    w_uk = p["w_uk"].astype(dt).reshape(m.kv_lora_rank, h,
+                                        m.qk_nope_head_dim)
+    # absorb W_uk into the query: (B,1,H,R)
+    q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)
+    from repro.kernels import ops as kops
+    ctx_lat = kops.mla_decode_attention(
+        q_abs, q_rope, ckv_cache.astype(dt), kr_cache.astype(dt), valid,
+        scale=scale)                                          # (B,1,H,R)
+    w_uv = p["w_uv"].astype(dt).reshape(m.kv_lora_rank, h, m.v_head_dim)
+    ctx = jnp.einsum("bshr,rhv->bshv", ctx_lat, w_uv)
+    out = ctx.reshape(b, 1, h * m.v_head_dim) @ p["wo"].astype(dt)
+    return out, {"ckv": ckv_cache, "krope": kr_cache}

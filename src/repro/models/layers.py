@@ -1,0 +1,150 @@
+"""Shared neural-net primitives (pure JAX, no framework).
+
+Parameters are plain pytrees (nested dicts of jnp arrays). Initialisers
+take an explicit PRNG key. All matmuls accumulate in float32 and cast back
+to the activation dtype.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, *, scale: Optional[float] = None,
+               dtype=jnp.float32) -> jnp.ndarray:
+    """(d_in, d_out) variance-scaling (fan-in) weight."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, *, gated: bool,
+             dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d_model, d_ff, dtype=dtype),
+         "w_down": dense_init(ks[1], d_ff, d_model, dtype=dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype=dtype)
+    return p
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, act_name: str) -> jnp.ndarray:
+    act = activation_fn(act_name)
+    up = x @ p["w_up"].astype(x.dtype)
+    if "w_gate" in p:
+        h = act(x @ p["w_gate"].astype(x.dtype)) * up
+    else:
+        h = act(up)
+    return h @ p["w_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (RoPE / partial RoPE / M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_cos_sin(positions: jnp.ndarray, rot_dim: int, theta: float
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (...,) -> cos/sin of shape (..., rot_dim // 2)."""
+    half = rot_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs (x1, x2) = (x[..., :half], x[..., half:])."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, *, theta: float,
+               fraction: float = 1.0) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S). Rotates the leading
+    ``fraction`` of D, passes the rest through (GLM-style partial RoPE)."""
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    cos, sin = rope_cos_sin(positions, rot, theta)   # (B, S, rot/2)
+    cos = cos[:, :, None, :].astype(x.dtype)
+    sin = sin[:, :, None, :].astype(x.dtype)
+    head, tail = x[..., :rot], x[..., rot:]
+    head = _rotate(head, cos, sin)
+    return jnp.concatenate([head, tail], axis=-1) if tail.size else head
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, *, theta: float,
+                sections: Tuple[int, int, int]) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, D); positions3: (3, B, S) temporal/height/width position
+    ids. ``sections`` partitions the D/2 frequency slots among (t, h, w);
+    each frequency slot uses the position id of its section.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # section id per frequency slot
+    sec = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                     total_repeat_length=half)                    # (half,)
+    pos = positions3.astype(jnp.float32)[sec]                      # (half,B,S)
+    ang = jnp.moveaxis(pos, 0, -1) * freqs                         # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    return _rotate(x, cos, sin)

@@ -1,0 +1,83 @@
+"""Venus MEM — dual-encoder multimodal embedding model (BGE-VL class).
+
+Text tower encodes token sequences; vision tower encodes precomputed
+patch embeddings (frontend stubbed per the assignment carve-out). Both
+are mean-pooled, projected into the shared space and L2-normalised, so
+cosine similarity between a text query and an indexed frame is Eq. 4 of
+the paper. Trained with the SigLIP pairwise sigmoid loss
+(``repro.training.losses.siglip_loss``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.venus_mem import MEMConfig
+from repro.models.layers import dense_init
+from repro.models.transformer import Transformer, _norm
+
+
+def _pool(h: jnp.ndarray, mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    if mask is None:
+        return jnp.mean(h, axis=1)
+    m = mask.astype(h.dtype)[..., None]
+    return jnp.sum(h * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+
+
+def _l2norm(x: jnp.ndarray) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    return (x32 * jax.lax.rsqrt(
+        jnp.sum(x32 * x32, -1, keepdims=True) + 1e-12)).astype(x.dtype)
+
+
+class MEM:
+    def __init__(self, cfg: MEMConfig):
+        self.cfg = cfg
+        self.text_tower = Transformer(cfg.text)
+        self.vision_tower = Transformer(cfg.vision)
+
+    def init(self, key) -> Dict:
+        ks = jax.random.split(key, 5)
+        d = self.cfg.embed_dim
+        return {
+            "text": self.text_tower.init(ks[0]),
+            "vision": self.vision_tower.init(ks[1]),
+            "text_proj": dense_init(ks[2], self.cfg.text.d_model, d),
+            "vision_proj": dense_init(ks[3], self.cfg.vision.d_model, d),
+            "logit_scale": jnp.asarray(2.0, jnp.float32),   # SigLIP t'
+            "logit_bias": jnp.asarray(-10.0, jnp.float32),
+        }
+
+    def _trunk(self, tower: Transformer, params, x, mask):
+        """Run the tower body without the LM head; x already embedded."""
+        cfg = tower.cfg
+        h, _, _ = self._hidden(tower, params, x)
+        h = _norm(cfg, params["final_norm"], h)
+        return _pool(h, mask)
+
+    @staticmethod
+    def _hidden(tower: Transformer, params, x):
+        cfg = tower.cfg
+        positions = jnp.broadcast_to(
+            jnp.arange(x.shape[1])[None], x.shape[:2])
+        return tower._apply_decoder(params, x, positions, None, None, None,
+                                    "train", False)
+
+    def encode_text(self, params, tokens, mask=None) -> jnp.ndarray:
+        tower = self.text_tower
+        x = params["text"]["embed"].astype(tower.adtype)[tokens]
+        pooled = self._trunk(tower, params["text"], x, mask)
+        return _l2norm(pooled @ params["text_proj"].astype(pooled.dtype))
+
+    def encode_image(self, params, patch_embeds) -> jnp.ndarray:
+        """patch_embeds: (B, P, d_vision) precomputed (frontend stub)."""
+        tower = self.vision_tower
+        x = patch_embeds.astype(tower.adtype)
+        if "pos_embed" in params["vision"]:
+            x = x + params["vision"]["pos_embed"].astype(
+                tower.adtype)[None, : x.shape[1]]
+        pooled = self._trunk(tower, params["vision"], x, None)
+        return _l2norm(pooled @ params["vision_proj"].astype(pooled.dtype))

@@ -1,0 +1,63 @@
+"""Parameter accounting (exact, via jax.eval_shape — no allocation).
+
+Used by the roofline analysis: MODEL_FLOPS = 6·N·D with N the
+non-embedding parameter count (active count for MoE).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+_EMBED_KEYS = ("embed", "pos_embed", "enc_pos_embed", "lm_head")
+_EXPERT_KEYS = ("w_gate", "w_up", "w_down")
+
+
+@lru_cache(maxsize=64)
+def _shapes(cfg: ModelConfig):
+    from repro.models.transformer import Transformer
+    model = Transformer(cfg)
+    tree = jax.eval_shape(model.init, jax.random.key(0))
+    return jax.tree_util.tree_flatten_with_path(tree)[0]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", k)) for k in path)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    return sum(math.prod(leaf.shape) for _, leaf in _shapes(cfg))
+
+
+def count_params_analytic(cfg: ModelConfig) -> int:
+    """Non-embedding parameter count."""
+    total = 0
+    for path, leaf in _shapes(cfg):
+        ps = _path_str(path)
+        if any(ps.endswith(k) or f"/{k}" in ps for k in _EMBED_KEYS):
+            continue
+        total += math.prod(leaf.shape)
+    return total
+
+
+def count_active_params_analytic(cfg: ModelConfig) -> int:
+    """Non-embedding params active per token (MoE: k/E of expert weights,
+    shared experts always on)."""
+    if cfg.moe is None:
+        return count_params_analytic(cfg)
+    frac = cfg.moe.experts_per_token / cfg.moe.num_experts
+    total = 0
+    for path, leaf in _shapes(cfg):
+        ps = _path_str(path)
+        if any(ps.endswith(k) or f"/{k}" in ps for k in _EMBED_KEYS):
+            continue
+        n = math.prod(leaf.shape)
+        if "moe" in ps and any(ps.endswith(k) for k in _EXPERT_KEYS):
+            n = int(n * frac)
+        total += n
+    return total

@@ -1,0 +1,176 @@
+"""RWKV6 ("Finch") block — attention-free time mixing with data-dependent
+decay [arXiv:2404.05892].
+
+Per head (K = V = head_dim) the WKV recurrence is
+
+    y_t[j] = sum_i r_t[i] * (S_t[i, j] + u[i] * k_t[i] * v_t[j])
+    S_{t+1}[i, j] = w_t[i] * S_t[i, j] + k_t[i] * v_t[j]
+
+with w_t = exp(-exp(decay_t)) data-dependent via a LoRA on the token-shift
+mix. Train/prefill runs a ``lax.scan`` over time carrying S; decode is a
+single O(1) step. Sub-quadratic by construction, so the long_500k decode
+shape runs natively (state is (H, K, K) per layer, independent of
+context length).
+
+State: ``{"wkv": (B, H, K, K) f32, "shift_tm": (B, d), "shift_cm": (B, d)}``
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+_MIX = ("w", "k", "v", "r", "g")
+
+
+def _heads(cfg: ModelConfig):
+    hd = cfg.rwkv.head_dim
+    return cfg.d_model // hd, hd
+
+
+def rwkv6_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    rc = cfg.rwkv
+    h, hd = _heads(cfg)
+    ks = jax.random.split(key, 16)
+    p = {
+        # token-shift base mixes
+        "maa_x": jnp.zeros((d,), dtype=dtype),
+        "maa": jnp.zeros((5, d), dtype=dtype),
+        # data-dependent mix LoRA: d -> 5*gate_lora -> 5*d
+        "maa_w1": dense_init(ks[0], d, 5 * rc.gate_lora, dtype=dtype),
+        "maa_w2": (jax.random.normal(ks[1], (5, rc.gate_lora, d))
+                   * (1.0 / math.sqrt(rc.gate_lora))).astype(dtype),
+        # decay: base + LoRA
+        "decay_base": jnp.full((d,), -6.0, dtype=dtype),
+        "decay_w1": dense_init(ks[2], d, rc.decay_lora, dtype=dtype),
+        "decay_w2": dense_init(ks[3], rc.decay_lora, d, dtype=dtype),
+        "bonus_u": (jax.random.normal(ks[4], (h, hd)) * 0.1).astype(dtype),
+        "wr": dense_init(ks[5], d, d, dtype=dtype),
+        "wk": dense_init(ks[6], d, d, dtype=dtype),
+        "wv": dense_init(ks[7], d, d, dtype=dtype),
+        "wg": dense_init(ks[8], d, d, dtype=dtype),
+        "wo": dense_init(ks[9], d, d, dtype=dtype),
+        "ln_scale": jnp.ones((h, hd), dtype=dtype),
+        # channel mix
+        "cm_mu_k": jnp.full((d,), 0.5, dtype=dtype),
+        "cm_mu_r": jnp.full((d,), 0.5, dtype=dtype),
+        "cm_wk": dense_init(ks[10], d, cfg.d_ff, dtype=dtype),
+        "cm_wv": dense_init(ks[11], cfg.d_ff, d, dtype=dtype),
+        "cm_wr": dense_init(ks[12], d, d, dtype=dtype),
+    }
+    return p
+
+
+def rwkv6_state_init(cfg: ModelConfig, batch: int) -> dict:
+    h, hd = _heads(cfg)
+    d = cfg.d_model
+    return {
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "shift_tm": jnp.zeros((batch, d), jnp.float32),
+        "shift_cm": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """x: (B,S,d) -> previous-timestep tensor (B,S,d)."""
+    first = (jnp.zeros_like(x[:, :1]) if prev is None
+             else prev[:, None, :].astype(x.dtype))
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, sx):
+    """Data-dependent token-shift mixes for (w, k, v, r, g)."""
+    dt = x.dtype
+    xx = x + sx * p["maa_x"].astype(dt)
+    lo = jnp.tanh(xx @ p["maa_w1"].astype(dt))           # (B,S,5*r)
+    b, s, _ = lo.shape
+    lo = lo.reshape(b, s, 5, -1)
+    mix = jnp.einsum("bsgr,grd->gbsd", lo, p["maa_w2"].astype(dt))
+    out = []
+    for i, _ in enumerate(_MIX):
+        out.append(x + sx * (p["maa"][i].astype(dt) + mix[i]))
+    return out
+
+
+def _wkv_scan(r, k, v, w, u, init_state):
+    """r,k,v,w: (B,S,H,K); u: (H,K). Returns y (B,S,H,K), final (B,H,K,K)."""
+    f32 = jnp.float32
+    r, k, v, w = (t.astype(f32) for t in (r, k, v, w))
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                              # (B,H,K)
+        a = kt[..., :, None] * vt[..., None, :]           # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * a)
+        S = wt[..., :, None] * S + a
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    final, ys = jax.lax.scan(step, init_state.astype(f32), xs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def _group_norm(y: jnp.ndarray, scale: jnp.ndarray, eps: float
+                ) -> jnp.ndarray:
+    """Per-head normalisation of the WKV output. y: (B,S,H,K)."""
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    return (y - mu) * jax.lax.rsqrt(var + eps) * scale[None, None]
+
+
+def rwkv6_time_mix(p, cfg, x, state, mode):
+    b, s, d = x.shape
+    h, hd = _heads(cfg)
+    dt = x.dtype
+    prev = state["shift_tm"] if state is not None else None
+    sx = (_token_shift(x, prev) - x) if mode != "decode" else (
+        prev[:, None, :].astype(dt) - x)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, sx)
+
+    r = (xr @ p["wr"].astype(dt)).reshape(b, s, h, hd)
+    k = (xk @ p["wk"].astype(dt)).reshape(b, s, h, hd)
+    v = (xv @ p["wv"].astype(dt)).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    decay = (p["decay_base"].astype(jnp.float32)
+             + (jnp.tanh(xw @ p["decay_w1"].astype(dt))
+                @ p["decay_w2"].astype(dt)).astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(decay)).reshape(b, s, h, hd)
+
+    init = (state["wkv"] if state is not None
+            else jnp.zeros((b, h, hd, hd), jnp.float32))
+    u = p["bonus_u"].astype(jnp.float32)
+
+    if mode == "decode":
+        a = (k[:, 0].astype(jnp.float32)[..., :, None]
+             * v[:, 0].astype(jnp.float32)[..., None, :])
+        y = jnp.einsum("bhk,bhkv->bhv", r[:, 0].astype(jnp.float32),
+                       init + u[None, :, :, None] * a)
+        final = w[:, 0].astype(jnp.float32)[..., :, None] * init + a
+        y = y[:, None]                                    # (B,1,H,K)
+    else:
+        y, final = _wkv_scan(r, k, v, w, u, init)
+
+    y = _group_norm(y, p["ln_scale"].astype(jnp.float32), 64e-5)
+    y = y.reshape(b, s, d).astype(dt) * g
+    out = y @ p["wo"].astype(dt)
+    new_state = {"wkv": final, "shift_tm": x[:, -1].astype(jnp.float32)}
+    return out, new_state
+
+
+def rwkv6_channel_mix(p, cfg, x, state, mode):
+    dt = x.dtype
+    prev = state["shift_cm"] if state is not None else None
+    sx = (_token_shift(x, prev) - x) if mode != "decode" else (
+        prev[:, None, :].astype(dt) - x)
+    xk = x + sx * p["cm_mu_k"].astype(dt)
+    xr = x + sx * p["cm_mu_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(xk @ p["cm_wk"].astype(dt)))
+    out = jax.nn.sigmoid(xr @ p["cm_wr"].astype(dt)) * (
+        k @ p["cm_wv"].astype(dt))
+    return out, {"shift_cm": x[:, -1].astype(jnp.float32)}

@@ -1,0 +1,221 @@
+"""Mamba2 (SSD) block — chunked parallel scan for train/prefill, O(1)
+recurrent state update for decode.
+
+The chunked form follows the minimal SSD reference (Mamba2 paper, Listing
+1): within a chunk the quadratic form runs on the MXU; across chunks a
+short ``lax.scan`` carries the (H, P, N) state. ``chunk`` is
+hardware-aligned (64) so intra-chunk matmuls hit MXU tiles.
+
+Projections are kept **separate** (z / x / BC / dt and two depthwise
+convs) rather than fused as in the CUDA reference: depthwise convolution
+is per-channel, so splitting is mathematically identical, and it lets the
+``model`` mesh axis shard the head dimension cleanly (x, dt, conv_x and
+the SSD einsums all shard over H; B/C are group-shared and replicated) —
+the TPU-native TP layout recorded in DESIGN.md §5.
+
+Cache: ``{"ssm": (B, H, P, N) f32, "conv_x": (B, K-1, d_in),
+"conv_bc": (B, K-1, 2N)}``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    sc = cfg.ssm
+    d_in = sc.d_inner(cfg.d_model)
+    nheads = sc.num_heads(cfg.d_model)
+    return sc, d_in, nheads
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    sc, d_in, nheads = _dims(cfg)
+    d = cfg.d_model
+    n2 = 2 * sc.state_dim
+    ks = jax.random.split(key, 8)
+    u = jax.random.uniform(ks[0], (nheads,), minval=math.log(1e-3),
+                           maxval=math.log(1e-1))
+    dt_bias = jnp.log(jnp.expm1(jnp.exp(u)))        # inverse softplus
+    return {
+        "in_z": dense_init(ks[1], d, d_in, dtype=dtype),
+        "in_x": dense_init(ks[2], d, d_in, dtype=dtype),
+        "in_bc": dense_init(ks[3], d, n2, dtype=dtype),
+        "in_dt": dense_init(ks[4], d, nheads, dtype=dtype),
+        "conv_x_w": (jax.random.normal(ks[5], (sc.conv_dim, d_in))
+                     / math.sqrt(sc.conv_dim)).astype(dtype),
+        "conv_x_b": jnp.zeros((d_in,), dtype=dtype),
+        "conv_bc_w": (jax.random.normal(ks[6], (sc.conv_dim, n2))
+                      / math.sqrt(sc.conv_dim)).astype(dtype),
+        "conv_bc_b": jnp.zeros((n2,), dtype=dtype),
+        "A_log": jnp.log(jnp.arange(1, nheads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dtype=dtype),
+        "out_proj": dense_init(ks[7], d_in, d, dtype=dtype),
+    }
+
+
+def mamba2_cache_init(cfg: ModelConfig, batch: int) -> dict:
+    sc, d_in, nheads = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, nheads, sc.head_dim, sc.state_dim),
+                         jnp.float32),
+        "conv_x": jnp.zeros((batch, sc.conv_dim - 1, d_in), jnp.float32),
+        "conv_bc": jnp.zeros((batch, sc.conv_dim - 1, 2 * sc.state_dim),
+                             jnp.float32),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray]
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv + silu. x: (B, S, ch); w: (K, ch)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+K-1, ch)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(k))
+    new_state = xp[:, -(k - 1):].astype(jnp.float32)
+    return jax.nn.silu(y + b.astype(x.dtype)), new_state
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (..., l) -> (..., l, l) with out[i, j] = sum_{k=j+1..i} a_k for
+    i >= j, -inf otherwise."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(l)[:, None]
+    j = jnp.arange(l)[None, :]
+    return jnp.where(i >= j, diff, -jnp.inf)
+
+
+def _ssd_chunked(xh, dt, A, B, C, chunk, init_state):
+    """Chunked SSD scan.
+
+    xh: (b, s, h, p); dt: (b, s, h); A: (h,); B, C: (b, s, n).
+    Returns y (b, s, h, p) and final state (b, h, p, n).
+    """
+    b, s, h, p = xh.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+
+    f32 = jnp.float32
+    xh = xh.astype(f32).reshape(b, c, chunk, h, p)
+    dt = dt.astype(f32).reshape(b, c, chunk, h)
+    Bm = B.astype(f32).reshape(b, c, chunk, n)
+    Cm = C.astype(f32).reshape(b, c, chunk, n)
+    xdt = xh * dt[..., None]                              # fold dt into x
+
+    a = dt * A[None, None, None, :]                       # (b,c,l,h)
+    a = jnp.moveaxis(a, -1, 2)                            # (b,c,h,l)
+    a_cum = jnp.cumsum(a, axis=-1)                        # inclusive
+
+    # intra-chunk (quadratic within chunk, MXU-friendly)
+    L = jnp.exp(_segsum(a))                               # (b,c,h,l,l)
+    y_diag = jnp.einsum("bcin,bcjn,bchij,bcjhp->bcihp", Cm, Bm, L, xdt)
+
+    # per-chunk input states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)       # (b,c,h,l)
+    states = jnp.einsum("bcjn,bchj,bcjhp->bchpn", Bm, decay_states, xdt)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[..., -1])                 # (b,c,h)
+
+    def step(carry, inp):
+        st, dec = inp                                     # (b,h,p,n),(b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                 # emit prior state
+
+    init = init_state.astype(f32) if init_state is not None else jnp.zeros(
+        (b, h, p, n), f32)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # (b,c,h,p,n)
+
+    state_decay = jnp.exp(a_cum)                          # (b,c,h,l)
+    y_off = jnp.einsum("bcin,bchpn,bchi->bcihp", Cm, prev_states,
+                       state_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def mamba2_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    *,
+    cache: Optional[dict] = None,
+    mode: str = "train",
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    sc, d_in, nheads = _dims(cfg)
+    b, s, d = x.shape
+    dt_ = x.dtype
+
+    z = x @ p["in_z"].astype(dt_)
+    xc = x @ p["in_x"].astype(dt_)
+    bc = x @ p["in_bc"].astype(dt_)
+    dt_raw = x @ p["in_dt"].astype(dt_)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+
+    if mode == "decode":
+        assert s == 1 and cache is not None
+        xs, new_cx = _causal_conv(xc, p["conv_x_w"], p["conv_x_b"],
+                                  cache["conv_x"])
+        bcs, new_cbc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"],
+                                    cache["conv_bc"])
+        Bv, Cv = jnp.split(bcs, 2, axis=-1)
+        xh = xs.reshape(b, nheads, sc.head_dim).astype(jnp.float32)
+        dt1 = dt[:, 0]                                    # (b,h)
+        dA = jnp.exp(dt1 * A[None, :])                    # (b,h)
+        Bv1 = Bv[:, 0].astype(jnp.float32)                # (b,n)
+        Cv1 = Cv[:, 0].astype(jnp.float32)
+        new_state = (cache["ssm"] * dA[..., None, None]
+                     + jnp.einsum("bh,bhp,bn->bhpn", dt1, xh, Bv1))
+        y = jnp.einsum("bhpn,bn->bhp", new_state, Cv1)
+        y = y + p["D"][None, :, None] * xh
+        y = y.reshape(b, 1, d_in).astype(dt_)
+        y = rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+        out = y @ p["out_proj"].astype(dt_)
+        return out, {"ssm": new_state, "conv_x": new_cx,
+                     "conv_bc": new_cbc}
+
+    # train / prefill -------------------------------------------------------
+    xs, new_cx = _causal_conv(xc, p["conv_x_w"], p["conv_x_b"], None)
+    bcs, new_cbc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"], None)
+    Bv, Cv = jnp.split(bcs, 2, axis=-1)
+    xh = xs.reshape(b, s, nheads, sc.head_dim)
+    chunk = min(sc.chunk, s)
+    # pad to a chunk multiple (padded dt=0 ⇒ no state update, no decay)
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bv = jnp.pad(Bv, ((0, 0), (0, pad), (0, 0)))
+        Cv = jnp.pad(Cv, ((0, 0), (0, pad), (0, 0)))
+    y, final_state = _ssd_chunked(xh, dt, A, Bv, Cv, chunk, None)
+    y = y[:, :s]
+    y = y + p["D"][None, None, :, None] * xh[:, :s].astype(jnp.float32)
+    y = y.reshape(b, s, d_in).astype(dt_)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(dt_)
+    new_cache = None
+    if mode == "prefill" and cache is not None:
+        new_cache = {"ssm": final_state, "conv_x": new_cx,
+                     "conv_bc": new_cbc}
+    return out, new_cache

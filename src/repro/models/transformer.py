@@ -1,0 +1,620 @@
+"""Composable model builder: every assigned architecture from one config.
+
+Layers are **stacked** (leading layer axis) and applied with ``lax.scan``
+— this keeps HLO size and compile time flat in depth (62-layer MiniCPM3
+lowers as fast as a 2-layer smoke model), which matters when the dry-run
+compiles 40 (arch × shape) × 2 meshes.
+
+Families:
+* dense / moe / vlm — decoder-only attention blocks (GQA or MLA), MoE
+  blocks where configured (with optional leading dense layers).
+* ssm (rwkv) — RWKV6 time-mix + channel-mix blocks.
+* hybrid (zamba2) — Mamba2 backbone; one weight-tied shared attention+MLP
+  block applied every ``shared_attn_period`` layers.
+* audio (whisper) — encoder-decoder; encoder consumes precomputed frame
+  embeddings (conv frontend stubbed per the assignment).
+
+``apply`` modes: "train" (full logits), "prefill" (fills caches, returns
+last-position logits only — full 32k×152k-vocab logits would be pure
+waste), "decode" (one token against the cache).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (dense_init, embed_init, layer_norm,
+                                 mlp_apply, mlp_init, rms_norm)
+
+Params = Dict[str, Any]
+Cache = Optional[Dict[str, Any]]
+
+# Dry-run switch: XLA cost_analysis counts a scan body ONCE (not × trip
+# count), so the roofline pass unrolls the *structural* scans (layers,
+# MoE chunks) to get true HLO FLOPs. Time-dimension scans (RWKV WKV,
+# Mamba inter-chunk carry) stay scans — their bodies are negligible
+# relative to the projections outside them (documented in EXPERIMENTS.md).
+UNROLL_STRUCTURAL_SCANS = False
+
+
+def _scan(body, init, xs, **kw):
+    return jax.lax.scan(body, init, xs,
+                        unroll=True if UNROLL_STRUCTURAL_SCANS else 1, **kw)
+
+
+def _norm_kind(cfg: ModelConfig) -> str:
+    return "layernorm" if cfg.family in ("audio",) or cfg.rwkv else "rmsnorm"
+
+
+def _norm_init(cfg: ModelConfig, d: int, dtype) -> dict:
+    p = {"w": jnp.ones((d,), dtype=dtype)}
+    if _norm_kind(cfg) == "layernorm":
+        p["b"] = jnp.zeros((d,), dtype=dtype)
+    return p
+
+
+def _norm(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if "b" in p:
+        return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["w"], cfg.norm_eps)
+
+
+def _stack_init(fn, key, n: int):
+    """vmap a per-layer init over n layer keys -> stacked params."""
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+# ===========================================================================
+# Block bodies (single layer; scanned)
+# ===========================================================================
+
+
+def _attn_block_init(key, cfg: ModelConfig, *, d_ff: int, use_moe: bool,
+                     cross: bool, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {"ln1": _norm_init(cfg, d, dtype), "ln2": _norm_init(cfg, d, dtype)}
+    p["attn"] = (attn.mla_init(ks[0], cfg, dtype) if cfg.attn_type == "mla"
+                 else attn.gqa_init(ks[0], cfg, dtype))
+    if cross:
+        p["ln_x"] = _norm_init(cfg, d, dtype)
+        p["xattn"] = attn.cross_attn_init(ks[1], cfg, dtype)
+    if use_moe:
+        p["moe"] = moe_mod.moe_init(ks[2], cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(ks[2], d, d_ff, gated=cfg.gated_mlp, dtype=dtype)
+    return p
+
+
+def _attn_block(p: dict, cfg: ModelConfig, x, *, positions,
+                mrope_positions=None, cache=None, cache_pos=None,
+                mode="train", enc_out=None, use_moe=False,
+                kv_lengths=None):
+    """Pre-norm attention block. Returns (x, new_cache, aux)."""
+    h = _norm(cfg, p["ln1"], x)
+    if cfg.attn_type == "mla":
+        a, new_cache = attn.mla_attention(
+            p["attn"], cfg, h, positions=positions, cache=cache,
+            cache_pos=cache_pos, mode=mode, kv_lengths=kv_lengths)
+    else:
+        a, new_cache = attn.gqa_attention(
+            p["attn"], cfg, h, positions=positions,
+            mrope_positions=mrope_positions, cache=cache,
+            cache_pos=cache_pos, mode=mode, kv_lengths=kv_lengths)
+    x = x + a
+    if "xattn" in p:
+        assert enc_out is not None
+        x = x + attn.cross_attention(p["xattn"], cfg,
+                                     _norm(cfg, p["ln_x"], x), enc_out)
+    h = _norm(cfg, p["ln2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if use_moe:
+        m, aux = moe_mod.moe_apply(p["moe"], cfg, h)
+    else:
+        m = mlp_apply(p["mlp"], h, cfg.activation)
+    return x + m, new_cache, aux
+
+
+def _encoder_self_attn(p, cfg, x):
+    """Bidirectional self-attention (whisper encoder) reusing GQA weights."""
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, h, hd)
+    k = (x @ p["wk"].astype(dt)).reshape(b, s, cfg.num_kv_heads, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(b, s, cfg.num_kv_heads, hd)
+    mask = jnp.ones((s, s), dtype=bool)
+    ctx = attn._sdpa(q, k, v, mask, 1.0 / (hd ** 0.5), 0.0, cfg.q_per_kv)
+    return ctx.reshape(b, s, h * hd) @ p["wo"].astype(dt)
+
+
+def _enc_block(p: dict, cfg: ModelConfig, x):
+    h = _norm(cfg, p["ln1"], x)
+    x = x + _encoder_self_attn(p["attn"], cfg, h)
+    h = _norm(cfg, p["ln2"], x)
+    return x + mlp_apply(p["mlp"], h, cfg.activation)
+
+
+def _mamba_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    return {"ln": _norm_init(cfg, cfg.d_model, dtype),
+            "mamba": ssm_mod.mamba2_init(key, cfg, dtype)}
+
+
+def _mamba_block(p, cfg, x, *, cache=None, mode="train"):
+    h = _norm(cfg, p["ln"], x)
+    y, new_cache = ssm_mod.mamba2_apply(p["mamba"], cfg, h, cache=cache,
+                                        mode=mode)
+    return x + y, new_cache
+
+
+def _rwkv_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    return {"ln1": _norm_init(cfg, cfg.d_model, dtype),
+            "ln2": _norm_init(cfg, cfg.d_model, dtype),
+            "mix": rwkv_mod.rwkv6_init(key, cfg, dtype)}
+
+
+def _rwkv_block(p, cfg, x, *, state=None, mode="train"):
+    h = _norm(cfg, p["ln1"], x)
+    y, st_tm = rwkv_mod.rwkv6_time_mix(p["mix"], cfg, h, state, mode)
+    x = x + y
+    h = _norm(cfg, p["ln2"], x)
+    y, st_cm = rwkv_mod.rwkv6_channel_mix(p["mix"], cfg, h, state, mode)
+    new_state = {**st_tm, **st_cm} if state is not None else None
+    return x + y, new_state
+
+
+# ===========================================================================
+# Transformer
+# ===========================================================================
+
+
+class Transformer:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.pdtype = jnp.dtype(cfg.param_dtype)
+        self.adtype = jnp.dtype(cfg.dtype)
+        self._kv_lengths = None
+        self._mrope_delta = None
+        self._cached_mrope_delta = None
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dtype = self.pdtype
+        keys = jax.random.split(key, 8)
+        p: Params = {"embed": embed_init(keys[0], cfg.vocab_size,
+                                         cfg.d_model, dtype)}
+        if cfg.pos_type == "learned":
+            p["pos_embed"] = embed_init(keys[1], cfg.max_seq_len,
+                                        cfg.d_model, dtype)
+        p["final_norm"] = _norm_init(cfg, cfg.d_model, dtype)
+        if not cfg.tie_embeddings:
+            p["lm_head"] = dense_init(keys[2], cfg.d_model, cfg.vocab_size,
+                                      dtype=dtype)
+
+        if cfg.family == "audio":
+            p["enc_pos_embed"] = embed_init(keys[3], cfg.encoder_seq_len,
+                                            cfg.d_model, dtype)
+            p["enc_blocks"] = _stack_init(
+                lambda k: _attn_block_init(k, cfg, d_ff=cfg.d_ff,
+                                           use_moe=False, cross=False,
+                                           dtype=dtype),
+                keys[4], cfg.num_encoder_layers)
+            p["enc_final_norm"] = _norm_init(cfg, cfg.d_model, dtype)
+            p["blocks"] = _stack_init(
+                lambda k: _attn_block_init(k, cfg, d_ff=cfg.d_ff,
+                                           use_moe=False, cross=True,
+                                           dtype=dtype),
+                keys[5], cfg.num_layers)
+            return p
+
+        if cfg.family == "hybrid":
+            p["blocks"] = _stack_init(
+                lambda k: _mamba_block_init(k, cfg, dtype),
+                keys[4], cfg.num_layers)
+            p["shared"] = _attn_block_init(keys[5], cfg, d_ff=cfg.d_ff,
+                                           use_moe=False, cross=False,
+                                           dtype=dtype)
+            return p
+
+        if cfg.rwkv is not None:
+            p["blocks"] = _stack_init(
+                lambda k: _rwkv_block_init(k, cfg, dtype),
+                keys[4], cfg.num_layers)
+            return p
+
+        # dense / moe / vlm decoder
+        n_dense = cfg.moe.first_dense_layers if cfg.moe else cfg.num_layers
+        n_dense = min(n_dense, cfg.num_layers)
+        n_moe = cfg.num_layers - n_dense
+        if n_dense:
+            d_ff = (cfg.moe.dense_d_ff if (cfg.moe
+                                           and cfg.moe.dense_d_ff)
+                    else cfg.d_ff)
+            p["dense_blocks"] = _stack_init(
+                lambda k: _attn_block_init(k, cfg, d_ff=d_ff, use_moe=False,
+                                           cross=False, dtype=dtype),
+                keys[4], n_dense)
+        if n_moe:
+            p["moe_blocks"] = _stack_init(
+                lambda k: _attn_block_init(k, cfg, d_ff=cfg.d_ff,
+                                           use_moe=True, cross=False,
+                                           dtype=dtype),
+                keys[5], n_moe)
+        return p
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(self, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> Dict[str, Any]:
+        cfg = self.cfg
+
+        def stack(fn, n):
+            one = fn()
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), one)
+
+        cache: Dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32)}
+        if cfg.pos_type == "mrope":
+            cache["mrope_delta"] = jnp.zeros((batch,), jnp.int32)
+        if cfg.family == "audio":
+            cache["self"] = stack(
+                lambda: attn.gqa_cache_init(cfg, batch, max_len, dtype),
+                cfg.num_layers)
+            cache["enc_out"] = jnp.zeros(
+                (batch, cfg.encoder_seq_len, cfg.d_model), dtype)
+            return cache
+        if cfg.family == "hybrid":
+            cache["mamba"] = stack(
+                lambda: ssm_mod.mamba2_cache_init(cfg, batch),
+                cfg.num_layers)
+            n_shared = cfg.num_layers // cfg.shared_attn_period
+            cache["shared"] = stack(
+                lambda: attn.gqa_cache_init(cfg, batch, max_len, dtype),
+                n_shared)
+            return cache
+        if cfg.rwkv is not None:
+            cache["rwkv"] = stack(
+                lambda: rwkv_mod.rwkv6_state_init(cfg, batch),
+                cfg.num_layers)
+            return cache
+        mk = (partial(attn.mla_cache_init, cfg, batch, max_len, dtype)
+              if cfg.attn_type == "mla"
+              else partial(attn.gqa_cache_init, cfg, batch, max_len, dtype))
+        n_dense = cfg.moe.first_dense_layers if cfg.moe else cfg.num_layers
+        n_dense = min(n_dense, cfg.num_layers)
+        if n_dense:
+            cache["dense"] = stack(mk, n_dense)
+        if cfg.num_layers - n_dense:
+            cache["moe"] = stack(mk, cfg.num_layers - n_dense)
+        return cache
+
+    # ----------------------------------------------------------------- apply
+    def apply(self, params: Params, tokens: jnp.ndarray, *,
+              vision_embeds: Optional[jnp.ndarray] = None,
+              encoder_frames: Optional[jnp.ndarray] = None,
+              cache: Cache = None, mode: str = "train",
+              remat: bool = False,
+              prompt_lengths: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, Cache, jnp.ndarray]:
+        """tokens: (B, S_text) int32. Returns (logits, new_cache, aux).
+
+        prompt_lengths (B,): true prompt lengths (incl. vision tokens) for
+        right-padded prefill — pad keys are masked, last-token logits and
+        cache positions use the true length."""
+        cfg = self.cfg
+        cache_pos = cache["pos"] if cache is not None else None
+        self._kv_lengths = prompt_lengths if mode == "prefill" else None
+        self._cached_mrope_delta = (
+            cache.get("mrope_delta", jnp.zeros((), jnp.int32))
+            if cache is not None else jnp.zeros((), jnp.int32))
+
+        x, positions, mrope_positions = self._embed(
+            params, tokens, vision_embeds, cache_pos, mode)
+        x = x.astype(self.adtype)
+
+        aux = jnp.zeros((), jnp.float32)
+        new_cache: Dict[str, Any] = {} if cache is not None else None
+
+        if cfg.family == "audio":
+            x, nc = self._apply_audio(params, x, positions, encoder_frames,
+                                      cache, cache_pos, mode, remat)
+            if cache is not None:
+                new_cache = nc
+        elif cfg.family == "hybrid":
+            x, nc = self._apply_hybrid(params, x, positions, cache,
+                                       cache_pos, mode, remat)
+            if cache is not None:
+                new_cache = nc
+        elif cfg.rwkv is not None:
+            x, nc = self._apply_rwkv(params, x, cache, mode, remat)
+            if cache is not None:
+                new_cache = nc
+        else:
+            x, nc, aux = self._apply_decoder(params, x, positions,
+                                             mrope_positions, cache,
+                                             cache_pos, mode, remat)
+            if cache is not None:
+                new_cache = nc
+
+        x = _norm(cfg, params["final_norm"], x)
+        if mode == "prefill":
+            if prompt_lengths is not None:
+                idx = (prompt_lengths - 1).astype(jnp.int32)
+                x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+            else:
+                x = x[:, -1:]
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = x @ head.astype(x.dtype)
+        if cache is not None:
+            b = tokens.shape[0]
+            if mode == "decode":
+                new_cache["pos"] = cache_pos + 1
+            elif prompt_lengths is not None:
+                new_cache["pos"] = prompt_lengths.astype(jnp.int32)
+            else:
+                new_cache["pos"] = jnp.full(
+                    (b,), self._seq_len(tokens, vision_embeds), jnp.int32)
+            if cfg.pos_type == "mrope":
+                new_cache["mrope_delta"] = (
+                    self._cached_mrope_delta if mode == "decode"
+                    else jnp.full((b,), self._mrope_delta, jnp.int32))
+        return logits, new_cache, aux
+
+    # ------------------------------------------------------------- internals
+    def _seq_len(self, tokens, vision_embeds):
+        s = tokens.shape[1]
+        if vision_embeds is not None:
+            s += vision_embeds.shape[1]
+        return s
+
+    def _embed(self, params, tokens, vision_embeds, cache_pos, mode):
+        cfg = self.cfg
+        b = tokens.shape[0]
+        x = params["embed"].astype(self.adtype)[tokens]
+        if vision_embeds is not None and mode != "decode":
+            x = jnp.concatenate(
+                [vision_embeds.astype(self.adtype), x], axis=1)
+        s = x.shape[1]
+        if mode == "decode":
+            positions = cache_pos[:, None]                    # (B, 1)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        mrope_positions = None
+        self._mrope_delta = None
+        if cfg.pos_type == "mrope":
+            mrope_positions, self._mrope_delta = self._mrope_positions(
+                b, s, vision_embeds, cache_pos, mode)
+        if cfg.pos_type == "learned":
+            x = x + params["pos_embed"].astype(self.adtype)[positions]
+        return x, positions, mrope_positions
+
+    def _mrope_positions(self, b, s, vision_embeds, cache_pos, mode):
+        """Returns ((3,B,S) position ids, rope delta).
+
+        The delta (g − n_vision) maps absolute cache positions back onto
+        the M-RoPE text axis at decode time (Qwen2-VL's rope_delta)."""
+        cfg = self.cfg
+        nv = vision_embeds.shape[1] if (vision_embeds is not None
+                                        and mode != "decode") else 0
+        delta = jnp.zeros((), jnp.int32)
+        if nv:
+            g = int(math.isqrt(nv))
+            assert g * g == nv, "vision_tokens must be a square grid"
+            vi = jnp.arange(nv)
+            vt = jnp.zeros((nv,), jnp.int32)
+            vh = (vi // g).astype(jnp.int32)
+            vw = (vi % g).astype(jnp.int32)
+            tstart = g
+            ti = jnp.arange(s - nv) + tstart
+            pos3 = jnp.stack([
+                jnp.concatenate([vt, ti]),
+                jnp.concatenate([vh, ti]),
+                jnp.concatenate([vw, ti]),
+            ])                                             # (3, S)
+            delta = jnp.asarray(g - nv, jnp.int32)
+        elif mode == "decode":
+            # text continuation on the shifted M-RoPE text axis
+            p = cache_pos + self._cached_mrope_delta           # (B,)
+            pos3 = jnp.broadcast_to(p[None, :, None], (3, b, s))
+            return pos3, delta
+        else:
+            pos3 = jnp.broadcast_to(jnp.arange(s)[None], (3, s))
+        return jnp.broadcast_to(pos3[:, None], (3, b, s)), delta
+
+    def _maybe_remat(self, fn, remat):
+        return jax.checkpoint(fn) if remat else fn
+
+    def _apply_decoder(self, params, x, positions, mrope_positions, cache,
+                       cache_pos, mode, remat):
+        aux_total = jnp.zeros((), jnp.float32)
+        new_cache = {}
+        if "dense_blocks" in params:
+            caches = cache["dense"] if cache is not None else None
+            if caches is None:
+                x, aux, _ = self._scan_group(
+                    params["dense_blocks"], x, None, False, positions,
+                    mrope_positions, cache_pos, mode, remat)
+            else:
+                x, aux, nc = self._scan_group(
+                    params["dense_blocks"], x, caches, False, positions,
+                    mrope_positions, cache_pos, mode, remat)
+                new_cache["dense"] = nc
+            aux_total += aux
+        if "moe_blocks" in params:
+            caches = cache["moe"] if cache is not None else None
+            if caches is None:
+                x, aux, _ = self._scan_group(
+                    params["moe_blocks"], x, None, True, positions,
+                    mrope_positions, cache_pos, mode, remat)
+            else:
+                x, aux, nc = self._scan_group(
+                    params["moe_blocks"], x, caches, True, positions,
+                    mrope_positions, cache_pos, mode, remat)
+                new_cache["moe"] = nc
+            aux_total += aux
+        return x, new_cache if cache is not None else None, aux_total
+
+    def _scan_group(self, blocks, x, caches, use_moe, positions,
+                    mrope_positions, cache_pos, mode, remat):
+        cfg = self.cfg
+
+        if caches is None:
+            def body(carry, p_l):
+                xc, aux = carry
+                xc, _, a = _attn_block(
+                    p_l, cfg, xc, positions=positions,
+                    mrope_positions=mrope_positions, mode=mode,
+                    use_moe=use_moe, kv_lengths=self._kv_lengths)
+                return (xc, aux + a), None
+            body = self._maybe_remat(body, remat)
+            (x, aux), _ = _scan(
+                body, (x, jnp.zeros((), jnp.float32)), blocks)
+            return x, aux, None
+
+        def body(carry, per_layer):
+            xc, aux = carry
+            p_l, cache_l = per_layer
+            xc, nc, a = _attn_block(
+                p_l, cfg, xc, positions=positions,
+                mrope_positions=mrope_positions, cache=cache_l,
+                cache_pos=cache_pos, mode=mode, use_moe=use_moe,
+                kv_lengths=self._kv_lengths)
+            return (xc, aux + a), nc
+        body = self._maybe_remat(body, remat)
+        (x, aux), new_caches = _scan(
+            body, (x, jnp.zeros((), jnp.float32)), (blocks, caches))
+        return x, aux, new_caches
+
+    def _apply_hybrid(self, params, x, positions, cache, cache_pos, mode,
+                      remat):
+        cfg = self.cfg
+        period = cfg.shared_attn_period
+        n_super = cfg.num_layers // period
+
+        # reshape stacked mamba params/caches into (n_super, period, ...)
+        def regroup(t):
+            return jax.tree.map(
+                lambda a: a.reshape((n_super, period) + a.shape[1:]), t)
+
+        blocks = regroup(params["blocks"])
+        m_caches = regroup(cache["mamba"]) if cache is not None else None
+        s_caches = cache["shared"] if cache is not None else None
+        shared_p = params["shared"]
+
+        def superstep(carry, per):
+            xc = carry
+            if cache is not None:
+                blk, mc, sc = per
+            else:
+                blk = per
+                mc, sc = None, None
+
+            def inner(c2, per2):
+                x2 = c2
+                if mc is not None:
+                    p_l, cache_l = per2
+                    x2, ncl = _mamba_block(p_l, cfg, x2, cache=cache_l,
+                                           mode=mode)
+                    return x2, (ncl if ncl is not None else cache_l)
+                x2, _ = _mamba_block(per2, cfg, x2, mode=mode)
+                return x2, None
+
+            if mc is not None:
+                xc, new_mc = _scan(inner, xc, (blk, mc))
+            else:
+                xc, _ = _scan(inner, xc, blk)
+                new_mc = None
+            # shared attention block after each group of `period` layers
+            xc, new_sc, _ = _attn_block(
+                shared_p, cfg, xc, positions=positions, cache=sc,
+                cache_pos=cache_pos, mode=mode, use_moe=False,
+                kv_lengths=self._kv_lengths)
+            if cache is not None:
+                return xc, (new_mc, new_sc if new_sc is not None else sc)
+            return xc, None
+
+        superstep = self._maybe_remat(superstep, remat)
+        if cache is not None:
+            x, (new_m, new_s) = _scan(
+                superstep, x, (blocks, m_caches, s_caches))
+            new_cache = {
+                "mamba": jax.tree.map(
+                    lambda a: a.reshape((n_super * period,) + a.shape[2:]),
+                    new_m),
+                "shared": new_s,
+            }
+            return x, new_cache
+        x, _ = _scan(superstep, x, blocks)
+        return x, None
+
+    def _apply_rwkv(self, params, x, cache, mode, remat):
+        cfg = self.cfg
+        states = cache["rwkv"] if cache is not None else None
+
+        def body(xc, per):
+            if states is not None:
+                p_l, st = per
+                xc, new_st = _rwkv_block(p_l, cfg, xc, state=st, mode=mode)
+                return xc, new_st
+            xc, _ = _rwkv_block(per, cfg, xc, mode=mode)
+            return xc, None
+
+        body = self._maybe_remat(body, remat)
+        if states is not None:
+            x, new_states = _scan(body, x, (params["blocks"], states))
+            return x, {"rwkv": new_states}
+        x, _ = _scan(body, x, params["blocks"])
+        return x, None
+
+    def _apply_audio(self, params, x, positions, encoder_frames, cache,
+                     cache_pos, mode, remat):
+        cfg = self.cfg
+
+        if mode == "decode":
+            enc_out = cache["enc_out"].astype(self.adtype)
+        else:
+            assert encoder_frames is not None, "audio needs encoder_frames"
+            e = encoder_frames.astype(self.adtype)
+            e = e + params["enc_pos_embed"].astype(self.adtype)[
+                None, : e.shape[1]]
+
+            def enc_body(xc, p_l):
+                return _enc_block(p_l, cfg, xc), None
+            enc_body = self._maybe_remat(enc_body, remat)
+            e, _ = _scan(enc_body, e, params["enc_blocks"])
+            enc_out = _norm(cfg, params["enc_final_norm"], e)
+
+        def body(xc, per):
+            if cache is not None:
+                p_l, cache_l = per
+                xc, nc, _ = _attn_block(
+                    p_l, cfg, xc, positions=positions, cache=cache_l,
+                    cache_pos=cache_pos, mode=mode, enc_out=enc_out,
+                    kv_lengths=self._kv_lengths)
+                return xc, nc
+            xc, _, _ = _attn_block(per, cfg, xc, positions=positions,
+                                   mode=mode, enc_out=enc_out,
+                                   kv_lengths=self._kv_lengths)
+            return xc, None
+
+        body = self._maybe_remat(body, remat)
+        if cache is not None:
+            x, new_self = _scan(body, x, (params["blocks"],
+                                          cache["self"]))
+            new_cache = {"self": new_self,
+                         "enc_out": enc_out.astype(cache["enc_out"].dtype)}
+            return x, new_cache
+        x, _ = _scan(body, x, params["blocks"])
+        return x, None

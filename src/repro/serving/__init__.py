@@ -1,0 +1,6 @@
+from repro.serving.engine import (  # noqa: F401
+    Request,
+    ServingEngine,
+    make_prefill_step,
+    make_serve_step,
+)

@@ -1,0 +1,11 @@
+from repro.training.optim import (  # noqa: F401
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+)
+from repro.training.trainer import (  # noqa: F401
+    TrainHParams,
+    make_mem_train_step,
+    make_train_step,
+)

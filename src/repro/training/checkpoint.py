@@ -1,0 +1,52 @@
+"""Checkpointing: path-keyed npz snapshots of arbitrary param pytrees.
+
+No orbax offline; the format is a single ``.npz`` whose keys are
+``/``-joined tree paths plus a tiny JSON manifest. Works for params,
+optimizer states and caches (nested dicts / NamedTuples of arrays).
+Restore rebuilds into the *given* target structure, so sharded restores
+just pass the abstract target tree.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree: Any, metadata: Dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    meta = {"keys": sorted(flat), **(metadata or {})}
+    with open(path.removesuffix(".npz") + ".json", "w") as f:
+        json.dump(meta, f, indent=1)
+
+
+def restore(path: str, target: Any) -> Any:
+    """Restore into the structure of ``target`` (values replaced)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+    leaves = []
+    for p, leaf in paths:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(target), leaves)

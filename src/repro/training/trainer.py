@@ -1,0 +1,90 @@
+"""Train-step factories: LM training and MEM contrastive training.
+
+``make_train_step(cfg)`` builds the function the train_4k dry-run shape
+lowers: (params, opt, batch, step) -> (params, opt, metrics). Activation
+rematerialisation (``remat=True``) checkpoints each scanned layer body —
+the standard memory/compute trade recorded in §Perf.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.mem import MEM
+from repro.models.transformer import Transformer
+from repro.training.losses import lm_cross_entropy, siglip_loss
+from repro.training.optim import adamw_update, cosine_schedule, global_norm
+
+
+@dataclass(frozen=True)
+class TrainHParams:
+    base_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    remat: bool = True
+
+
+def make_train_step(cfg: ModelConfig, hp: TrainHParams = TrainHParams()
+                    ) -> Callable:
+    """LM train step. batch: {"tokens": (B,S), "labels": (B,S), and for
+    vlm/audio families the stub embeddings}."""
+    model = Transformer(cfg)
+
+    def loss_fn(params, batch):
+        kw = {}
+        if cfg.family == "vlm":
+            kw["vision_embeds"] = batch["vision_embeds"]
+        if cfg.family == "audio":
+            kw["encoder_frames"] = batch["encoder_frames"]
+        logits, _, aux = model.apply(params, batch["tokens"],
+                                     mode="train", remat=hp.remat, **kw)
+        if cfg.family == "vlm":
+            nv = batch["vision_embeds"].shape[1]
+            logits = logits[:, nv:]
+        loss, metrics = lm_cross_entropy(logits, batch["labels"],
+                                         batch.get("mask"))
+        return loss + aux, {**metrics, "moe_aux": aux}
+
+    def train_step(params, opt_state, batch, step):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        lr = cosine_schedule(step, base_lr=hp.base_lr, warmup=hp.warmup,
+                             total=hp.total_steps)
+        params, opt_state = adamw_update(
+            grads, opt_state, params, lr=lr,
+            weight_decay=hp.weight_decay, grad_clip=hp.grad_clip)
+        metrics = {**metrics, "loss": loss, "lr": lr,
+                   "grad_norm": global_norm(grads)}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_mem_train_step(mem: MEM, hp: TrainHParams = TrainHParams()
+                        ) -> Callable:
+    """SigLIP contrastive step. batch: {"tokens", "mask", "patches"}."""
+
+    def loss_fn(params, batch):
+        txt = mem.encode_text(params, batch["tokens"], batch.get("mask"))
+        img = mem.encode_image(params, batch["patches"])
+        return siglip_loss(img, txt, params["logit_scale"],
+                           params["logit_bias"])
+
+    def train_step(params, opt_state, batch, step):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        lr = cosine_schedule(step, base_lr=hp.base_lr, warmup=hp.warmup,
+                             total=hp.total_steps)
+        params, opt_state = adamw_update(
+            grads, opt_state, params, lr=lr,
+            weight_decay=hp.weight_decay, grad_clip=hp.grad_clip)
+        return params, opt_state, {**metrics, "loss": loss, "lr": lr}
+
+    return train_step

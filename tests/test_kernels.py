@@ -1,0 +1,136 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+All Pallas kernels run in interpret mode on CPU (the TPU path shares the
+same kernel body)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import gqa_decode, mla_decode
+from repro.kernels.scene_score import scene_score
+from repro.kernels.similarity import similarity_scan
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hkv,d,c,blk", [
+    (1, 4, 4, 64, 128, 64),       # MHA
+    (2, 8, 2, 64, 256, 64),       # GQA 4:1
+    (2, 8, 1, 128, 192, 64),      # MQA, non-pow2 cache
+    (3, 16, 4, 32, 64, 64),       # single block
+])
+def test_gqa_decode_matches_ref(dtype, b, h, hkv, d, c, blk):
+    ks = jax.random.split(jax.random.key(0), 4)
+    q = jax.random.normal(ks[0], (b, 1, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, c, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, c, hkv, d), dtype)
+    lens = jax.random.randint(ks[3], (b, 1), 1, c + 1)
+    valid = jnp.arange(c)[None] < lens
+    out = gqa_decode(q, k, v, valid, scale=d ** -0.5, q_per_kv=h // hkv,
+                     blk_s=blk)
+    want = ref.decode_attention_ref(q, k, v, valid, scale=d ** -0.5,
+                                    q_per_kv=h // hkv)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_gqa_decode_softcap():
+    ks = jax.random.split(jax.random.key(1), 3)
+    b, h, d, c = 2, 4, 32, 128
+    q = jax.random.normal(ks[0], (b, 1, h, d)) * 4
+    k = jax.random.normal(ks[1], (b, c, h, d))
+    v = jax.random.normal(ks[2], (b, c, h, d))
+    valid = jnp.ones((b, c), bool)
+    out = gqa_decode(q, k, v, valid, scale=0.3, softcap=20.0, blk_s=64)
+    want = ref.decode_attention_ref(q, k, v, valid, scale=0.3, softcap=20.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,r,dr,c,blk", [
+    (1, 8, 64, 16, 128, 64),
+    (2, 16, 128, 64, 256, 128),
+    (2, 4, 32, 16, 96, 32),       # non-pow2 cache
+])
+def test_mla_decode_matches_ref(dtype, b, h, r, dr, c, blk):
+    ks = jax.random.split(jax.random.key(2), 5)
+    qa = jax.random.normal(ks[0], (b, 1, h, r), dtype)
+    qr = jax.random.normal(ks[1], (b, 1, h, dr), dtype)
+    ckv = jax.random.normal(ks[2], (b, c, r), dtype)
+    kr = jax.random.normal(ks[3], (b, c, dr), dtype)
+    lens = jax.random.randint(ks[4], (b, 1), 1, c + 1)
+    valid = jnp.arange(c)[None] < lens
+    out = mla_decode(qa, qr, ckv, kr, valid, scale=0.1, blk_s=blk)
+    want = ref.mla_decode_attention_ref(qa, qr, ckv, kr, valid, scale=0.1)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("q,n,d,blk", [
+    (1, 256, 64, 64),
+    (4, 512, 128, 128),
+    (2, 192, 32, 64),             # non-pow2 index
+])
+def test_similarity_matches_ref(dtype, q, n, d, blk):
+    ks = jax.random.split(jax.random.key(3), 3)
+    query = jax.random.normal(ks[0], (q, d), dtype)
+    index = jax.random.normal(ks[1], (n, d), dtype)
+    nvalid = int(jax.random.randint(ks[2], (), 1, n + 1))
+    valid = jnp.arange(n) < nvalid
+    sims, m, l = similarity_scan(query, index, valid, tau=0.07, blk_n=blk)
+    want_s, want_p = ref.similarity_ref(query, index, tau=0.07, valid=valid)
+    probs = jnp.exp(jnp.where(valid[None], sims / 0.07, -1e30) - m) / l
+    np.testing.assert_allclose(np.asarray(sims, np.float32),
+                               np.asarray(want_s, np.float32),
+                               **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(probs), np.asarray(want_p),
+                               rtol=1e-4, atol=1e-5)
+    assert np.isclose(np.asarray(probs).sum(axis=-1), 1.0).all()
+
+
+@pytest.mark.parametrize("t,h,w", [(4, 16, 16), (7, 32, 24), (2, 8, 128)])
+@pytest.mark.parametrize("weights", [(1.0, 1.0, 1.0, 2.0),
+                                     (0.5, 2.0, 1.0, 0.0)])
+def test_scene_score_matches_ref(t, h, w, weights):
+    frames = jax.random.uniform(jax.random.key(4), (t, h, w, 3))
+    phi = scene_score(frames, weights)
+    want = ref.scene_score_ref(frames, weights)
+    np.testing.assert_allclose(np.asarray(phi), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    assert float(phi[0]) == 0.0
+
+
+def test_scene_score_detects_cut():
+    a = jnp.zeros((3, 16, 16, 3)) + 0.2
+    b = jnp.zeros((3, 16, 16, 3)) + 0.9
+    frames = jnp.concatenate([a, b])
+    phi = np.asarray(scene_score(frames, (1.0, 1.0, 1.0, 2.0)))
+    assert phi[3] > 10 * max(phi[1], phi[2], phi[4], phi[5], 1e-9)
+
+
+def test_ops_dispatch_backends():
+    from repro.kernels import ops
+    ks = jax.random.split(jax.random.key(5), 3)
+    q = jax.random.normal(ks[0], (2, 1, 4, 32))
+    k = jax.random.normal(ks[1], (2, 64, 4, 32))
+    v = jax.random.normal(ks[2], (2, 64, 4, 32))
+    valid = jnp.ones((2, 64), bool)
+    old = ops.backend()
+    try:
+        ops.set_backend("jnp")
+        a = ops.decode_attention(q, k, v, valid, scale=0.2)
+        ops.set_backend("pallas")
+        b = ops.decode_attention(q, k, v, valid, scale=0.2)
+    finally:
+        ops.set_backend(old)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)

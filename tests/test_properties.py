@@ -1,0 +1,179 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import retrieval as rt
+from repro.core.clustering import cluster_partition
+from repro.core.scene import segment
+from repro.kernels import ref
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+@st.composite
+def prob_vectors(draw, max_n=64):
+    n = draw(st.integers(4, max_n))
+    raw = draw(st.lists(st.floats(1e-4, 1.0), min_size=n, max_size=n))
+    p = np.asarray(raw, np.float32)
+    return p / p.sum()
+
+
+@_settings
+@given(probs=prob_vectors(),
+       theta=st.floats(0.3, 0.95),
+       n_max=st.integers(4, 48),
+       seed=st.integers(0, 2**31 - 1))
+def test_akr_invariants(probs, theta, n_max, seed):
+    """AKR terminates; N_min ≤ draws ≤ N_max; at stop, either the Eq. 6
+    mass threshold holds or N_max was hit."""
+    res = rt.akr_progressive(jnp.asarray(probs), jax.random.key(seed),
+                             theta=theta, beta=1.0, n_max=n_max)
+    n = int(res.n_drawn)
+    assert 1 <= n <= n_max
+    assert n >= min(int(res.n_min), n_max)
+    mass = float(res.mass)
+    if n < n_max:
+        assert mass >= theta - 1e-5
+    draws = np.asarray(res.draws)
+    valid = np.asarray(res.valid)
+    assert valid.sum() == n
+    assert ((draws[valid] >= 0) & (draws[valid] < len(probs))).all()
+    # mass equals the sum of probs over the distinct drawn indices
+    distinct = np.unique(draws[valid])
+    np.testing.assert_allclose(mass, probs[distinct].sum(), rtol=1e-4,
+                               atol=1e-5)
+
+
+@_settings
+@given(probs=prob_vectors(), n=st.integers(1, 64),
+       seed=st.integers(0, 2**31 - 1))
+def test_sampling_counts_consistent(probs, n, seed):
+    draws, counts = rt.sampling_retrieve(jnp.asarray(probs),
+                                         jax.random.key(seed), n)
+    counts = np.asarray(counts)
+    assert counts.sum() == n
+    assert (counts >= 0).all()
+    d = np.asarray(draws)
+    for i in np.unique(d):
+        assert counts[i] == (d == i).sum()
+
+
+@_settings
+@given(st.data())
+def test_similarity_probs_are_softmax(data):
+    q = data.draw(st.integers(1, 3))
+    n = data.draw(st.integers(4, 32))
+    d = data.draw(st.sampled_from([8, 16]))
+    nvalid = data.draw(st.integers(1, n))
+    key = jax.random.key(data.draw(st.integers(0, 1000)))
+    ks = jax.random.split(key, 2)
+    query = jax.random.normal(ks[0], (q, d))
+    index = jax.random.normal(ks[1], (n, d))
+    valid = jnp.arange(n) < nvalid
+    sims, probs = ref.similarity_ref(query, index, tau=0.1, valid=valid)
+    p = np.asarray(probs)
+    np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-5)
+    assert (p[:, nvalid:] == 0).all() or nvalid == n
+    s = np.asarray(sims)
+    assert (s <= 1.0 + 1e-5).all() and (s >= -1.0 - 1e-5).all()
+
+
+@_settings
+@given(st.data())
+def test_similarity_tau_monotonicity(data):
+    """Lower temperature ⇒ the argmax entry's probability cannot drop."""
+    n, d = 16, 8
+    key = jax.random.key(data.draw(st.integers(0, 1000)))
+    ks = jax.random.split(key, 2)
+    query = jax.random.normal(ks[0], (1, d))
+    index = jax.random.normal(ks[1], (n, d))
+    valid = jnp.ones((n,), bool)
+    _, p_hi = ref.similarity_ref(query, index, tau=0.5, valid=valid)
+    _, p_lo = ref.similarity_ref(query, index, tau=0.05, valid=valid)
+    top = int(np.argmax(np.asarray(p_hi)[0]))
+    assert np.asarray(p_lo)[0, top] >= np.asarray(p_hi)[0, top] - 1e-6
+
+
+@_settings
+@given(st.data())
+def test_clustering_invariants(data):
+    t = data.draw(st.integers(2, 40))
+    d = 8
+    kmax = data.draw(st.integers(2, 8))
+    thr = data.draw(st.floats(0.1, 5.0))
+    key = jax.random.key(data.draw(st.integers(0, 1000)))
+    vecs = jax.random.normal(key, (t, d))
+    res = cluster_partition(vecs, threshold=thr, max_clusters=kmax)
+    assign = np.asarray(res.assignments)
+    n = int(res.n_clusters)
+    assert 1 <= n <= kmax
+    # every frame assigned to a live cluster
+    assert ((assign >= 0) & (assign < n)).all()
+    # counts match assignments
+    counts = np.asarray(res.counts)
+    for c in range(n):
+        assert counts[c] == (assign == c).sum()
+    assert counts[:n].sum() == t
+    # index frames are members
+    for c in range(n):
+        assert assign[int(res.index_frames[c])] == c
+
+
+@_settings
+@given(st.data())
+def test_segment_boundary_iff_rule(data):
+    t = data.draw(st.integers(2, 64))
+    thr = data.draw(st.floats(0.05, 0.5))
+    maxlen = data.draw(st.integers(2, 16))
+    key = jax.random.key(data.draw(st.integers(0, 1000)))
+    phi = jax.random.uniform(key, (t,)) * 0.6
+    boundary, part_id, _ = segment(phi, threshold=thr,
+                                   max_partition_len=maxlen)
+    b = np.asarray(boundary)
+    p = np.asarray(phi)
+    assert b[0]
+    since = 1
+    for i in range(1, t):
+        want = (p[i] > thr) or (since >= maxlen)
+        assert b[i] == want, i
+        since = 1 if want else since + 1
+    # partition ids are contiguous non-decreasing
+    pid = np.asarray(part_id)
+    assert (np.diff(pid) >= 0).all() and (np.diff(pid) <= 1).all()
+
+
+@_settings
+@given(st.data())
+def test_kv_ring_buffer_consistency(data):
+    """Decode attention over a ring-buffer window == attention over the
+    explicit last-W tokens (order invariance of softmax)."""
+    w = data.draw(st.sampled_from([4, 8]))
+    total = data.draw(st.integers(1, 20))
+    h, dim = 2, 16
+    key = jax.random.key(data.draw(st.integers(0, 1000)))
+    ks = jax.random.split(key, 3)
+    keys = jax.random.normal(ks[0], (total, h, dim))
+    vals = jax.random.normal(ks[1], (total, h, dim))
+    q = jax.random.normal(ks[2], (1, 1, h, dim))
+    # ring layout: token t at slot t % w
+    kbuf = np.zeros((1, w, h, dim), np.float32)
+    vbuf = np.zeros((1, w, h, dim), np.float32)
+    for t in range(total):
+        kbuf[0, t % w] = keys[t]
+        vbuf[0, t % w] = vals[t]
+    nvalid = min(total, w)
+    valid = (jnp.arange(w) < nvalid)[None]
+    out = ref.decode_attention_ref(q, jnp.asarray(kbuf), jnp.asarray(vbuf),
+                                   valid, scale=0.25)
+    # explicit window
+    lo = max(0, total - w)
+    ke = keys[lo:total][None]
+    ve = vals[lo:total][None]
+    out2 = ref.decode_attention_ref(q, ke, ve,
+                                    jnp.ones((1, total - lo), bool),
+                                    scale=0.25)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,134 @@
+"""Training substrate: optimizer math, schedules, losses, checkpointing,
+MEM contrastive training."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.venus_mem import smoke_config as mem_smoke
+from repro.data.text import lm_batches, tokenize, tokenize_batch
+from repro.models.mem import MEM
+from repro.models.transformer import Transformer
+from repro.training import (TrainHParams, adamw_init, adamw_update,
+                            cosine_schedule, make_mem_train_step,
+                            make_train_step)
+from repro.training import checkpoint as ckpt
+from repro.training.losses import lm_cross_entropy, siglip_loss
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params)
+    target = jnp.asarray([1.0, 2.0])
+    for _ in range(300):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, opt = adamw_update(grads, opt, params, lr=0.05,
+                                   weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_cosine_schedule_shape():
+    lr0 = cosine_schedule(jnp.asarray(0), base_lr=1.0, warmup=10,
+                          total=100)
+    lr_w = cosine_schedule(jnp.asarray(10), base_lr=1.0, warmup=10,
+                           total=100)
+    lr_end = cosine_schedule(jnp.asarray(100), base_lr=1.0, warmup=10,
+                             total=100)
+    assert float(lr0) == 0.0
+    assert abs(float(lr_w) - 1.0) < 1e-5
+    assert float(lr_end) <= 0.11
+
+
+def test_lm_cross_entropy_gold():
+    logits = jnp.asarray([[[10.0, 0.0, 0.0], [0.0, 10.0, 0.0]]])
+    labels = jnp.asarray([[0, 1]])
+    loss, metrics = lm_cross_entropy(logits, labels, z_loss=0.0)
+    assert float(loss) < 1e-3
+    assert float(metrics["accuracy"]) == 1.0
+
+
+def test_lm_loss_decreases_end_to_end():
+    cfg = registry.get_smoke_config("deepseek-7b")
+    m = Transformer(cfg)
+    params = m.init(jax.random.key(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, TrainHParams(
+        base_lr=1e-3, warmup=2, total_steps=50, remat=False)))
+    it = lm_batches(cfg.vocab_size, 4, 64, seed=0)
+    losses = []
+    for i in range(12):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt, metrics = step(params, opt, b, jnp.asarray(i))
+        losses.append(float(metrics["loss"]))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-3:]) < np.mean(losses[:3])
+
+
+def test_siglip_loss_prefers_diagonal():
+    d = 8
+    img = jnp.eye(4, d)
+    txt_match = jnp.eye(4, d)
+    perm = jnp.asarray([1, 0, 3, 2])
+    loss_m, _ = siglip_loss(img, txt_match, jnp.asarray(2.0),
+                            jnp.asarray(-1.0))
+    loss_x, _ = siglip_loss(img, txt_match[perm], jnp.asarray(2.0),
+                            jnp.asarray(-1.0))
+    assert float(loss_m) < float(loss_x)
+
+
+def test_mem_contrastive_training_improves(tmp_path):
+    cfg = mem_smoke()
+    mem = MEM(cfg)
+    params = mem.init(jax.random.key(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_mem_train_step(mem, TrainHParams(
+        base_lr=3e-4, warmup=2, total_steps=60, remat=False)))
+    rng = np.random.default_rng(0)
+    # synthetic paired data: 4 "classes"; patches + texts per class
+    protos = rng.normal(0, 1, (4, cfg.vision.d_model)).astype(np.float32)
+    texts = [f"class{i} object{i}" for i in range(4)]
+    accs = []
+    for i in range(30):
+        cls = rng.integers(0, 4, size=4)
+        while len(set(cls.tolist())) < 4:       # distinct rows for siglip
+            cls = rng.integers(0, 4, size=4)
+        patches = protos[cls][:, None, :].repeat(4, 1) \
+            + rng.normal(0, 0.1, (4, 4, cfg.vision.d_model))
+        toks, mask = tokenize_batch([texts[c] for c in cls],
+                                    cfg.text.vocab_size, 16)
+        batch = {"tokens": jnp.asarray(toks), "mask": jnp.asarray(mask),
+                 "patches": jnp.asarray(patches, jnp.float32)}
+        params, opt, metrics = step(params, opt, batch, jnp.asarray(i))
+        accs.append(float(metrics["contrastive_acc"]))
+    assert np.mean(accs[-5:]) > np.mean(accs[:5])
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = registry.get_smoke_config("olmoe-1b-7b")
+    m = Transformer(cfg)
+    params = m.init(jax.random.key(0))
+    opt = adamw_init(params)
+    path = os.path.join(tmp_path, "ck")
+    ckpt.save(path, {"params": params, "opt": opt._asdict()},
+              metadata={"step": 3})
+    target = jax.tree.map(lambda a: np.zeros_like(a),
+                          {"params": params, "opt": opt._asdict()})
+    restored = ckpt.restore(path, target)
+    flat_a = jax.tree.leaves(restored["params"])
+    flat_b = jax.tree.leaves(params)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_tokenizer_deterministic_and_bounded():
+    a = tokenize("hello world", 512, 8)
+    b = tokenize("hello world", 512, 8)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (8,)
+    assert (a < 512).all() and (a >= 0).all()
+    c = tokenize("hello mars", 512, 8)
+    assert (a != c).any()

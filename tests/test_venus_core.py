@@ -1,0 +1,212 @@
+"""Venus core behaviour: scene segmentation, clustering, memory,
+retrieval (Eq. 1–7) and the end-to-end claims on synthetic ground truth."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import retrieval as rt
+from repro.core.clustering import cluster_partition, frame_vectors
+from repro.core.memory import FrameStore, VenusMemory
+from repro.core.pipeline import VenusConfig, VenusSystem
+from repro.core.scene import StreamSegmenter, scene_scores, segment
+from repro.data.video import OracleEmbedder, VideoWorld, WorldConfig
+
+
+# ---------------------------------------------------------------------------
+# scene segmentation
+# ---------------------------------------------------------------------------
+
+
+def test_segment_boundaries_at_threshold():
+    phi = jnp.asarray([0.0, 0.01, 0.5, 0.02, 0.02, 0.9, 0.01])
+    boundary, part_id, carry = segment(phi, threshold=0.1,
+                                       max_partition_len=100)
+    assert np.asarray(boundary).tolist() == [True, False, True, False,
+                                             False, True, False]
+    assert np.asarray(part_id).tolist() == [0, 0, 1, 1, 1, 2, 2]
+
+
+def test_segment_max_partition_rule():
+    phi = jnp.zeros((10,))
+    boundary, part_id, _ = segment(phi, threshold=0.5, max_partition_len=4)
+    # static stream still cuts every max_partition_len frames
+    assert np.asarray(part_id).max() >= 1
+
+
+def test_stream_segmenter_matches_world_scenes():
+    world = VideoWorld(WorldConfig(n_scenes=6, seed=1))
+    seg = StreamSegmenter(threshold=0.075, max_partition_len=512)
+    parts = []
+    for i in range(0, world.total_frames, 50):
+        parts += seg.ingest(jnp.asarray(world.frames[i:i + 50]))
+    parts += seg.flush()
+    starts = sorted(p.start for p in parts)
+    true_starts = sorted(s.start for s in world.scenes)
+    assert starts == true_starts
+    assert parts[-1].end == world.total_frames
+
+
+def test_stream_segmenter_chunk_invariance():
+    world = VideoWorld(WorldConfig(n_scenes=4, seed=2))
+    def run(chunk):
+        seg = StreamSegmenter(threshold=0.075, max_partition_len=512)
+        out = []
+        for i in range(0, world.total_frames, chunk):
+            out += seg.ingest(jnp.asarray(world.frames[i:i + chunk]))
+        out += seg.flush()
+        return [(p.start, p.end) for p in out]
+    assert run(17) == run(64)
+
+
+# ---------------------------------------------------------------------------
+# clustering
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_partition_groups_similar_frames():
+    rng = np.random.default_rng(0)
+    a = rng.random((1, 8)) + np.zeros((5, 8))
+    b = rng.random((1, 8)) + 5.0 + np.zeros((4, 8))
+    vecs = jnp.asarray(np.concatenate([a, b]) +
+                       rng.normal(0, 0.01, (9, 8)))
+    res = cluster_partition(vecs, threshold=1.0, max_clusters=8)
+    assert int(res.n_clusters) == 2
+    assign = np.asarray(res.assignments)
+    assert len(set(assign[:5])) == 1 and len(set(assign[5:])) == 1
+    assert assign[0] != assign[5]
+    # index frames are members of their clusters
+    for c in range(2):
+        idx = int(res.index_frames[c])
+        assert assign[idx] == c
+
+
+def test_cluster_every_frame_assigned_and_within_capacity():
+    vecs = jax.random.normal(jax.random.key(0), (33, 16)) * 10
+    res = cluster_partition(vecs, threshold=0.1, max_clusters=4)
+    assign = np.asarray(res.assignments)
+    assert ((assign >= 0) & (assign < 4)).all()
+    assert int(res.n_clusters) <= 4
+    assert int(np.asarray(res.counts).sum()) == 33
+
+
+def test_frame_vectors_pooling():
+    frames = jnp.ones((3, 16, 16, 3))
+    v = frame_vectors(frames, pool=8)
+    assert v.shape == (3, 2 * 2 * 3)
+    np.testing.assert_allclose(np.asarray(v), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# memory
+# ---------------------------------------------------------------------------
+
+
+def test_memory_insert_search_roundtrip():
+    mem = VenusMemory(capacity=64, dim=8, member_cap=16)
+    e0 = np.eye(8, dtype=np.float32)[0]
+    e1 = np.eye(8, dtype=np.float32)[1]
+    i0 = mem.insert_cluster(e0, scene_id=0, index_frame=3,
+                            member_frames=[0, 1, 2, 3])
+    i1 = mem.insert_cluster(e1, scene_id=1, index_frame=7,
+                            member_frames=[5, 6, 7])
+    sims, probs = mem.search(jnp.asarray(e0)[None], tau=0.05)
+    s = np.asarray(sims[0])
+    assert s[i0] > 0.99 and abs(s[i1]) < 1e-5
+    p = np.asarray(probs[0])
+    assert p[:2].sum() > 0.999 and p[i0] > 0.99
+
+
+def test_memory_member_reservoir_bounded():
+    mem = VenusMemory(capacity=4, dim=4, member_cap=8)
+    i = mem.insert_cluster(np.ones(4, np.float32), scene_id=0,
+                           index_frame=0, member_frames=list(range(100)))
+    frames = mem.expand_draws(np.asarray([i] * 20), np.ones(20, bool))
+    assert len(frames) <= 8
+    assert all(0 <= f < 100 for f in frames)
+
+
+def test_memory_capacity_guard():
+    mem = VenusMemory(capacity=1, dim=4)
+    mem.insert_cluster(np.ones(4, np.float32), scene_id=0, index_frame=0,
+                       member_frames=[0])
+    with pytest.raises(RuntimeError):
+        mem.insert_cluster(np.ones(4, np.float32), scene_id=0,
+                           index_frame=1, member_frames=[1])
+
+
+def test_frame_store():
+    fs = FrameStore()
+    fs.append(np.zeros((3, 4, 4, 3)))
+    fs.append(np.ones((2, 4, 4, 3)))
+    assert len(fs) == 5
+    got = fs.get([0, 4])
+    assert got.shape == (2, 4, 4, 3)
+    assert got[1].max() == 1.0
+
+
+# ---------------------------------------------------------------------------
+# retrieval: Venus sampling vs Top-K (the paper's Fig. 5/10 claim)
+# ---------------------------------------------------------------------------
+
+
+def test_sampling_covers_dispersed_modes_topk_does_not():
+    """Two relevant regions: one slightly stronger. Top-K (k=4) collapses
+    onto the stronger one; sampling covers both (diversity)."""
+    cap = 32
+    sims = np.full((cap,), 0.1, np.float32)
+    sims[0:4] = 0.95          # region A (stronger)
+    sims[20:24] = 0.90        # region B
+    valid = jnp.ones((cap,), bool)
+    topk = np.asarray(rt.topk_retrieve(jnp.asarray(sims), valid, 4))
+    assert set(topk).issubset(set(range(0, 4)))          # collapsed
+    probs = jax.nn.softmax(jnp.where(valid, jnp.asarray(sims) / 0.05,
+                                     -1e30))
+    draws, counts = rt.sampling_retrieve(probs, jax.random.key(0), 16)
+    picked = set(np.asarray(draws).tolist())
+    assert picked & set(range(0, 4))
+    assert picked & set(range(20, 24))                   # B covered too
+
+
+def test_akr_narrow_vs_dispersed_budgets():
+    """Peaked P ⇒ few draws; dispersed P ⇒ more draws (paper Fig. 9)."""
+    cap = 64
+    peaked = np.full((cap,), 1e-6, np.float32)
+    peaked[5] = 1.0
+    peaked /= peaked.sum()
+    res_p = rt.akr_progressive(jnp.asarray(peaked), jax.random.key(0),
+                               theta=0.9, n_max=32)
+    dispersed = np.full((cap,), 1e-6, np.float32)
+    dispersed[:16] = 1.0 / 16
+    dispersed /= dispersed.sum()
+    res_d = rt.akr_progressive(jnp.asarray(dispersed), jax.random.key(0),
+                               theta=0.9, n_max=32)
+    assert int(res_p.n_drawn) <= 3
+    assert int(res_d.n_drawn) > int(res_p.n_drawn)
+    assert float(res_d.mass) >= 0.9 or int(res_d.n_drawn) == 32
+
+
+def test_end_to_end_oracle_world_coverage():
+    world = VideoWorld(WorldConfig(n_scenes=8, seed=3))
+    oe = OracleEmbedder(world, dim=64)
+    system = VenusSystem(VenusConfig(), oe, embed_dim=64)
+    for i in range(0, world.total_frames, 64):
+        system.ingest(world.frames[i:i + 64])
+    system.flush()
+    assert system.stats["partitions"] == len(world.scenes)
+    # far fewer embeddings than frames (the paper's ingestion claim)
+    assert system.stats["frames_embedded"] < 0.25 * world.total_frames
+    covs = []
+    for q in world.make_queries(6, seed=9):
+        qe = oe.embed_query(q)
+        res = system.query(q.text, query_emb=qe)
+        hit = {int(world.scene_of_frame[f]) for f in res.frame_ids}
+        rel = set(q.relevant_scenes)
+        covs.append(len(rel & hit) / len(rel))
+    # absolute floor; the sampling-vs-Top-K relative claim is exercised on
+    # the dense (vanilla) index in test_sampling_covers_dispersed_modes and
+    # benchmarks/bench_fig10 — on a ~13-cluster index Top-K is trivially
+    # diverse (Venus's own clustering removes the redundancy that breaks
+    # greedy selection; see DESIGN.md)
+    assert np.mean(covs) >= 0.6
