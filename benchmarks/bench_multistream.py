@@ -1,0 +1,201 @@
+"""Multi-session Venus: batched multi-stream ingest + batched querying.
+
+The edge box serves N concurrent camera streams with real-time queries
+(the ROADMAP's multi-tenant scenario). This bench measures, on CPU:
+
+* **ingest** — N sessions driven tick-by-tick through the
+  ``SessionManager`` (ONE batched MEM call per tick across all streams)
+  vs N independent single-stream ``VenusSystem`` instances ingested
+  sequentially (per-partition embed calls — the seed path).
+* **query** — Q queries per session through ``query_batch`` (one
+  similarity scan + vmapped AKR) vs Q sequential ``query`` calls.
+* **post-ingest query latency** — the device-resident incrementally
+  updated index vs the seed behaviour (every insert invalidates the
+  device cache, forcing a full ``(capacity, dim)`` host→device
+  re-upload before the next scan).
+
+Usage:  PYTHONPATH=src python -m benchmarks.run --only multistream
+   (or  PYTHONPATH=src python benchmarks/bench_multistream.py)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict
+
+if __package__ in (None, ""):               # direct-script invocation
+    sys.path.insert(0, ".")
+    sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.memory import VenusMemory
+from repro.core.pipeline import VenusConfig, VenusSystem
+from repro.core.session import SessionManager
+from repro.data.video import (OracleEmbedder, PixelEmbedder, VideoWorld,
+                              WorldConfig)
+
+
+def _bench_ingest(n_sessions: int, chunk: int = 64):
+    """Batched multi-stream ingest vs sequential single-stream ingest.
+
+    Uses the REAL dual-tower MEM (the paper's ingestion hot spot): the
+    win comes from one jit'd MEM call per tick over every stream's
+    closed centroids instead of one call per partition per stream."""
+    import jax
+    from repro.configs.venus_mem import small_config
+    from repro.models.mem import MEM
+
+    worlds = [VideoWorld(WorldConfig(n_scenes=4, seed=20 + s))
+              for s in range(n_sessions)]
+    n_frames = min(w.total_frames for w in worlds)
+    cfg = VenusConfig()
+    mem_cfg = small_config()
+    mem = MEM(mem_cfg)
+    from repro.core.pipeline import MEMEmbedder
+    embedder = MEMEmbedder(mem, mem.init(jax.random.key(0)))
+    dim = mem_cfg.embed_dim
+
+    def run_batched():
+        mgr = SessionManager(cfg, embedder, embed_dim=dim)
+        sids = [mgr.create_session() for _ in range(n_sessions)]
+        agg: Dict[str, float] = {}
+        for i in range(0, n_frames, chunk):
+            t = mgr.ingest_tick({sid: w.frames[i:i + chunk]
+                                 for sid, w in zip(sids, worlds)})
+            for k, v in t.items():
+                agg[k] = agg.get(k, 0.0) + v
+        mgr.flush()
+        return agg
+
+    def run_sequential():
+        systems = [VenusSystem(cfg, embedder, embed_dim=dim)
+                   for _ in range(n_sessions)]
+        for sys_, w in zip(systems, worlds):
+            for i in range(0, n_frames, chunk):
+                sys_.ingest(w.frames[i:i + chunk])
+            sys_.flush()
+
+    run_batched()           # warm the jit caches (scene/cluster/embed)
+    run_sequential()        # the seed path shares most of them
+    t0 = time.perf_counter()
+    agg = run_batched()
+    batched_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    run_sequential()
+    sequential_s = time.perf_counter() - t0
+
+    total = n_frames * n_sessions
+    emit("multistream/ingest_batched", batched_s,
+         {"sessions": n_sessions, "frames": total,
+          "fps": f"{total / batched_s:.0f}",
+          "segment_s": f"{agg.get('segment', 0):.3f}",
+          "cluster_s": f"{agg.get('cluster', 0):.3f}",
+          "embed_insert_s": f"{agg.get('embed_insert', 0):.3f}"})
+    emit("multistream/ingest_sequential", sequential_s,
+         {"sessions": n_sessions, "fps": f"{total / sequential_s:.0f}",
+          "speedup": f"{sequential_s / batched_s:.2f}x"})
+
+
+def _bench_query(n_sessions: int, n_queries: int, chunk: int = 64):
+    """Batched query path vs sequential, same keys → same results."""
+    worlds = [VideoWorld(WorldConfig(n_scenes=6, seed=20 + s))
+              for s in range(n_sessions)]
+    n_frames = min(w.total_frames for w in worlds)
+    mgr = SessionManager(VenusConfig(), PixelEmbedder(dim=64),
+                         embed_dim=64)
+    sids = [mgr.create_session() for _ in range(n_sessions)]
+    for i in range(0, n_frames, chunk):
+        mgr.ingest_tick({sid: w.frames[i:i + chunk]
+                         for sid, w in zip(sids, worlds)})
+    mgr.flush()
+
+    oracle_qs = {sid: OracleEmbedder(w, dim=64).embed_queries(
+        w.make_queries(n_queries, seed=31))
+        for sid, w in zip(sids, worlds)}
+
+    # warm both query paths (vmapped AKR + scalar AKR compiles)
+    mgr.query_batch(sids[0], query_embs=oracle_qs[sids[0]])
+    mgr.query(sids[0], "", query_emb=oracle_qs[sids[0]][0])
+
+    t0 = time.perf_counter()
+    n_frames_batched = 0
+    timings: Dict[str, float] = {}
+    for sid in sids:
+        results = mgr.query_batch(sid, query_embs=oracle_qs[sid])
+        n_frames_batched += sum(len(r.frame_ids) for r in results)
+        for k, v in results[0].timings.items():
+            timings[k] = timings.get(k, 0.0) + v
+    batched_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for sid in sids:
+        for qe in oracle_qs[sid]:
+            mgr.query(sid, "", query_emb=qe)
+    sequential_s = time.perf_counter() - t0
+
+    nq = len(sids) * n_queries
+    emit("multistream/query_batched", batched_s,
+         {"sessions": len(sids), "queries": nq,
+          "qps": f"{nq / batched_s:.1f}",
+          "frames_retrieved": n_frames_batched,
+          **{f"{k}_s": f"{v:.4f}" for k, v in timings.items()}})
+    emit("multistream/query_sequential", sequential_s,
+         {"qps": f"{nq / sequential_s:.1f}",
+          "speedup": f"{sequential_s / batched_s:.2f}x"})
+
+
+def _bench_incremental_index(capacity: int = 16384, dim: int = 256,
+                             rounds: int = 20):
+    """Post-ingest query latency: incremental append vs full re-upload."""
+    rng = np.random.default_rng(0)
+    base = rng.normal(0, 1, (capacity // 4, dim)).astype(np.float32)
+    q = rng.normal(0, 1, (1, dim)).astype(np.float32)
+
+    out = {}
+    for name, incremental in (("incremental", True), ("seed_reupload",
+                                                      False)):
+        mem = VenusMemory(capacity, dim, member_cap=8,
+                          incremental=incremental)
+        mem.insert_batch(base, scene_ids=[0] * len(base),
+                         index_frames=list(range(len(base))),
+                         member_lists=[[i] for i in range(len(base))])
+        mem.search(jnp.asarray(q), tau=0.1)      # warm: index on device
+
+        def step(r):
+            rows = rng.normal(0, 1, (8, dim)).astype(np.float32)
+            lo = mem.size
+            mem.insert_batch(rows, scene_ids=[1] * 8,
+                             index_frames=list(range(lo, lo + 8)),
+                             member_lists=[[i] for i in range(lo, lo + 8)])
+            _, p = mem.search(jnp.asarray(q), tau=0.1)
+            np.asarray(p)                         # block
+        step(-1)                                  # warm the append jit
+        t0 = time.perf_counter()
+        for r in range(rounds):
+            step(r)
+        out[name] = (time.perf_counter() - t0) / rounds
+        emit(f"multistream/post_ingest_query_{name}", out[name],
+             {"full_uploads": mem.io_stats["full_uploads"],
+              "appended_rows": mem.io_stats["appended_rows"]})
+    emit("multistream/post_ingest_query_speedup", 0.0,
+         {"speedup": f"{out['seed_reupload'] / out['incremental']:.2f}x"})
+
+
+def run(n_sessions: int = 4, n_queries: int = 8) -> None:
+    assert n_sessions >= 4, "multi-tenant scenario needs ≥4 sessions"
+    _bench_ingest(n_sessions)
+    _bench_query(n_sessions, n_queries)
+    _bench_incremental_index()
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sessions", type=int, default=4)
+    ap.add_argument("--queries", type=int, default=8)
+    args = ap.parse_args()
+    run(args.sessions, args.queries)

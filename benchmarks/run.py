@@ -12,7 +12,8 @@ import traceback
 
 from benchmarks import (bench_akr_scaling, bench_fig10, bench_fig11,
                         bench_fig12, bench_ingestion, bench_kernels,
-                        bench_table1, bench_table2, roofline)
+                        bench_multistream, bench_table1, bench_table2,
+                        roofline)
 
 SUITES = {
     "fig4": bench_ingestion.run,       # embedding latency vs FPS
@@ -24,6 +25,7 @@ SUITES = {
     "akr_scaling": bench_akr_scaling.run,  # beyond-paper: tau/theta sweep
     "kernels": bench_kernels.run,      # kernel microbench
     "roofline": roofline.run,          # dry-run roofline terms
+    "multistream": bench_multistream.run,  # sessions×queries throughput
 }
 
 

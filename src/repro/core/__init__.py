@@ -4,3 +4,7 @@ from repro.core.pipeline import (  # noqa: F401
     VenusConfig,
     VenusSystem,
 )
+from repro.core.session import (  # noqa: F401
+    SessionManager,
+    SessionState,
+)

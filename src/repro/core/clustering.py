@@ -21,6 +21,8 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.util import pow2_bucket
+
 
 def frame_vectors(frames: jnp.ndarray, pool: int = 8) -> jnp.ndarray:
     """(T,H,W,3) -> (T, d) pooled+flattened pixel vectors (the paper's
@@ -40,13 +42,6 @@ class ClusterResult(NamedTuple):
     index_frames: jnp.ndarray      # (K_max,) member idx closest to centroid
 
 
-def _next_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
-
-
 def cluster_partition(vecs: jnp.ndarray, *, threshold: float,
                       max_clusters: int) -> ClusterResult:
     """vecs: (T, d) frame vectors of one partition.
@@ -55,7 +50,7 @@ def cluster_partition(vecs: jnp.ndarray, *, threshold: float,
     distinct shapes instead of one per partition length (online
     partitions have arbitrary lengths)."""
     t = vecs.shape[0]
-    tp = _next_pow2(t)
+    tp = pow2_bucket(t)
     padded = jnp.pad(vecs, ((0, tp - t), (0, 0)))
     n_valid = jnp.asarray(t, jnp.int32)
     res = _cluster_padded(padded, n_valid, threshold=float(threshold),

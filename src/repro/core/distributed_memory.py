@@ -18,6 +18,11 @@ Exactness: softmax probabilities of the true global top-(≤M) survivors
 are identical to the dense computation restricted to them; AKR's mass
 accounting is conservative (it can only under-count tail mass it would
 never have sampled at θ ≤ the candidate mass).
+
+Ingestion is batched: a block of rows is round-robined across shards
+with ONE scatter per insert call (no per-row ``.at[pos].set``), and the
+global-id → insert-order translation after search is a vectorised
+device op rather than a per-candidate host loop.
 """
 
 from __future__ import annotations
@@ -30,6 +35,11 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.kernels import ops as kops
+
+try:                                   # jax ≥0.5 re-exports at top level
+    _shard_map = jax.shard_map
+except AttributeError:                 # jax ≤0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 
 @functools.partial(jax.jit, static_argnames=("top_m", "mesh", "mesh_axis"))
@@ -51,14 +61,22 @@ def _sharded_scan(query: jnp.ndarray, index: jnp.ndarray,
         # (K·M,) arrays — the all-gather happens at the consumer
         return top_s, gids
 
-    return jax.shard_map(
+    return _shard_map(
         local, mesh=mesh,
         in_specs=(P(), P(mesh_axis, None), P(mesh_axis)),
         out_specs=(P(mesh_axis), P(mesh_axis)))(query, index, valid)
 
 
+@jax.jit
+def _scatter_rows(emb: jnp.ndarray, valid: jnp.ndarray,
+                  rows: jnp.ndarray, pos: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One batched scatter of ``rows`` into slots ``pos`` (+ validity)."""
+    return (emb.at[pos].set(rows), valid.at[pos].set(True))
+
+
 class DistributedVenusMemory:
-    """Pod-resident index: insert on host, retrieve via shard_map."""
+    """Pod-resident index: batched host inserts, shard_map retrieval."""
 
     def __init__(self, capacity: int, dim: int, mesh, *,
                  mesh_axis: str = "model", top_m: int = 64):
@@ -77,28 +95,34 @@ class DistributedVenusMemory:
     def size(self) -> int:
         return self._size
 
+    @property
+    def _shards(self) -> int:
+        return dict(self.mesh.shape)[self.mesh_axis]
+
     def insert(self, embeddings) -> None:
         """Append a batch of indexed vectors (host-side, like FAISS add).
 
-        Round-robins rows across shards so load stays balanced."""
+        Round-robins rows across shards so load stays balanced; the whole
+        block lands in one scatter instead of a per-row update loop."""
         embeddings = jnp.asarray(embeddings, jnp.float32)
         n = embeddings.shape[0]
         if self._size + n > self.capacity:
             raise RuntimeError("distributed memory capacity exhausted")
-        k = dict(self.mesh.shape)[self.mesh_axis]
+        k = self._shards
         per = self.capacity // k
-        for row in embeddings:      # slot s -> shard s%k, offset size//k
-            s = self._size
-            pos = (s % k) * per + s // k
-            self._emb = self._emb.at[pos].set(row)
-            self._valid = self._valid.at[pos].set(True)
-            self._size += 1
+        s = self._size + jnp.arange(n)             # insert orders
+        pos = (s % k) * per + s // k               # slot of each row
+        self._emb, self._valid = _scatter_rows(self._emb, self._valid,
+                                               embeddings, pos)
+        self._size += n
+
+    def insert_orders(self, gids: jnp.ndarray) -> jnp.ndarray:
+        """Vectorised global-id → insert-order translation (device op)."""
+        per = self.capacity // self._shards
+        return (gids % per) * self._shards + gids // per
 
     def global_id_to_insert_order(self, gid: int) -> int:
-        k = dict(self.mesh.shape)[self.mesh_axis]
-        per = self.capacity // k
-        shard, off = divmod(int(gid), per)
-        return off * k + shard
+        return int(self.insert_orders(jnp.asarray(int(gid))))
 
     def search(self, query_emb, *, tau: float
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -110,6 +134,4 @@ class DistributedVenusMemory:
             mesh_axis=self.mesh_axis)
         logits = jnp.where(jnp.isfinite(scores), scores / tau, -1e30)
         probs = jax.nn.softmax(logits)
-        ids = jnp.asarray([self.global_id_to_insert_order(g)
-                           for g in jax.device_get(gids)])
-        return ids, probs
+        return self.insert_orders(gids), probs

@@ -12,14 +12,19 @@
   "uniformly sample n(oᵢ) frames from cluster c(oᵢ)" (§IV-D1) stays a
   fixed-shape gather.
 
-Inserts are cheap O(K·d) host-side appends (as in FAISS); the query-path
-similarity scan is the jit/Pallas hot path.
+The index is **device-resident and incrementally updated**: the first
+query uploads the packed array once; afterwards batched inserts append
+rows in place with a jit'd ``dynamic_update_slice`` (bucketed batch
+sizes bound the jit cache), so a post-ingest query never re-transfers
+the whole ``(capacity, dim)`` buffer. ``io_stats`` counts full uploads
+vs appended rows so tests/benches can assert the transfer behaviour.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+import functools
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,14 +57,31 @@ class IndexEntry:
     ts: int                      # timestamp (frame index) of indexed frame
 
 
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def _valid_mask(size: jnp.ndarray, *, capacity: int) -> jnp.ndarray:
+    return jnp.arange(capacity) < size
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _append_rows(emb: jnp.ndarray, rows: jnp.ndarray,
+                 pos: jnp.ndarray) -> jnp.ndarray:
+    """Append a row block at ``pos``. The index buffer is donated, so
+    XLA updates it in place — O(rows) bytes moved, not O(capacity)."""
+    return jax.lax.dynamic_update_slice(emb, rows, (pos, 0))
+
+
+from repro.util import pow2_bucket
+
+
 class VenusMemory:
     """Index layer: packed vector store + cluster member reservoirs."""
 
     def __init__(self, capacity: int, dim: int, member_cap: int = 128,
-                 seed: int = 0):
+                 seed: int = 0, *, incremental: bool = True):
         self.capacity = capacity
         self.dim = dim
         self.member_cap = member_cap
+        self.incremental = incremental
         self._emb = np.zeros((capacity, dim), np.float32)
         self._members = np.zeros((capacity, member_cap), np.int32)
         self._member_count = np.zeros((capacity,), np.int32)
@@ -67,30 +89,65 @@ class VenusMemory:
         self._scene_id = np.zeros((capacity,), np.int32)
         self._size = 0
         self._rng = np.random.default_rng(seed)
-        self._device_cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
+        self._emb_dev: Optional[jnp.ndarray] = None
+        self.io_stats = {"full_uploads": 0, "appended_rows": 0}
 
     # ------------------------------------------------------------- ingestion
     def insert_cluster(self, embedding: np.ndarray, *, scene_id: int,
                        index_frame: int, member_frames: Sequence[int]
                        ) -> int:
         """Insert one indexed vector linked to its cluster members."""
-        if self._size >= self.capacity:
+        return int(self.insert_batch(
+            np.asarray(embedding, np.float32)[None],
+            scene_ids=[scene_id], index_frames=[index_frame],
+            member_lists=[member_frames])[0])
+
+    def insert_batch(self, embeddings: np.ndarray, *,
+                     scene_ids: Sequence[int],
+                     index_frames: Sequence[int],
+                     member_lists: Sequence[Sequence[int]]) -> np.ndarray:
+        """Insert a batch of indexed vectors in one shot.
+
+        Host mirrors are written vectorised; if the device copy exists it
+        is extended in place with a single jit'd row-block append (no
+        cache invalidation / full re-upload).
+        """
+        embeddings = np.asarray(embeddings, np.float32)
+        n = embeddings.shape[0]
+        assert n == len(scene_ids) == len(index_frames) == len(member_lists)
+        if self._size + n > self.capacity:
             raise RuntimeError("memory capacity exhausted")
-        i = self._size
-        self._emb[i] = np.asarray(embedding, np.float32)
-        members = np.asarray(member_frames, np.int32)
-        m = len(members)
-        if m > self.member_cap:            # uniform reservoir
-            keep = self._rng.choice(m, self.member_cap, replace=False)
-            members = members[np.sort(keep)]
-            m = self.member_cap
-        self._members[i, :m] = members
-        self._member_count[i] = m
-        self._index_frame[i] = index_frame
-        self._scene_id[i] = scene_id
-        self._size += 1
-        self._device_cache = None
-        return i
+        lo = self._size
+        self._emb[lo:lo + n] = embeddings
+        self._index_frame[lo:lo + n] = np.asarray(index_frames, np.int32)
+        self._scene_id[lo:lo + n] = np.asarray(scene_ids, np.int32)
+        for j, member_frames in enumerate(member_lists):
+            members = np.asarray(member_frames, np.int32)
+            m = len(members)
+            if m > self.member_cap:            # uniform reservoir
+                keep = self._rng.choice(m, self.member_cap, replace=False)
+                members = members[np.sort(keep)]
+                m = self.member_cap
+            self._members[lo + j, :m] = members
+            self._member_count[lo + j] = m
+        self._size += n
+        self._sync_device(lo, n)
+        return np.arange(lo, lo + n)
+
+    def _sync_device(self, lo: int, n: int) -> None:
+        if self._emb_dev is None:
+            return                       # lazy: first query uploads once
+        if not self.incremental:
+            self._emb_dev = None         # seed behaviour: full re-upload
+            return
+        # bucket the row count (bounds jit specialisations); padded rows
+        # land past the valid region and are overwritten by later appends
+        b = min(pow2_bucket(n, lo=8), self.capacity - lo)
+        rows = np.zeros((b, self.dim), np.float32)
+        rows[:n] = self._emb[lo:lo + n]
+        self._emb_dev = _append_rows(self._emb_dev, jnp.asarray(rows),
+                                     jnp.asarray(lo, jnp.int32))
+        self.io_stats["appended_rows"] += b
 
     # ----------------------------------------------------------------- query
     @property
@@ -98,12 +155,18 @@ class VenusMemory:
         return self._size
 
     def device_index(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """(embeddings (cap, d), valid (cap,)) as device arrays (cached)."""
-        if self._device_cache is None:
-            valid = np.arange(self.capacity) < self._size
-            self._device_cache = (jnp.asarray(self._emb),
-                                  jnp.asarray(valid))
-        return self._device_cache
+        """(embeddings (cap, d), valid (cap,)) as device arrays.
+
+        First call uploads the packed host array once; subsequent inserts
+        keep the device copy current via ``_append_rows``. NOTE: inserts
+        DONATE the current buffer to the in-place append, so a handle
+        returned here is invalidated by the next insert — re-call this
+        method after inserting rather than holding the arrays."""
+        if self._emb_dev is None:
+            self._emb_dev = jnp.asarray(self._emb)
+            self.io_stats["full_uploads"] += 1
+        return self._emb_dev, _valid_mask(jnp.asarray(self._size, jnp.int32),
+                                          capacity=self.capacity)
 
     def search(self, query_emb: jnp.ndarray, *, tau: float
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -118,17 +181,53 @@ class VenusMemory:
     def expand_draws(self, draws: np.ndarray, valid: np.ndarray,
                      seed: int = 0) -> np.ndarray:
         """Map index draws to frame ids: each draw of index i samples one
-        member uniformly from cluster c(oᵢ) (paper §IV-D1). Returns the
-        deduplicated, time-ordered frame ids."""
+        member uniformly from cluster c(oᵢ) (paper §IV-D1). Vectorised
+        fixed-shape gather over the members table — one uniform variate
+        is consumed per slot (valid or not) so batched and sequential
+        paths agree. Returns the deduplicated, time-ordered frame ids."""
+        draws = np.atleast_1d(np.asarray(draws))
+        valid = np.atleast_1d(np.asarray(valid, bool))
+        u = np.random.default_rng(seed).random(draws.shape)
+        return self._expand_u(draws, valid, u)
+
+    def expand_draws_batch(self, draws: np.ndarray, valid: np.ndarray,
+                           seed: int = 0) -> List[np.ndarray]:
+        """Batched expansion: draws/valid (Q, n). Each row consumes the
+        same per-slot variate sequence as a sequential ``expand_draws``
+        call with the same seed, so results match query-for-query."""
+        draws = np.asarray(draws)
+        valid = np.asarray(valid, bool)
+        q, n = draws.shape
+        u = np.broadcast_to(np.random.default_rng(seed).random(n), (q, n))
+        fids, ok = self._expand_u(draws, valid, u, dedup=False)
+        return [np.unique(fids[i][ok[i]]) for i in range(q)]
+
+    def _expand_u(self, draws, valid, u, dedup: bool = True):
+        safe = np.clip(draws, 0, self.capacity - 1)
+        cnt = self._member_count[safe]
+        pick = np.minimum((u * cnt).astype(np.int64),
+                          np.maximum(cnt - 1, 0))
+        fids = self._members[safe, pick].astype(np.int64)
+        ok = valid & (cnt > 0) & (draws >= 0)
+        if dedup:
+            return np.unique(fids[ok])
+        return fids, ok
+
+    def _expand_draws_loop(self, draws: np.ndarray, valid: np.ndarray,
+                           seed: int = 0) -> np.ndarray:
+        """Seed-style per-draw loop over the same sampling scheme —
+        reference for the vectorised path (kept for tests/benches)."""
         rng = np.random.default_rng(seed)
         out = []
         for i, ok in zip(np.asarray(draws), np.asarray(valid)):
-            if not ok:
+            u = rng.random()
+            if not ok or i < 0:
                 continue
-            cnt = int(self._member_count[i])
+            cnt = int(self._member_count[int(i)])
             if cnt == 0:
                 continue
-            out.append(int(self._members[i, rng.integers(cnt)]))
+            out.append(int(self._members[int(i), min(int(u * cnt),
+                                                     cnt - 1)]))
         return np.unique(np.asarray(out, np.int64))
 
     def index_frames(self, idx: Sequence[int]) -> np.ndarray:

@@ -7,31 +7,34 @@ query, similarity over the index (Eq. 4), temperature-softmax sampling or
 AKR (Eq. 5–7), expand draws into raw frames from the cluster reservoirs,
 hand the frame set to the (cloud) VLM.
 
+The stage logic lives in ``repro.core.session`` as composable per-stream
+stages driven by a ``SessionManager`` (multi-stream, batch-first).
+``VenusSystem`` is the single-stream façade over one managed session —
+the public API the examples/benchmarks were written against — and also
+exposes the batched ``query_batch``.
+
 The embedder is pluggable:
 * ``MEMEmbedder`` — the real dual-tower MEM (frontend-stub patchifier).
 * ``OracleEmbedder`` (repro.data.video) — a perfect MEM for isolating
   retrieval-algorithm quality in benchmarks.
-
-Every stage records wall-clock time into a ``LatencyBreakdown`` so the
-benchmarks reproduce the paper's Fig. 12 decomposition.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import retrieval as rt
-from repro.core.aux_models import AuxModel, build_aux_prompt
-from repro.core.clustering import cluster_partition, frame_vectors
-from repro.core.memory import FrameStore, VenusMemory
-from repro.core.scene import StreamSegmenter
+from repro.core.aux_models import AuxModel
+from repro.core.session import (QueryResult, SessionManager, SessionState,
+                                VenusConfig)
 from repro.data.text import tokenize_batch
+from repro.util import pow2_bucket
+
+__all__ = ["patchify", "MEMEmbedder", "VenusConfig", "QueryResult",
+           "VenusSystem", "SessionManager", "SessionState"]
 
 
 # ---------------------------------------------------------------------------
@@ -69,9 +72,19 @@ class MEMEmbedder:
     def embed_frames(self, frames: np.ndarray,
                      aux_texts: Optional[Sequence[str]] = None,
                      frame_ids=None) -> np.ndarray:
-        patches = patchify(np.asarray(frames), self.patch,
+        frames = np.asarray(frames)
+        n = frames.shape[0]
+        # pad the batch to a power-of-two bucket: multi-stream ticks close
+        # arbitrary numbers of clusters, and unbucketed shapes would jit-
+        # specialise the vision tower per batch size
+        bucket = pow2_bucket(n, lo=4)
+        if bucket != n:
+            frames = np.concatenate(
+                [frames, np.zeros((bucket - n,) + frames.shape[1:],
+                                  frames.dtype)])
+        patches = patchify(frames, self.patch,
                            self.mem.cfg.vision.d_model)
-        img = self._img_fn(self.params, patches)
+        img = self._img_fn(self.params, patches)[:n]
         if aux_texts and any(aux_texts):
             toks, mask = tokenize_batch(list(aux_texts),
                                         self.mem.cfg.text.vocab_size,
@@ -82,44 +95,21 @@ class MEMEmbedder:
                 np.asarray(img + 0.3 * txt), axis=-1, keepdims=True)
         return np.asarray(img, np.float32)
 
-    def embed_query(self, text: str) -> np.ndarray:
-        toks, mask = tokenize_batch([text], self.mem.cfg.text.vocab_size,
+    def embed_queries(self, texts: Sequence[str]) -> np.ndarray:
+        """Batch-encode Q query texts in one text-tower call."""
+        toks, mask = tokenize_batch(list(texts),
+                                    self.mem.cfg.text.vocab_size,
                                     self.text_max_len)
         return np.asarray(self._txt_fn(self.params, jnp.asarray(toks),
-                                       jnp.asarray(mask))[0], np.float32)
+                                       jnp.asarray(mask)), np.float32)
+
+    def embed_query(self, text: str) -> np.ndarray:
+        return self.embed_queries([text])[0]
 
 
 # ---------------------------------------------------------------------------
-# Venus system
+# Venus system — single-stream façade over one managed session
 # ---------------------------------------------------------------------------
-
-
-@dataclass(frozen=True)
-class VenusConfig:
-    # ingestion
-    scene_threshold: float = 0.075
-    max_partition_len: int = 256
-    cluster_threshold: float = 0.35
-    max_clusters_per_partition: int = 16
-    cluster_pool: int = 8
-    # memory
-    memory_capacity: int = 8192
-    member_cap: int = 128
-    # querying (Eq. 5-7)
-    tau: float = 0.1
-    theta: float = 0.9
-    beta: float = 1.0
-    n_max: int = 32
-    seed: int = 0
-
-
-@dataclass
-class QueryResult:
-    frame_ids: np.ndarray          # selected raw-frame ids (deduped)
-    draws: np.ndarray              # index draws
-    n_drawn: int
-    mass: float
-    timings: Dict[str, float]
 
 
 class VenusSystem:
@@ -128,132 +118,62 @@ class VenusSystem:
                  annotation_fn=None):
         self.cfg = cfg
         self.embedder = embedder
-        self.aux_models = list(aux_models)
-        self.annotation_fn = annotation_fn
-        self.segmenter = StreamSegmenter(
-            threshold=cfg.scene_threshold,
-            max_partition_len=cfg.max_partition_len)
-        self.memory = VenusMemory(cfg.memory_capacity, embed_dim,
-                                  cfg.member_cap, seed=cfg.seed)
-        self.frames = FrameStore()
-        self._pending: List[np.ndarray] = []   # frames not yet clustered
-        self._pending_base = 0                 # abs index of pending[0]
-        self._key = jax.random.key(cfg.seed)
-        self.stats = {"frames_seen": 0, "frames_embedded": 0,
-                      "partitions": 0, "clusters": 0}
+        self.manager = SessionManager(cfg, embedder, embed_dim,
+                                      aux_models=aux_models,
+                                      annotation_fn=annotation_fn)
+        self.sid = self.manager.create_session()
+
+    # ----------------------------------------------------- state delegation
+    @property
+    def _session(self) -> SessionState:
+        return self.manager[self.sid]
+
+    @property
+    def memory(self):
+        return self._session.memory
+
+    @property
+    def frames(self):
+        return self._session.frames
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return self._session.stats
+
+    @property
+    def segmenter(self):
+        return self._session.segmenter
 
     # ------------------------------------------------------------ ingestion
     def ingest(self, chunk: np.ndarray) -> Dict[str, float]:
         """Consume a chunk of streaming frames (T,H,W,3). Returns stage
         timings for this chunk."""
-        t0 = time.perf_counter()
-        chunk = np.asarray(chunk, np.float32)
-        self.frames.append(chunk)
-        self.stats["frames_seen"] += len(chunk)
-        closed = self.segmenter.ingest(jnp.asarray(chunk))
-        t_seg = time.perf_counter()
-
-        self._pending.extend(chunk)
-        t_clu = t_emb = 0.0
-        for part in closed:
-            tc0 = time.perf_counter()
-            lo = part.start - self._pending_base
-            hi = part.end - self._pending_base
-            pf = np.stack(self._pending[lo:hi])
-            self._ingest_partition(pf, part.start)
-            t_clu += time.perf_counter() - tc0
-        if closed:
-            consumed = closed[-1].end - self._pending_base
-            self._pending = self._pending[consumed:]
-            self._pending_base = closed[-1].end
-        return {"segment": t_seg - t0, "cluster_embed": t_clu}
+        t = self.manager.ingest_tick({self.sid: chunk})
+        return {"segment": t["segment"],
+                "cluster_embed": t["cluster"] + t["embed_insert"]}
 
     def flush(self) -> None:
-        for part in self.segmenter.flush():
-            lo = part.start - self._pending_base
-            pf = np.stack(self._pending[lo:])
-            self._ingest_partition(pf, part.start)
-        self._pending = []
-        self._pending_base = self.stats["frames_seen"]
-
-    def _ingest_partition(self, pframes: np.ndarray, abs_start: int) -> None:
-        cfg = self.cfg
-        vecs = frame_vectors(jnp.asarray(pframes), cfg.cluster_pool)
-        res = cluster_partition(vecs, threshold=cfg.cluster_threshold,
-                                max_clusters=cfg.max_clusters_per_partition)
-        n = int(res.n_clusters)
-        assign = np.asarray(res.assignments)
-        idxf = np.asarray(res.index_frames)
-        scene_id = self.stats["partitions"]
-
-        # embed all index frames of this partition in one batch
-        index_local = idxf[:n]
-        batch = pframes[index_local]
-        aux_texts = None
-        if self.aux_models and self.annotation_fn is not None:
-            aux_texts = [build_aux_prompt(
-                self.aux_models, batch[j],
-                self.annotation_fn(abs_start + int(index_local[j])))
-                for j in range(n)]
-        embs = self.embedder.embed_frames(
-            batch, aux_texts, frame_ids=abs_start + index_local)
-        self.stats["frames_embedded"] += n
-
-        for c in range(n):
-            members = abs_start + np.nonzero(assign == c)[0]
-            self.memory.insert_cluster(
-                embs[c], scene_id=scene_id,
-                index_frame=abs_start + int(index_local[c]),
-                member_frames=members)
-        self.stats["partitions"] += 1
-        self.stats["clusters"] += n
+        self.manager.flush([self.sid])
 
     # -------------------------------------------------------------- querying
     def query(self, text: str, *, budget: Optional[int] = None,
               use_akr: bool = True, query_emb: Optional[np.ndarray] = None
               ) -> QueryResult:
         """budget set ⇒ fixed-N sampling (paper §IV-D1); otherwise AKR."""
-        cfg = self.cfg
-        timings: Dict[str, float] = {}
-        t0 = time.perf_counter()
-        if query_emb is None:
-            query_emb = self.embedder.embed_query(text)
-        timings["embed_query"] = time.perf_counter() - t0
+        return self.manager.query(self.sid, text, budget=budget,
+                                  use_akr=use_akr, query_emb=query_emb)
 
-        t0 = time.perf_counter()
-        sims, probs = self.memory.search(jnp.asarray(query_emb)[None],
-                                         tau=cfg.tau)
-        probs0 = probs[0]
-        timings["similarity"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        self._key, sub = jax.random.split(self._key)
-        if budget is not None and not use_akr:
-            draws, _ = rt.sampling_retrieve(probs0, sub, budget)
-            valid = np.ones((budget,), bool)
-            n_drawn, mass = budget, float("nan")
-        else:
-            n_max = budget if budget is not None else cfg.n_max
-            res = rt.akr_progressive(probs0, sub, theta=cfg.theta,
-                                     beta=cfg.beta, n_max=n_max)
-            draws, valid = np.asarray(res.draws), np.asarray(res.valid)
-            n_drawn, mass = int(res.n_drawn), float(res.mass)
-        timings["sampling"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        frame_ids = self.memory.expand_draws(np.asarray(draws), valid,
-                                             seed=cfg.seed)
-        timings["expand"] = time.perf_counter() - t0
-        return QueryResult(frame_ids=frame_ids, draws=np.asarray(draws),
-                           n_drawn=n_drawn, mass=mass, timings=timings)
+    def query_batch(self, texts: Optional[Sequence[str]] = None, *,
+                    query_embs: Optional[np.ndarray] = None,
+                    budget: Optional[int] = None, use_akr: bool = True
+                    ) -> List[QueryResult]:
+        """Q queries through one similarity scan + vmapped sampling."""
+        return self.manager.query_batch(self.sid, texts,
+                                        query_embs=query_embs,
+                                        budget=budget, use_akr=use_akr)
 
     # baselines share the same memory/index ---------------------------------
     def query_topk(self, text: str, k: int,
                    query_emb: Optional[np.ndarray] = None) -> np.ndarray:
-        if query_emb is None:
-            query_emb = self.embedder.embed_query(text)
-        sims, _ = self.memory.search(jnp.asarray(query_emb)[None],
-                                     tau=self.cfg.tau)
-        valid = jnp.arange(self.memory.capacity) < self.memory.size
-        idx = rt.topk_retrieve(sims[0], valid, k)
-        return self.memory.index_frames(np.asarray(idx))
+        return self.manager.query_topk(self.sid, text, k,
+                                       query_emb=query_emb)

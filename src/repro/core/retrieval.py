@@ -39,6 +39,14 @@ def sampling_retrieve(probs: jnp.ndarray, key, n: int
     return draws.astype(jnp.int32), counts
 
 
+@functools.partial(jax.jit, static_argnames=("n",))
+def sampling_retrieve_batch(probs: jnp.ndarray, keys, n: int
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Vectorised over queries: probs (Q, cap) + keys (Q,) — each lane
+    draws exactly what ``sampling_retrieve`` would with its key."""
+    return jax.vmap(lambda p, k: sampling_retrieve(p, k, n))(probs, keys)
+
+
 # ---------------------------------------------------------------------------
 # Venus: adaptive keyframe retrieval (Eq. 6 / 7)
 # ---------------------------------------------------------------------------
@@ -90,6 +98,19 @@ def akr_progressive(probs: jnp.ndarray, key, *, theta: float = 0.9,
     _, draws, _, n, mass = jax.lax.while_loop(cond, body, state)
     valid = jnp.arange(n_max) < n
     return AKRResult(draws, valid, n, mass, n_min)
+
+
+@functools.partial(jax.jit, static_argnames=("n_max",))
+def akr_progressive_batch(probs: jnp.ndarray, keys, *, theta: float = 0.9,
+                          beta: float = 1.0, n_max: int = 32) -> AKRResult:
+    """Vectorised AKR over Q queries: probs (Q, cap) + keys (Q,).
+
+    ``vmap`` of the ``while_loop`` runs until every lane terminates but
+    masks per-lane updates, so each lane's draws/mass are identical to a
+    sequential ``akr_progressive`` call with the same key."""
+    fn = lambda p, k: akr_progressive(p, k, theta=theta, beta=beta,
+                                      n_max=n_max)
+    return jax.vmap(fn)(probs, keys)
 
 
 # ---------------------------------------------------------------------------

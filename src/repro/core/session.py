@@ -1,0 +1,348 @@
+"""Session layer: multi-stream, batch-first Venus (paper Fig. 6 at scale).
+
+The monolithic single-stream system is decomposed into composable
+per-stream stages operating on a ``SessionState``:
+
+* ``segment_stage``   — chunk → closed scene partitions (①),
+* ``cluster_stage``   — one closed partition → an ``EmbedJob`` holding
+  its centroid index frames + cluster membership (②–③),
+* ``commit_jobs``     — ALL embed jobs closed in one tick, across every
+  session, concatenated into a SINGLE jit'd MEM call, then scattered
+  into each session's device-resident memory with batched appends (④).
+
+``SessionManager`` owns N concurrent streams (the edge box's cameras)
+and drives the stages; ``query_batch`` runs Q queries through ONE
+similarity scan (the Pallas kernel already takes ``(Q, d)``), a vmapped
+sampling/AKR pass, and one vectorised cluster expansion — matching the
+sequential ``query`` path result-for-result while amortising every
+device round-trip across the batch.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import retrieval as rt
+from repro.core.aux_models import AuxModel, build_aux_prompt
+from repro.core.clustering import cluster_partition, frame_vectors
+from repro.core.memory import FrameStore, VenusMemory
+from repro.core.scene import Partition, StreamSegmenter
+
+
+@dataclass(frozen=True)
+class VenusConfig:
+    # ingestion
+    scene_threshold: float = 0.075
+    max_partition_len: int = 256
+    cluster_threshold: float = 0.35
+    max_clusters_per_partition: int = 16
+    cluster_pool: int = 8
+    # memory
+    memory_capacity: int = 8192
+    member_cap: int = 128
+    # querying (Eq. 5-7)
+    tau: float = 0.1
+    theta: float = 0.9
+    beta: float = 1.0
+    n_max: int = 32
+    seed: int = 0
+
+
+@dataclass
+class QueryResult:
+    frame_ids: np.ndarray          # selected raw-frame ids (deduped)
+    draws: np.ndarray              # index draws
+    n_drawn: int
+    mass: float
+    timings: Dict[str, float]
+
+
+@dataclass
+class EmbedJob:
+    """One closed partition's centroid frames awaiting MEM embedding."""
+    sid: int
+    scene_id: int
+    frames: np.ndarray                       # (n, H, W, 3) index frames
+    frame_ids: np.ndarray                    # (n,) absolute frame ids
+    member_lists: List[np.ndarray]           # per-cluster member frame ids
+    aux_texts: Optional[List[str]]
+
+
+class SessionState:
+    """Per-stream state: segmenter, pending buffer, archive, memory."""
+
+    def __init__(self, sid: int, cfg: VenusConfig, embed_dim: int):
+        self.sid = sid
+        self.cfg = cfg
+        self.segmenter = StreamSegmenter(
+            threshold=cfg.scene_threshold,
+            max_partition_len=cfg.max_partition_len)
+        self.memory = VenusMemory(cfg.memory_capacity, embed_dim,
+                                  cfg.member_cap, seed=cfg.seed)
+        self.frames = FrameStore()
+        self.pending: List[np.ndarray] = []   # frames not yet clustered
+        self.pending_base = 0                 # abs index of pending[0]
+        self.key = jax.random.key(cfg.seed)
+        self.stats = {"frames_seen": 0, "frames_embedded": 0,
+                      "partitions": 0, "clusters": 0}
+
+    def next_keys(self, n: int) -> jnp.ndarray:
+        """Advance the session PRNG chain n steps — the same chain a
+        sequence of n single queries would consume, so batched and
+        sequential querying draw identical subkeys."""
+        subs = []
+        for _ in range(n):
+            self.key, sub = jax.random.split(self.key)
+            subs.append(sub)
+        return jnp.stack(subs)
+
+
+# ---------------------------------------------------------------------------
+# Stages
+# ---------------------------------------------------------------------------
+
+
+def segment_stage(state: SessionState, chunk: np.ndarray) -> List[Partition]:
+    """① scene segmentation: archive the chunk, return closed partitions."""
+    chunk = np.asarray(chunk, np.float32)
+    state.frames.append(chunk)
+    state.stats["frames_seen"] += len(chunk)
+    closed = state.segmenter.ingest(jnp.asarray(chunk))
+    state.pending.extend(chunk)
+    return closed
+
+
+def cluster_stage(state: SessionState, part: Partition,
+                  aux_models: Sequence[AuxModel] = (),
+                  annotation_fn=None) -> EmbedJob:
+    """②–③ incremental clustering of one closed partition → embed job."""
+    cfg = state.cfg
+    lo = part.start - state.pending_base
+    hi = part.end - state.pending_base
+    pframes = np.stack(state.pending[lo:hi])
+    vecs = frame_vectors(jnp.asarray(pframes), cfg.cluster_pool)
+    res = cluster_partition(vecs, threshold=cfg.cluster_threshold,
+                            max_clusters=cfg.max_clusters_per_partition)
+    n = int(res.n_clusters)
+    assign = np.asarray(res.assignments)
+    index_local = np.asarray(res.index_frames)[:n]
+    scene_id = state.stats["partitions"]
+    members = [part.start + np.nonzero(assign == c)[0] for c in range(n)]
+    aux_texts = None
+    if aux_models and annotation_fn is not None:
+        aux_texts = [build_aux_prompt(
+            aux_models, pframes[int(index_local[j])],
+            annotation_fn(part.start + int(index_local[j])))
+            for j in range(n)]
+    state.stats["partitions"] += 1
+    state.stats["clusters"] += n
+    return EmbedJob(sid=state.sid, scene_id=scene_id,
+                    frames=pframes[index_local],
+                    frame_ids=part.start + index_local,
+                    member_lists=members, aux_texts=aux_texts)
+
+
+def release_pending(state: SessionState, closed: List[Partition]) -> None:
+    if closed:
+        consumed = closed[-1].end - state.pending_base
+        state.pending = state.pending[consumed:]
+        state.pending_base = closed[-1].end
+
+
+def commit_jobs(sessions: Mapping[int, SessionState], embedder,
+                jobs: Sequence[EmbedJob]) -> int:
+    """④ ONE batched MEM call over every index frame closed this tick,
+    scattered into each owning session's memory with batched appends."""
+    if not jobs:
+        return 0
+    frames = np.concatenate([j.frames for j in jobs])
+    ids = np.concatenate([j.frame_ids for j in jobs])
+    aux = None
+    if any(j.aux_texts for j in jobs):
+        aux = []
+        for j in jobs:
+            aux.extend(j.aux_texts or [""] * len(j.frame_ids))
+    embs = embedder.embed_frames(frames, aux, frame_ids=ids)
+    off = 0
+    for j in jobs:
+        n = len(j.frame_ids)
+        st = sessions[j.sid]
+        st.memory.insert_batch(
+            embs[off:off + n], scene_ids=[j.scene_id] * n,
+            index_frames=j.frame_ids, member_lists=j.member_lists)
+        st.stats["frames_embedded"] += n
+        off += n
+    return len(ids)
+
+
+# ---------------------------------------------------------------------------
+# Session manager
+# ---------------------------------------------------------------------------
+
+
+class SessionManager:
+    """N concurrent streams sharing one embedder and one jit cache."""
+
+    def __init__(self, cfg: VenusConfig, embedder, embed_dim: int,
+                 aux_models: Sequence[AuxModel] = (), annotation_fn=None):
+        self.cfg = cfg
+        self.embedder = embedder
+        self.embed_dim = embed_dim
+        self.aux_models = list(aux_models)
+        self.annotation_fn = annotation_fn
+        self.sessions: Dict[int, SessionState] = {}
+        self._next_sid = 0
+
+    # ------------------------------------------------------------- lifecycle
+    def create_session(self, sid: Optional[int] = None) -> int:
+        if sid is None:
+            sid = self._next_sid
+        assert sid not in self.sessions, sid
+        self._next_sid = max(self._next_sid, sid) + 1
+        self.sessions[sid] = SessionState(sid, self.cfg, self.embed_dim)
+        return sid
+
+    def __getitem__(self, sid: int) -> SessionState:
+        return self.sessions[sid]
+
+    def __len__(self) -> int:
+        return len(self.sessions)
+
+    # ------------------------------------------------------------- ingestion
+    def ingest_tick(self, chunks: Mapping[int, np.ndarray]
+                    ) -> Dict[str, float]:
+        """Consume one chunk per stream; embed everything that closed
+        across ALL streams in one batched MEM call. Returns stage
+        timings for the tick."""
+        t0 = time.perf_counter()
+        closed_by_sid = {sid: segment_stage(self.sessions[sid], chunk)
+                         for sid, chunk in chunks.items()}
+        t_seg = time.perf_counter()
+        jobs: List[EmbedJob] = []
+        for sid, closed in closed_by_sid.items():
+            st = self.sessions[sid]
+            for part in closed:
+                jobs.append(cluster_stage(st, part, self.aux_models,
+                                          self.annotation_fn))
+            release_pending(st, closed)
+        t_clu = time.perf_counter()
+        n_emb = commit_jobs(self.sessions, self.embedder, jobs)
+        t_emb = time.perf_counter()
+        return {"segment": t_seg - t0, "cluster": t_clu - t_seg,
+                "embed_insert": t_emb - t_clu, "embedded": float(n_emb)}
+
+    def flush(self, sids: Optional[Sequence[int]] = None) -> None:
+        """Close every open partition and embed the remainder batched."""
+        jobs: List[EmbedJob] = []
+        for sid in (sids if sids is not None else list(self.sessions)):
+            st = self.sessions[sid]
+            for part in st.segmenter.flush():
+                jobs.append(cluster_stage(st, part, self.aux_models,
+                                          self.annotation_fn))
+            st.pending = []
+            st.pending_base = st.stats["frames_seen"]
+        commit_jobs(self.sessions, self.embedder, jobs)
+
+    # -------------------------------------------------------------- querying
+    def query(self, sid: int, text: str, *, budget: Optional[int] = None,
+              use_akr: bool = True, query_emb: Optional[np.ndarray] = None
+              ) -> QueryResult:
+        """Single-query path (budget set ⇒ fixed-N sampling; else AKR)."""
+        cfg = self.cfg
+        st = self.sessions[sid]
+        timings: Dict[str, float] = {}
+        t0 = time.perf_counter()
+        if query_emb is None:
+            query_emb = self.embedder.embed_query(text)
+        timings["embed_query"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        sims, probs = st.memory.search(jnp.asarray(query_emb)[None],
+                                       tau=cfg.tau)
+        probs0 = probs[0]
+        timings["similarity"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        sub = st.next_keys(1)[0]
+        if budget is not None and not use_akr:
+            draws, _ = rt.sampling_retrieve(probs0, sub, budget)
+            valid = np.ones((budget,), bool)
+            n_drawn, mass = budget, float("nan")
+        else:
+            n_max = budget if budget is not None else cfg.n_max
+            res = rt.akr_progressive(probs0, sub, theta=cfg.theta,
+                                     beta=cfg.beta, n_max=n_max)
+            draws, valid = np.asarray(res.draws), np.asarray(res.valid)
+            n_drawn, mass = int(res.n_drawn), float(res.mass)
+        timings["sampling"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        frame_ids = st.memory.expand_draws(np.asarray(draws), valid,
+                                           seed=cfg.seed)
+        timings["expand"] = time.perf_counter() - t0
+        return QueryResult(frame_ids=frame_ids, draws=np.asarray(draws),
+                           n_drawn=n_drawn, mass=mass, timings=timings)
+
+    def query_batch(self, sid: int, texts: Optional[Sequence[str]] = None,
+                    *, query_embs: Optional[np.ndarray] = None,
+                    budget: Optional[int] = None, use_akr: bool = True
+                    ) -> List[QueryResult]:
+        """Q queries through ONE similarity scan + vmapped sampling/AKR +
+        vectorised expansion. Draws the same per-query subkeys as Q
+        sequential ``query`` calls, so results match query-for-query."""
+        cfg = self.cfg
+        st = self.sessions[sid]
+        timings: Dict[str, float] = {}
+        t0 = time.perf_counter()
+        if query_embs is None:
+            query_embs = self.embedder.embed_queries(list(texts))
+        qe = jnp.asarray(query_embs)
+        qn = qe.shape[0]
+        timings["embed_query"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        sims, probs = st.memory.search(qe, tau=cfg.tau)     # (Q, cap)
+        timings["similarity"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        keys = st.next_keys(qn)
+        if budget is not None and not use_akr:
+            draws, _ = rt.sampling_retrieve_batch(probs, keys, budget)
+            draws = np.asarray(draws)
+            valid = np.ones((qn, budget), bool)
+            n_drawn = np.full((qn,), budget)
+            mass = np.full((qn,), np.nan)
+        else:
+            n_max = budget if budget is not None else cfg.n_max
+            res = rt.akr_progressive_batch(probs, keys, theta=cfg.theta,
+                                           beta=cfg.beta, n_max=n_max)
+            draws, valid = np.asarray(res.draws), np.asarray(res.valid)
+            n_drawn, mass = np.asarray(res.n_drawn), np.asarray(res.mass)
+        timings["sampling"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        frame_lists = st.memory.expand_draws_batch(draws, valid,
+                                                   seed=cfg.seed)
+        timings["expand"] = time.perf_counter() - t0
+        # timings are whole-batch stage times; each result gets its own
+        # copy so callers can annotate without aliasing the others
+        return [QueryResult(frame_ids=frame_lists[i], draws=draws[i],
+                            n_drawn=int(n_drawn[i]), mass=float(mass[i]),
+                            timings=dict(timings)) for i in range(qn)]
+
+    def query_topk(self, sid: int, text: str, k: int,
+                   query_emb: Optional[np.ndarray] = None) -> np.ndarray:
+        st = self.sessions[sid]
+        if query_emb is None:
+            query_emb = self.embedder.embed_query(text)
+        sims, _ = st.memory.search(jnp.asarray(query_emb)[None],
+                                   tau=self.cfg.tau)
+        valid = jnp.arange(st.memory.capacity) < st.memory.size
+        idx = rt.topk_retrieve(sims[0], valid, k)
+        return st.memory.index_frames(np.asarray(idx))

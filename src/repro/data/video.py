@@ -223,3 +223,56 @@ class OracleEmbedder:
              + self.scene_weight * self._scene_basis[anchor])
         e = e + self._rng.normal(0, self.noise * 0.5, e.shape)
         return self._unit_rows(e)
+
+    def embed_queries(self, queries: Sequence[Query]) -> np.ndarray:
+        return np.stack([self.embed_query(q) for q in queries])
+
+
+class PixelEmbedder:
+    """Deterministic content-only embedder: pooled pixels through a fixed
+    random projection, L2-normalised.
+
+    Unlike ``OracleEmbedder`` it looks only at the frames themselves (no
+    world metadata keyed by absolute frame id), so it is safe for
+    multi-stream ingestion where per-session frame ids collide — and its
+    output is a pure function of pixel content, which the session-
+    equivalence tests rely on.
+    """
+
+    def __init__(self, dim: int = 64, pool: int = 8, seed: int = 13):
+        self.dim = dim
+        self.pool = pool
+        self.seed = seed
+        self._proj: Optional[np.ndarray] = None
+
+    def _projection(self, d_in: int) -> np.ndarray:
+        if self._proj is None or self._proj.shape[0] != d_in:
+            rng = np.random.default_rng(self.seed)
+            self._proj = rng.normal(
+                0, 1.0 / np.sqrt(d_in), (d_in, self.dim)).astype(np.float32)
+        return self._proj
+
+    def embed_frames(self, frames, aux_texts=None, frame_ids=None
+                     ) -> np.ndarray:
+        from repro.core.clustering import frame_vectors
+        import jax.numpy as jnp
+        v = np.asarray(frame_vectors(
+            jnp.asarray(np.asarray(frames, np.float32)), self.pool))
+        proj = self._projection(v.shape[-1])
+        # project row-by-row: BLAS batches change the summation order, and
+        # the session-equivalence tests need embeddings that are a pure
+        # function of each frame, independent of who shares the batch
+        e = np.stack([row @ proj for row in v])
+        return e / np.linalg.norm(e, axis=-1, keepdims=True)
+
+    def embed_query(self, text: str) -> np.ndarray:
+        # crc32, not hash(): Python's str hash is salted per process and
+        # would break cross-run reproducibility
+        import zlib
+        rng = np.random.default_rng(
+            (zlib.crc32(str(text).encode()) ^ self.seed) & 0x7FFFFFFF)
+        e = rng.normal(0, 1, (self.dim,)).astype(np.float32)
+        return e / np.linalg.norm(e)
+
+    def embed_queries(self, texts: Sequence[str]) -> np.ndarray:
+        return np.stack([self.embed_query(t) for t in texts])

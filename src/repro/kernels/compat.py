@@ -1,0 +1,25 @@
+"""Version compat for Pallas TPU compiler params.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+(and, earlier still, exposed a plain dict). The kernels only set
+``dimension_semantics``; this helper builds whichever object the
+installed JAX understands so the same kernel source compiles across
+versions.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+from jax.experimental.pallas import tpu as pltpu
+
+_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams", None)
+
+
+def tpu_compiler_params(dimension_semantics: Tuple[str, ...]):
+    """compiler_params= value with the given dimension semantics."""
+    if _PARAMS_CLS is not None:
+        return _PARAMS_CLS(dimension_semantics=tuple(dimension_semantics))
+    # very old JAX: pallas_call accepted a mosaic params dict
+    return dict(mosaic=dict(dimension_semantics=tuple(dimension_semantics)))

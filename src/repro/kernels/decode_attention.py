@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 NEG_INF = -1e30
 DEFAULT_BLK_S = 512
 
@@ -107,8 +109,7 @@ def gqa_decode(q, k, v, valid, *, scale: float, softcap: float = 0.0,
             pltpu.VMEM((h, 1), jnp.float32),
             pltpu.VMEM((h, dv), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=tpu_compiler_params(("parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, valid)
 
@@ -186,7 +187,6 @@ def mla_decode(q_abs, q_rope, ckv, krope, valid, *, scale: float,
             pltpu.VMEM((h, 1), jnp.float32),
             pltpu.VMEM((h, r), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=tpu_compiler_params(("parallel", "arbitrary")),
         interpret=interpret,
     )(q_abs, q_rope, ckv, krope, valid)

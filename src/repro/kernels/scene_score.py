@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _features(rgb: jnp.ndarray) -> jnp.ndarray:
     """(H,W,3) f32 in [0,1] -> (H,W,4) hue/sat/light/edge."""
@@ -77,8 +79,7 @@ def scene_score(frames: jnp.ndarray,
         out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((t, 1), jnp.float32),
         scratch_shapes=[pltpu.VMEM((h, w, 4), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
+        compiler_params=tpu_compiler_params(("arbitrary",)),
         interpret=interpret,
     )(frames)
     return phi[:, 0]

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 NEG_INF = -1e30
 DEFAULT_BLK_N = 1024
 
@@ -98,8 +100,7 @@ def similarity_scan(query, index, valid, *, tau: float,
             pltpu.VMEM((qn, 1), jnp.float32),
             pltpu.VMEM((qn, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
+        compiler_params=tpu_compiler_params(("arbitrary",)),
         interpret=interpret,
     )(qnorm, index, valid[None, :])
     return sims, m, l

@@ -9,9 +9,25 @@ XLA_FLAGS=--xla_force_host_platform_device_count=512 before first init.
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import jax
+from jax.sharding import AbstractMesh
+
+
+def make_abstract_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Device-free mesh for sharding-rule tests / dry runs.
+
+    ``AbstractMesh`` changed signature across JAX versions: newer ones
+    take ``(axis_sizes, axis_names)``, older ones (≤0.4.x) a single
+    tuple of ``(name, size)`` pairs. Try the new form first so the
+    compat cost disappears once the old API is gone.
+    """
+    shape, axes = tuple(shape), tuple(axes)
+    try:
+        return AbstractMesh(shape, axes)
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -4,3 +4,7 @@ from repro.serving.engine import (  # noqa: F401
     make_prefill_step,
     make_serve_step,
 )
+from repro.serving.venus_service import (  # noqa: F401
+    StreamQuery,
+    VenusService,
+)

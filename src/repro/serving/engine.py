@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.transformer import Transformer
+from repro.util import pow2_bucket
 
 PAD = 0
 EOS = 2
@@ -47,13 +48,6 @@ class Request:
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
-
-
-def _pow2_bucket(n: int, lo: int = 16) -> int:
-    b = lo
-    while b < n:
-        b *= 2
-    return b
 
 
 class ServingEngine:
@@ -150,7 +144,7 @@ class ServingEngine:
             # prompt_lengths and overwritten as decode advances. Recurrent
             # archs (SSM/RWKV/hybrid) would fold pads into their state, so
             # they prefill at exact length.
-            bucket = s if recurrent else _pow2_bucket(s)
+            bucket = s if recurrent else pow2_bucket(s, lo=16)
             buf = np.full((bucket,), PAD, np.int32)
             buf[:s] = toks              # right-pad
             nv = (req.vision_embeds.shape[0]
@@ -196,13 +190,17 @@ class ServingEngine:
                 self._slot_req[i] = None
         return len(active)
 
-    def run(self, requests: List[Request]) -> List[Request]:
-        for r in requests:
-            self.submit(r)
+    def drain(self) -> List[Request]:
+        """Step until every pending/in-flight request finishes."""
         while self._pending or any(r is not None for r in self._slot_req):
             self.step()
         done, self._done = self._done, []
         return sorted(done, key=lambda r: r.rid)
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        for r in requests:
+            self.submit(r)
+        return self.drain()
 
 
 # ---------------------------------------------------------------------------

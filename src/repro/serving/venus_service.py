@@ -1,0 +1,108 @@
+"""Multi-tenant edge box: Venus sessions feeding the serving engine.
+
+The deployment scenario the paper targets (§II): one edge box ingests N
+concurrent camera streams and answers real-time queries against any of
+them with a (cloud) VLM. This module wires the session layer into the
+continuous-batching engine:
+
+  camera chunks ──ingest_tick──▶ SessionManager (per-stream memories)
+  user queries  ──query_batch──▶ retrieved keyframe sets per stream
+                └─▶ patch-embedded into ``Request.vision_embeds`` and
+                    submitted to the ``ServingEngine`` slots.
+
+Queries arriving in the same service tick are grouped by session so each
+session's memory is scanned ONCE for all of its queries (the batched
+query path), and the VLM answers them under continuous batching.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.core.pipeline import patchify
+from repro.core.session import SessionManager
+from repro.serving.engine import Request, ServingEngine
+
+
+@dataclass
+class StreamQuery:
+    """A user query against one camera stream."""
+    rid: int
+    sid: int
+    text: str
+    prompt_tokens: np.ndarray
+    query_emb: Optional[np.ndarray] = None
+    budget: Optional[int] = None
+    max_new_tokens: int = 12
+    # filled by the service
+    frame_ids: Optional[np.ndarray] = None
+
+
+class VenusService:
+    """Session manager + serving engine behind one submission API."""
+
+    def __init__(self, manager: SessionManager, engine: ServingEngine, *,
+                 max_frames: int = 4, patch: int = 8):
+        self.manager = manager
+        self.engine = engine
+        self.max_frames = max_frames
+        self.patch = patch
+
+    # ------------------------------------------------------------- ingestion
+    def create_stream(self, sid: Optional[int] = None) -> int:
+        return self.manager.create_session(sid)
+
+    def ingest_tick(self, chunks: Mapping[int, np.ndarray]
+                    ) -> Dict[str, float]:
+        return self.manager.ingest_tick(chunks)
+
+    def flush(self) -> None:
+        self.manager.flush()
+
+    # --------------------------------------------------------------- serving
+    def _vision_embeds(self, sid: int, frame_ids: np.ndarray) -> np.ndarray:
+        """Retrieved raw frames → the VLM's prefix vision tokens."""
+        cfg = self.engine.cfg
+        st = self.manager[sid]
+        if len(frame_ids) == 0:
+            return np.zeros((cfg.vision_tokens, cfg.d_model), np.float32)
+        frames = st.frames.get(frame_ids[: self.max_frames])
+        pe = np.asarray(patchify(frames, self.patch, cfg.d_model))
+        pe = pe.reshape(-1, cfg.d_model)[: cfg.vision_tokens]
+        if pe.shape[0] < cfg.vision_tokens:
+            pe = np.pad(pe, ((0, cfg.vision_tokens - pe.shape[0]), (0, 0)))
+        return pe.astype(np.float32)
+
+    def submit(self, queries: Sequence[StreamQuery]) -> List[Request]:
+        """Retrieve per stream (one batched scan per session and budget),
+        build the VLM requests, and enqueue them on the engine."""
+        groups: Dict[tuple, List[StreamQuery]] = {}
+        for q in queries:
+            groups.setdefault((q.sid, q.budget), []).append(q)
+        reqs: List[Request] = []
+        for (sid, budget), group in groups.items():
+            # honour caller-supplied embeddings; embed only the rest
+            embs = np.stack([
+                q.query_emb if q.query_emb is not None
+                else self.manager.embedder.embed_query(q.text)
+                for q in group])
+            results = self.manager.query_batch(
+                sid, [q.text for q in group], query_embs=embs,
+                budget=budget)
+            for q, res in zip(group, results):
+                q.frame_ids = res.frame_ids
+                req = Request(
+                    rid=q.rid, tokens=np.asarray(q.prompt_tokens, np.int32),
+                    max_new_tokens=q.max_new_tokens,
+                    vision_embeds=self._vision_embeds(sid, res.frame_ids))
+                reqs.append(req)
+                self.engine.submit(req)
+        return reqs
+
+    def answer(self, queries: Sequence[StreamQuery]) -> List[Request]:
+        """Submit and drain: run engine steps until every slot is free."""
+        self.submit(queries)
+        return self.engine.drain()

@@ -1,0 +1,13 @@
+"""Small shared helpers."""
+
+from __future__ import annotations
+
+
+def pow2_bucket(n: int, lo: int = 1) -> int:
+    """Smallest power of two ≥ n, floored at ``lo`` (itself a power of
+    two). Used to bucket dynamic batch/prompt sizes so jit caches see
+    O(log n) shapes instead of one per size."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b

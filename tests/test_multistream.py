@@ -1,0 +1,297 @@
+"""Multi-session refactor invariants: batched querying must equal the
+sequential path, interleaved multi-stream ingestion must equal separate
+single-stream ingestion, the vectorised expansion must match the loop
+reference, and the device index must update in place after inserts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import retrieval as rt
+from repro.core.memory import VenusMemory
+from repro.core.pipeline import VenusConfig, VenusSystem
+from repro.core.session import SessionManager
+from repro.data.video import (OracleEmbedder, PixelEmbedder, VideoWorld,
+                              WorldConfig)
+
+
+def _ingested_system(world, embedder, chunk=64, cfg=VenusConfig()):
+    system = VenusSystem(cfg, embedder, embed_dim=64)
+    for i in range(0, world.total_frames, chunk):
+        system.ingest(world.frames[i:i + chunk])
+    system.flush()
+    return system
+
+
+# ---------------------------------------------------------------------------
+# query_batch == sequential query
+# ---------------------------------------------------------------------------
+
+
+def test_query_batch_matches_sequential_queries():
+    """query_batch(Q=8) draws the same subkeys as 8 sequential query()
+    calls, so draws / frame ids / mass must match exactly."""
+    world = VideoWorld(WorldConfig(n_scenes=8, seed=3))
+    oracle = OracleEmbedder(world, dim=64)
+    sys_seq = _ingested_system(world, oracle)
+    sys_bat = _ingested_system(world, OracleEmbedder(world, dim=64))
+
+    queries = world.make_queries(8, seed=9)
+    qes = OracleEmbedder(world, dim=64).embed_queries(queries)
+
+    seq = [sys_seq.query(q.text, query_emb=qes[j])
+           for j, q in enumerate(queries)]
+    bat = sys_bat.query_batch([q.text for q in queries], query_embs=qes)
+    assert len(bat) == 8
+    for a, b in zip(seq, bat):
+        np.testing.assert_array_equal(a.draws, b.draws)
+        np.testing.assert_array_equal(a.frame_ids, b.frame_ids)
+        assert a.n_drawn == b.n_drawn
+        np.testing.assert_allclose(a.mass, b.mass, rtol=1e-6)
+
+
+def test_query_batch_fixed_budget_matches_sequential():
+    world = VideoWorld(WorldConfig(n_scenes=6, seed=5))
+    oracle = OracleEmbedder(world, dim=64)
+    sys_seq = _ingested_system(world, oracle)
+    sys_bat = _ingested_system(world, OracleEmbedder(world, dim=64))
+    queries = world.make_queries(4, seed=11)
+    qes = OracleEmbedder(world, dim=64).embed_queries(queries)
+
+    seq = [sys_seq.query(q.text, budget=6, use_akr=False, query_emb=qes[j])
+           for j, q in enumerate(queries)]
+    bat = sys_bat.query_batch([q.text for q in queries], query_embs=qes,
+                              budget=6, use_akr=False)
+    for a, b in zip(seq, bat):
+        np.testing.assert_array_equal(a.draws, b.draws)
+        np.testing.assert_array_equal(a.frame_ids, b.frame_ids)
+
+
+def test_akr_batch_matches_scalar():
+    rng = np.random.default_rng(0)
+    probs = rng.random((5, 64)).astype(np.float32)
+    probs /= probs.sum(-1, keepdims=True)
+    keys = jax.random.split(jax.random.key(42), 5)
+    bat = rt.akr_progressive_batch(jnp.asarray(probs), keys, theta=0.85,
+                                   beta=1.0, n_max=16)
+    for i in range(5):
+        one = rt.akr_progressive(jnp.asarray(probs[i]), keys[i],
+                                 theta=0.85, beta=1.0, n_max=16)
+        np.testing.assert_array_equal(np.asarray(bat.draws[i]),
+                                      np.asarray(one.draws))
+        assert int(bat.n_drawn[i]) == int(one.n_drawn)
+        np.testing.assert_allclose(float(bat.mass[i]), float(one.mass),
+                                   rtol=1e-6)
+
+
+def test_sampling_batch_matches_scalar():
+    rng = np.random.default_rng(1)
+    probs = rng.random((3, 32)).astype(np.float32)
+    probs /= probs.sum(-1, keepdims=True)
+    keys = jax.random.split(jax.random.key(7), 3)
+    draws_b, counts_b = rt.sampling_retrieve_batch(jnp.asarray(probs),
+                                                   keys, 12)
+    for i in range(3):
+        draws, counts = rt.sampling_retrieve(jnp.asarray(probs[i]),
+                                             keys[i], 12)
+        np.testing.assert_array_equal(np.asarray(draws_b[i]),
+                                      np.asarray(draws))
+        np.testing.assert_array_equal(np.asarray(counts_b[i]),
+                                      np.asarray(counts))
+
+
+# ---------------------------------------------------------------------------
+# interleaved sessions == separate streams
+# ---------------------------------------------------------------------------
+
+
+def test_interleaved_sessions_match_separate_ingestion():
+    """Two genuinely different streams interleaved tick-by-tick through
+    one SessionManager must build exactly the memories that separate
+    single-stream ingestion builds."""
+    worlds = [VideoWorld(WorldConfig(n_scenes=5, seed=21)),
+              VideoWorld(WorldConfig(n_scenes=5, seed=22))]
+    n = min(w.total_frames for w in worlds)
+
+    mgr = SessionManager(VenusConfig(), PixelEmbedder(dim=64),
+                         embed_dim=64)
+    sids = [mgr.create_session(), mgr.create_session()]
+    for i in range(0, n, 50):
+        mgr.ingest_tick({sid: w.frames[i:i + 50]
+                         for sid, w in zip(sids, worlds)})
+    mgr.flush()
+
+    for sid, world in zip(sids, worlds):
+        solo = VenusSystem(VenusConfig(), PixelEmbedder(dim=64),
+                           embed_dim=64)
+        for i in range(0, n, 50):
+            solo.ingest(world.frames[i:i + 50])
+        solo.flush()
+        a, b = mgr[sid].memory, solo.memory
+        assert a.size == b.size
+        np.testing.assert_array_equal(a._emb[:a.size], b._emb[:b.size])
+        np.testing.assert_array_equal(a._members[:a.size],
+                                      b._members[:b.size])
+        np.testing.assert_array_equal(a._member_count[:a.size],
+                                      b._member_count[:b.size])
+        np.testing.assert_array_equal(a._index_frame[:a.size],
+                                      b._index_frame[:b.size])
+        np.testing.assert_array_equal(a._scene_id[:a.size],
+                                      b._scene_id[:b.size])
+        assert mgr[sid].stats == solo.stats
+
+
+# ---------------------------------------------------------------------------
+# vectorised expand_draws == loop reference
+# ---------------------------------------------------------------------------
+
+
+def _member_memory(n_clusters=12, members_per=10):
+    mem = VenusMemory(capacity=64, dim=8, member_cap=16)
+    for i in range(n_clusters):
+        mem.insert_cluster(np.ones(8, np.float32), scene_id=0,
+                           index_frame=i,
+                           member_frames=list(range(i * 100,
+                                                    i * 100 + members_per)))
+    return mem
+
+
+def test_expand_draws_vectorised_matches_loop():
+    mem = _member_memory()
+    rng = np.random.default_rng(4)
+    draws = rng.integers(-1, 12, size=40)
+    valid = rng.random(40) > 0.3
+    for seed in (0, 5, 99):
+        got = mem.expand_draws(draws, valid, seed=seed)
+        want = mem._expand_draws_loop(draws, valid, seed=seed)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_expand_draws_batch_matches_per_row():
+    mem = _member_memory()
+    rng = np.random.default_rng(8)
+    draws = rng.integers(-1, 12, size=(6, 20))
+    valid = rng.random((6, 20)) > 0.25
+    rows = mem.expand_draws_batch(draws, valid, seed=3)
+    assert len(rows) == 6
+    for i in range(6):
+        np.testing.assert_array_equal(
+            rows[i], mem.expand_draws(draws[i], valid[i], seed=3))
+
+
+def test_expand_draws_empty_and_zero_count():
+    mem = VenusMemory(capacity=8, dim=4, member_cap=4)
+    mem.insert_cluster(np.ones(4, np.float32), scene_id=0, index_frame=0,
+                       member_frames=[])
+    out = mem.expand_draws(np.asarray([0, 0]), np.asarray([True, True]))
+    assert out.size == 0
+    out = mem.expand_draws(np.asarray([], np.int32),
+                           np.asarray([], bool))
+    assert out.size == 0
+
+
+# ---------------------------------------------------------------------------
+# device-resident index: no full re-upload after inserts
+# ---------------------------------------------------------------------------
+
+
+def _fill(mem, rows):
+    lo = mem.size
+    n = len(rows)
+    mem.insert_batch(rows, scene_ids=[0] * n,
+                     index_frames=list(range(lo, lo + n)),
+                     member_lists=[[i] for i in range(lo, lo + n)])
+
+
+def test_insert_then_search_updates_device_in_place():
+    """After the initial upload, insert → search must append on device
+    (no full (capacity, dim) retransfer) and return the same result a
+    freshly built memory would."""
+    rng = np.random.default_rng(0)
+    mem = VenusMemory(capacity=256, dim=16, member_cap=4)
+    first = rng.normal(0, 1, (20, 16)).astype(np.float32)
+    _fill(mem, first)
+    q = rng.normal(0, 1, (2, 16)).astype(np.float32)
+    mem.search(jnp.asarray(q), tau=0.1)
+    assert mem.io_stats["full_uploads"] == 1
+
+    second = rng.normal(0, 1, (7, 16)).astype(np.float32)
+    _fill(mem, second)
+    sims, probs = mem.search(jnp.asarray(q), tau=0.1)
+    assert mem.io_stats["full_uploads"] == 1          # no retransfer
+    assert mem.io_stats["appended_rows"] > 0
+
+    fresh = VenusMemory(capacity=256, dim=16, member_cap=4)
+    _fill(fresh, np.concatenate([first, second]))
+    sims2, probs2 = fresh.search(jnp.asarray(q), tau=0.1)
+    np.testing.assert_allclose(np.asarray(probs), np.asarray(probs2),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_seed_mode_reuploads_every_insert():
+    rng = np.random.default_rng(1)
+    mem = VenusMemory(capacity=64, dim=8, member_cap=4,
+                      incremental=False)
+    _fill(mem, rng.normal(0, 1, (4, 8)).astype(np.float32))
+    q = rng.normal(0, 1, (1, 8)).astype(np.float32)
+    mem.search(jnp.asarray(q), tau=0.1)
+    _fill(mem, rng.normal(0, 1, (4, 8)).astype(np.float32))
+    mem.search(jnp.asarray(q), tau=0.1)
+    assert mem.io_stats["full_uploads"] == 2
+
+
+def test_capacity_guard_batched():
+    mem = VenusMemory(capacity=4, dim=4)
+    _fill(mem, np.ones((3, 4), np.float32))
+    with pytest.raises(RuntimeError):
+        _fill(mem, np.ones((2, 4), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# serving bridge: retrieved frames feed the VLM engine
+# ---------------------------------------------------------------------------
+
+
+def test_venus_service_multi_tenant_round_trip():
+    """Two camera streams behind one engine: queries retrieve from their
+    own session, frames become vision_embeds, the VLM answers all."""
+    from repro.configs import registry
+    from repro.models.transformer import Transformer
+    from repro.serving.engine import ServingEngine
+    from repro.serving.venus_service import StreamQuery, VenusService
+
+    worlds = [VideoWorld(WorldConfig(n_scenes=3, seed=31)),
+              VideoWorld(WorldConfig(n_scenes=3, seed=32))]
+    mgr = SessionManager(VenusConfig(), PixelEmbedder(dim=64),
+                         embed_dim=64)
+
+    cfg = registry.get_smoke_config("qwen2-vl-7b")
+    model = Transformer(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=128)
+    svc = VenusService(mgr, eng, max_frames=2)
+
+    sids = [svc.create_stream() for _ in worlds]
+    n = min(w.total_frames for w in worlds)
+    for i in range(0, n, 50):
+        svc.ingest_tick({sid: w.frames[i:i + 50]
+                         for sid, w in zip(sids, worlds)})
+    svc.flush()
+    for sid in sids:
+        assert mgr[sid].memory.size > 0
+
+    rng = np.random.default_rng(0)
+    queries = [StreamQuery(rid=r, sid=sids[r % 2], text=f"query {r}",
+                           prompt_tokens=rng.integers(
+                               3, cfg.vocab_size, size=8),
+                           max_new_tokens=3)
+               for r in range(3)]
+    done = svc.answer(queries)
+    assert [r.rid for r in done] == [0, 1, 2]
+    for r in done:
+        assert len(r.generated) == 3
+        assert r.vision_embeds is not None
+        assert r.vision_embeds.shape == (cfg.vision_tokens, cfg.d_model)
+    # retrieval actually ran per stream
+    assert all(q.frame_ids is not None for q in queries)
