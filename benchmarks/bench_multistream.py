@@ -13,6 +13,10 @@ The edge box serves N concurrent camera streams with real-time queries
   updated index vs the seed behaviour (every insert invalidates the
   device cache, forcing a full ``(capacity, dim)`` host→device
   re-upload before the next scan).
+* **cross-session fused query** — one ``query_batch_cross`` scan over
+  ALL sessions' stacked indices vs one ``query_batch`` scan per session
+  vs fully sequential ``query`` calls, with scans-per-tick and
+  host↔device transfer counters from ``io_stats``.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run --only multistream
    (or  PYTHONPATH=src python benchmarks/bench_multistream.py)
@@ -149,6 +153,94 @@ def _bench_query(n_sessions: int, n_queries: int, chunk: int = 64):
           "speedup": f"{sequential_s / batched_s:.2f}x"})
 
 
+def _bench_query_cross(n_sessions: int, n_queries: int, chunk: int = 64,
+                       ticks: int = 5):
+    """Cross-session fused query path vs per-session vs sequential.
+
+    Each "tick" answers ``n_queries`` queries per session (the service
+    scenario: queries spread over every stream arriving together). The
+    fused path must issue ONE scan per tick regardless of S; the
+    per-session path issues S; sequential issues S×Q. Transfer counters
+    come straight from the memory/manager io_stats."""
+    worlds = [VideoWorld(WorldConfig(n_scenes=6, seed=20 + s))
+              for s in range(n_sessions)]
+    n_frames = min(w.total_frames for w in worlds)
+
+    def build():
+        mgr = SessionManager(VenusConfig(), PixelEmbedder(dim=64),
+                             embed_dim=64)
+        sids = [mgr.create_session() for _ in range(n_sessions)]
+        for i in range(0, n_frames, chunk):
+            mgr.ingest_tick({sid: w.frames[i:i + chunk]
+                             for sid, w in zip(sids, worlds)})
+        mgr.flush()
+        return mgr, sids
+
+    # per tick: qsids repeats each session n_queries times, embeddings
+    # packed (S * n_queries, d) in the same order
+    qe_by_tick = [np.concatenate([OracleEmbedder(w, dim=64).embed_queries(
+        w.make_queries(n_queries, seed=31 + 7 * t)) for w in worlds])
+        for t in range(ticks)]
+
+    def transfers(mgr, sids):
+        return {
+            "full_uploads": sum(mgr[s].memory.io_stats["full_uploads"]
+                                for s in sids),
+            "appended_rows": sum(mgr[s].memory.io_stats["appended_rows"]
+                                 for s in sids),
+            "host_expand_gathers": sum(
+                mgr[s].memory.io_stats["host_expand_gathers"]
+                for s in sids),
+        }
+
+    qsids = [sid for sid in range(n_sessions) for _ in range(n_queries)]
+
+    # --- fused: one scan over the whole stack per tick
+    mgr, sids = build()
+    tick_sids = [sids[s] for s in qsids]
+    mgr.query_batch_cross(tick_sids, query_embs=qe_by_tick[0])   # warm
+    base_scans = dict(mgr.io_stats)
+    t0 = time.perf_counter()
+    for t in range(ticks):
+        mgr.query_batch_cross(tick_sids, query_embs=qe_by_tick[t])
+    fused_s = time.perf_counter() - t0
+    scans_per_tick = (mgr.io_stats["fused_scans"]
+                      - base_scans["fused_scans"]) / ticks
+    emit("multistream/query_cross_fused", fused_s,
+         {"sessions": n_sessions, "queries_per_tick": len(qsids),
+          "ticks": ticks, "scans_per_tick": f"{scans_per_tick:.1f}",
+          **transfers(mgr, sids)})
+
+    # --- per-session batched: one scan per session per tick
+    mgr, sids = build()
+    mgr.query_batch(sids[0], query_embs=qe_by_tick[0][:n_queries])  # warm
+    base_scans = dict(mgr.io_stats)
+    t0 = time.perf_counter()
+    for t in range(ticks):
+        for si, sid in enumerate(sids):
+            lo = si * n_queries
+            mgr.query_batch(sid,
+                            query_embs=qe_by_tick[t][lo:lo + n_queries])
+    per_session_s = time.perf_counter() - t0
+    emit("multistream/query_cross_per_session", per_session_s,
+         {"scans_per_tick":
+          f"{(mgr.io_stats['scans'] - base_scans['scans']) / ticks:.1f}",
+          "speedup_vs_fused": f"{per_session_s / fused_s:.2f}x",
+          **transfers(mgr, sids)})
+
+    # --- sequential scalar queries
+    mgr, sids = build()
+    mgr.query(sids[0], "", query_emb=qe_by_tick[0][0])         # warm
+    t0 = time.perf_counter()
+    for t in range(ticks):
+        for j, s in enumerate(qsids):
+            mgr.query(sids[s], "", query_emb=qe_by_tick[t][j])
+    sequential_s = time.perf_counter() - t0
+    emit("multistream/query_cross_sequential", sequential_s,
+         {"speedup_vs_fused": f"{sequential_s / fused_s:.2f}x",
+          **transfers(mgr, sids)})
+
+
 def _bench_incremental_index(capacity: int = 16384, dim: int = 256,
                              rounds: int = 20):
     """Post-ingest query latency: incremental append vs full re-upload."""
@@ -186,16 +278,22 @@ def _bench_incremental_index(capacity: int = 16384, dim: int = 256,
          {"speedup": f"{out['seed_reupload'] / out['incremental']:.2f}x"})
 
 
-def run(n_sessions: int = 4, n_queries: int = 8) -> None:
+def run(n_sessions: int = 4, n_queries: int = 8, *,
+        cross_only: bool = False) -> None:
     assert n_sessions >= 4, "multi-tenant scenario needs ≥4 sessions"
-    _bench_ingest(n_sessions)
-    _bench_query(n_sessions, n_queries)
-    _bench_incremental_index()
+    if not cross_only:
+        _bench_ingest(n_sessions)
+        _bench_query(n_sessions, n_queries)
+    _bench_query_cross(n_sessions, n_queries)
+    if not cross_only:
+        _bench_incremental_index()
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--sessions", type=int, default=4)
     ap.add_argument("--queries", type=int, default=8)
+    ap.add_argument("--cross", action="store_true",
+                    help="only the cross-session fused query bench")
     args = ap.parse_args()
-    run(args.sessions, args.queries)
+    run(args.sessions, args.queries, cross_only=args.cross)

@@ -16,8 +16,17 @@ The index is **device-resident and incrementally updated**: the first
 query uploads the packed array once; afterwards batched inserts append
 rows in place with a jit'd ``dynamic_update_slice`` (bucketed batch
 sizes bound the jit cache), so a post-ingest query never re-transfers
-the whole ``(capacity, dim)`` buffer. ``io_stats`` counts full uploads
-vs appended rows so tests/benches can assert the transfer behaviour.
+the whole ``(capacity, dim)`` buffer. The member reservoirs get the
+same treatment (``device_members``), so reasoning-time expansion is a
+jit'd on-device gather (``expand_draws_device``) instead of a host
+lookup. ``io_stats`` counts full uploads vs appended rows (and host vs
+device expansion gathers) so tests/benches can assert the transfer
+behaviour.
+
+``MemoryStack`` stacks several sessions' device buffers into
+``(S, capacity, …)`` views for the cross-session fused query path: one
+kernel launch scans every session, one jit'd gather expands every
+session's draws. Stacks are cached against per-memory insert versions.
 """
 
 from __future__ import annotations
@@ -70,6 +79,40 @@ def _append_rows(emb: jnp.ndarray, rows: jnp.ndarray,
     return jax.lax.dynamic_update_slice(emb, rows, (pos, 0))
 
 
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _append_member_rows(members: jnp.ndarray, counts: jnp.ndarray,
+                        rows: jnp.ndarray, cnts: jnp.ndarray,
+                        pos: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """In-place append of member-reservoir rows + their counts."""
+    members = jax.lax.dynamic_update_slice(members, rows, (pos, 0))
+    counts = jax.lax.dynamic_update_slice(counts, cnts, (pos,))
+    return members, counts
+
+
+# Uniform member pick: one variate per draw slot, represented as an
+# integer u ∈ [0, 2^U_BITS) so host (int64) and device (int32) paths
+# compute pick = (u * cnt) >> U_BITS *bit-identically* — no float
+# rounding can make the two paths disagree at a floor boundary.
+U_BITS = 20
+_U_CARD = 1 << U_BITS
+
+
+@jax.jit
+def expand_gather(members: jnp.ndarray, counts: jnp.ndarray,
+                  draws: jnp.ndarray, valid: jnp.ndarray,
+                  u: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Device reservoir gather: draws (..., n) index rows of the
+    device-resident members table; u (n,) or (..., n) int32 variates pick
+    one member per slot. Returns (frame ids (..., n), ok (..., n))."""
+    cap = members.shape[0]
+    safe = jnp.clip(draws, 0, cap - 1)
+    cnt = counts[safe]                                    # (..., n)
+    pick = (u.astype(jnp.int32) * cnt) >> U_BITS          # exact floor
+    fids = jnp.take_along_axis(members[safe], pick[..., None], -1)[..., 0]
+    ok = valid & (cnt > 0) & (draws >= 0)
+    return fids, ok
+
+
 from repro.util import pow2_bucket
 
 
@@ -78,6 +121,8 @@ class VenusMemory:
 
     def __init__(self, capacity: int, dim: int, member_cap: int = 128,
                  seed: int = 0, *, incremental: bool = True):
+        # the exact integer pick (u * cnt) >> U_BITS must fit in int32
+        assert member_cap <= (1 << (31 - U_BITS)), member_cap
         self.capacity = capacity
         self.dim = dim
         self.member_cap = member_cap
@@ -90,7 +135,13 @@ class VenusMemory:
         self._size = 0
         self._rng = np.random.default_rng(seed)
         self._emb_dev: Optional[jnp.ndarray] = None
-        self.io_stats = {"full_uploads": 0, "appended_rows": 0}
+        self._members_dev: Optional[jnp.ndarray] = None
+        self._member_count_dev: Optional[jnp.ndarray] = None
+        self.version = 0               # bumped per insert (stack caching)
+        self.io_stats = {"full_uploads": 0, "appended_rows": 0,
+                         "member_uploads": 0, "appended_member_rows": 0,
+                         "scans": 0, "host_expand_gathers": 0,
+                         "device_expand_gathers": 0}
 
     # ------------------------------------------------------------- ingestion
     def insert_cluster(self, embedding: np.ndarray, *, scene_id: int,
@@ -131,23 +182,35 @@ class VenusMemory:
             self._members[lo + j, :m] = members
             self._member_count[lo + j] = m
         self._size += n
+        self.version += 1
         self._sync_device(lo, n)
         return np.arange(lo, lo + n)
 
     def _sync_device(self, lo: int, n: int) -> None:
-        if self._emb_dev is None:
-            return                       # lazy: first query uploads once
         if not self.incremental:
             self._emb_dev = None         # seed behaviour: full re-upload
+            self._members_dev = None
+            self._member_count_dev = None
             return
         # bucket the row count (bounds jit specialisations); padded rows
         # land past the valid region and are overwritten by later appends
         b = min(pow2_bucket(n, lo=8), self.capacity - lo)
-        rows = np.zeros((b, self.dim), np.float32)
-        rows[:n] = self._emb[lo:lo + n]
-        self._emb_dev = _append_rows(self._emb_dev, jnp.asarray(rows),
-                                     jnp.asarray(lo, jnp.int32))
-        self.io_stats["appended_rows"] += b
+        if self._emb_dev is not None:    # lazy: first query uploads once
+            rows = np.zeros((b, self.dim), np.float32)
+            rows[:n] = self._emb[lo:lo + n]
+            self._emb_dev = _append_rows(self._emb_dev, jnp.asarray(rows),
+                                         jnp.asarray(lo, jnp.int32))
+            self.io_stats["appended_rows"] += b
+        if self._members_dev is not None:
+            rows = np.zeros((b, self.member_cap), np.int32)
+            rows[:n] = self._members[lo:lo + n]
+            cnts = np.zeros((b,), np.int32)
+            cnts[:n] = self._member_count[lo:lo + n]
+            self._members_dev, self._member_count_dev = _append_member_rows(
+                self._members_dev, self._member_count_dev,
+                jnp.asarray(rows), jnp.asarray(cnts),
+                jnp.asarray(lo, jnp.int32))
+            self.io_stats["appended_member_rows"] += b
 
     # ----------------------------------------------------------------- query
     @property
@@ -172,11 +235,32 @@ class VenusMemory:
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """query_emb (Q,d) -> (sims (Q,cap), probs (Q,cap)) — Eq. 4+5."""
         emb, valid = self.device_index()
+        self.io_stats["scans"] += 1
         return kops.similarity(query_emb, emb, tau=tau, valid=valid)
 
     # ------------------------------------------------- cluster-level expand
     def members_table(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
         return jnp.asarray(self._members), jnp.asarray(self._member_count)
+
+    def device_members(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(members (cap, member_cap), counts (cap,)) device-resident.
+
+        Same contract as ``device_index``: first call uploads once,
+        subsequent inserts append in place (and DONATE the buffers, so
+        re-call after inserting rather than holding the handles)."""
+        if self._members_dev is None:
+            self._members_dev = jnp.asarray(self._members)
+            self._member_count_dev = jnp.asarray(self._member_count)
+            self.io_stats["member_uploads"] += 1
+        return self._members_dev, self._member_count_dev
+
+    @staticmethod
+    def expand_u(seed: int, size) -> np.ndarray:
+        """The per-slot pick variates u ∈ [0, 2^U_BITS): one int per draw
+        slot, a function of (seed, slot) only — every expansion path
+        (loop / vectorised / batched / device) consumes this sequence."""
+        return np.random.default_rng(seed).integers(
+            0, _U_CARD, size=size, dtype=np.int64)
 
     def expand_draws(self, draws: np.ndarray, valid: np.ndarray,
                      seed: int = 0) -> np.ndarray:
@@ -187,7 +271,7 @@ class VenusMemory:
         paths agree. Returns the deduplicated, time-ordered frame ids."""
         draws = np.atleast_1d(np.asarray(draws))
         valid = np.atleast_1d(np.asarray(valid, bool))
-        u = np.random.default_rng(seed).random(draws.shape)
+        u = self.expand_u(seed, draws.shape)
         return self._expand_u(draws, valid, u)
 
     def expand_draws_batch(self, draws: np.ndarray, valid: np.ndarray,
@@ -198,15 +282,31 @@ class VenusMemory:
         draws = np.asarray(draws)
         valid = np.asarray(valid, bool)
         q, n = draws.shape
-        u = np.broadcast_to(np.random.default_rng(seed).random(n), (q, n))
+        u = np.broadcast_to(self.expand_u(seed, n), (q, n))
         fids, ok = self._expand_u(draws, valid, u, dedup=False)
         return [np.unique(fids[i][ok[i]]) for i in range(q)]
 
+    def expand_draws_device(self, draws: np.ndarray, valid: np.ndarray,
+                            seed: int = 0) -> np.ndarray:
+        """``expand_draws`` with the reservoir gather on device: a jit'd
+        fixed-shape lookup over ``device_members()`` — no host-side
+        members-table access; only the (n,) frame ids transfer back."""
+        draws = np.atleast_1d(np.asarray(draws, np.int32))
+        valid = np.atleast_1d(np.asarray(valid, bool))
+        members, counts = self.device_members()
+        u = self.expand_u(seed, draws.shape)
+        fids, ok = expand_gather(members, counts, jnp.asarray(draws),
+                                  jnp.asarray(valid),
+                                  jnp.asarray(u, jnp.int32))
+        self.io_stats["device_expand_gathers"] += 1
+        fids, ok = np.asarray(fids), np.asarray(ok)
+        return np.unique(fids[ok].astype(np.int64))
+
     def _expand_u(self, draws, valid, u, dedup: bool = True):
+        self.io_stats["host_expand_gathers"] += 1
         safe = np.clip(draws, 0, self.capacity - 1)
-        cnt = self._member_count[safe]
-        pick = np.minimum((u * cnt).astype(np.int64),
-                          np.maximum(cnt - 1, 0))
+        cnt = self._member_count[safe].astype(np.int64)
+        pick = (np.asarray(u, np.int64) * cnt) >> U_BITS
         fids = self._members[safe, pick].astype(np.int64)
         ok = valid & (cnt > 0) & (draws >= 0)
         if dedup:
@@ -220,15 +320,94 @@ class VenusMemory:
         rng = np.random.default_rng(seed)
         out = []
         for i, ok in zip(np.asarray(draws), np.asarray(valid)):
-            u = rng.random()
+            u = int(rng.integers(0, _U_CARD, dtype=np.int64))
             if not ok or i < 0:
                 continue
             cnt = int(self._member_count[int(i)])
             if cnt == 0:
                 continue
-            out.append(int(self._members[int(i), min(int(u * cnt),
-                                                     cnt - 1)]))
+            out.append(int(self._members[int(i), (u * cnt) >> U_BITS]))
         return np.unique(np.asarray(out, np.int64))
 
     def index_frames(self, idx: Sequence[int]) -> np.ndarray:
         return self._index_frame[np.asarray(idx, np.int64)]
+
+
+# ---------------------------------------------------------------------------
+# Cross-session stacked view
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def _valid_stack(sizes: jnp.ndarray, *, capacity: int) -> jnp.ndarray:
+    return jnp.arange(capacity)[None, :] < sizes[:, None]
+
+
+class MemoryStack:
+    """Padded-stack view over S same-shape ``VenusMemory`` instances.
+
+    Exposes the sessions' device-resident buffers as ``(S, capacity, …)``
+    stacks for the fused cross-session query path. The stacks are built
+    *device-side* from the per-session device buffers (``jnp.stack`` of
+    resident arrays — no host↔device transfer beyond each memory's one
+    lazy first upload) and cached against the members' insert versions,
+    so repeated queries between ingest ticks rebuild nothing.
+    """
+
+    def __init__(self, memories: Sequence[VenusMemory]):
+        memories = list(memories)
+        assert memories, "empty stack"
+        cap, dim, mcap = (memories[0].capacity, memories[0].dim,
+                          memories[0].member_cap)
+        for m in memories:
+            assert (m.capacity, m.dim, m.member_cap) == (cap, dim, mcap), \
+                "stacked memories must share capacity/dim/member_cap"
+        self.memories = memories
+        self.capacity, self.dim, self.member_cap = cap, dim, mcap
+        self._emb_stack: Optional[jnp.ndarray] = None
+        self._valid: Optional[jnp.ndarray] = None
+        self._members_stack: Optional[jnp.ndarray] = None
+        self._counts_stack: Optional[jnp.ndarray] = None
+        self._emb_versions: Optional[Tuple[int, ...]] = None
+        self._mem_versions: Optional[Tuple[int, ...]] = None
+        self.io_stats = {"stack_builds": 0, "member_stack_builds": 0}
+
+    def __len__(self) -> int:
+        return len(self.memories)
+
+    def _versions(self) -> Tuple[int, ...]:
+        return tuple(m.version for m in self.memories)
+
+    # ----------------------------------------------------------- device views
+    def device_stack(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(emb (S, cap, d), valid (S, cap)) device arrays."""
+        vers = self._versions()
+        if self._emb_stack is None or vers != self._emb_versions:
+            self._emb_stack = jnp.stack(
+                [m.device_index()[0] for m in self.memories])
+            # sizes only change with a version bump, so the valid mask is
+            # cached alongside — queries between ticks transfer nothing
+            sizes = jnp.asarray([m.size for m in self.memories], jnp.int32)
+            self._valid = _valid_stack(sizes, capacity=self.capacity)
+            self._emb_versions = vers
+            self.io_stats["stack_builds"] += 1
+        return self._emb_stack, self._valid
+
+    def device_members(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(members (S, cap, member_cap), counts (S, cap)) device arrays."""
+        vers = self._versions()
+        if self._members_stack is None or vers != self._mem_versions:
+            tabs = [m.device_members() for m in self.memories]
+            self._members_stack = jnp.stack([t[0] for t in tabs])
+            self._counts_stack = jnp.stack([t[1] for t in tabs])
+            self._mem_versions = vers
+            self.io_stats["member_stack_builds"] += 1
+        return self._members_stack, self._counts_stack
+
+    # ----------------------------------------------------------------- query
+    def search(self, query_emb: jnp.ndarray, *, tau: float
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """query_emb (S, Q, d) -> (sims, probs) (S, Q, cap) — every
+        session scanned by ONE fused kernel launch."""
+        emb, valid = self.device_stack()
+        return kops.similarity_stack(query_emb, emb, tau=tau, valid=valid)

@@ -20,9 +20,10 @@ device round-trip across the batch.
 
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional, Sequence
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +32,8 @@ import numpy as np
 from repro.core import retrieval as rt
 from repro.core.aux_models import AuxModel, build_aux_prompt
 from repro.core.clustering import cluster_partition, frame_vectors
-from repro.core.memory import FrameStore, VenusMemory
+from repro.core.memory import (FrameStore, MemoryStack, VenusMemory,
+                               expand_gather)
 from repro.core.scene import Partition, StreamSegmenter
 
 
@@ -182,6 +184,37 @@ def commit_jobs(sessions: Mapping[int, SessionState], embedder,
 
 
 # ---------------------------------------------------------------------------
+# Fused sampling → AKR → reservoir expansion (cross-session, on device)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("theta", "beta", "n_max"))
+def _fused_akr_expand(probs, keys, members, counts, u, *, theta, beta,
+                      n_max):
+    """probs (S,Q,cap) + keys (S,Q) → AKR draws (S,Q,n_max) → member
+    frame ids (S,Q,n_max), all in one program: the reservoir gather runs
+    on the device-resident members stack, so nothing round-trips to host
+    between sampling and expansion. Each (s, q) lane is bitwise the
+    scalar ``akr_progressive`` + ``expand_draws`` chain for that key."""
+    akr = jax.vmap(lambda p, k: rt.akr_progressive_batch(
+        p, k, theta=theta, beta=beta, n_max=n_max))(probs, keys)
+    fids, ok = jax.vmap(lambda m, c, d, v: expand_gather(m, c, d, v, u))(
+        members, counts, akr.draws, akr.valid)
+    return akr, fids, ok
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _fused_sample_expand(probs, keys, members, counts, u, *, n):
+    """Fixed-budget variant: n draws per lane, every slot valid."""
+    draws, _ = jax.vmap(lambda p, k: rt.sampling_retrieve_batch(
+        p, k, n))(probs, keys)
+    valid = jnp.ones(draws.shape, bool)
+    fids, ok = jax.vmap(lambda m, c, d, v: expand_gather(m, c, d, v, u))(
+        members, counts, draws, valid)
+    return draws, fids, ok
+
+
+# ---------------------------------------------------------------------------
 # Session manager
 # ---------------------------------------------------------------------------
 
@@ -198,6 +231,10 @@ class SessionManager:
         self.annotation_fn = annotation_fn
         self.sessions: Dict[int, SessionState] = {}
         self._next_sid = 0
+        self._stacks: Dict[Tuple[int, ...], MemoryStack] = {}
+        # per-session scans vs fused cross-session scans, for the "one
+        # scan per query tick" invariant (tests/benches assert on these)
+        self.io_stats = {"scans": 0, "fused_scans": 0, "device_expands": 0}
 
     # ------------------------------------------------------------- lifecycle
     def create_session(self, sid: Optional[int] = None) -> int:
@@ -265,6 +302,7 @@ class SessionManager:
         t0 = time.perf_counter()
         sims, probs = st.memory.search(jnp.asarray(query_emb)[None],
                                        tau=cfg.tau)
+        self.io_stats["scans"] += 1
         probs0 = probs[0]
         timings["similarity"] = time.perf_counter() - t0
 
@@ -308,6 +346,7 @@ class SessionManager:
 
         t0 = time.perf_counter()
         sims, probs = st.memory.search(qe, tau=cfg.tau)     # (Q, cap)
+        self.io_stats["scans"] += 1
         timings["similarity"] = time.perf_counter() - t0
 
         t0 = time.perf_counter()
@@ -336,13 +375,117 @@ class SessionManager:
                             n_drawn=int(n_drawn[i]), mass=float(mass[i]),
                             timings=dict(timings)) for i in range(qn)]
 
+    def query_batch_cross(self, sids: Sequence[int],
+                          texts: Optional[Sequence[str]] = None, *,
+                          query_embs: Optional[np.ndarray] = None,
+                          budget: Optional[int] = None,
+                          use_akr: bool = True) -> List[QueryResult]:
+        """Queries against SEVERAL sessions through ONE fused scan.
+
+        ``sids[j]`` is the session query j targets. The queries are
+        packed into a per-session padded block (S, Qmax, d), scanned over
+        the ``MemoryStack`` in a single kernel launch, and sampled +
+        expanded by one jit'd program over the device-resident members
+        stack — zero host-side reservoir gathers. Each session's PRNG
+        chain advances by exactly its own query count (padding lanes
+        consume dummy keys), so results are equivalent query-for-query
+        to per-session ``query_batch`` calls and to sequential
+        ``query`` calls. Results come back in input order."""
+        cfg = self.cfg
+        sids = [int(s) for s in sids]
+        timings: Dict[str, float] = {}
+        t0 = time.perf_counter()
+        if query_embs is None:
+            query_embs = self.embedder.embed_queries(list(texts))
+        qe = np.asarray(query_embs, np.float32)
+        assert len(sids) == qe.shape[0]
+
+        # group by session, preserving within-session arrival order (the
+        # order the per-session subkey chain is consumed in)
+        order: Dict[int, List[int]] = {}
+        for j, sid in enumerate(sids):
+            order.setdefault(sid, []).append(j)
+        group_sids = sorted(order)
+        sn = len(group_sids)
+        qmax = max(len(order[s]) for s in group_sids)
+        q_stack = np.zeros((sn, qmax, qe.shape[1]), np.float32)
+        key_rows = []
+        for si, sid in enumerate(group_sids):
+            idxs = order[sid]
+            q_stack[si, :len(idxs)] = qe[idxs]
+            ks = self.sessions[sid].next_keys(len(idxs))
+            if len(idxs) < qmax:      # padding lanes: dummy keys, results
+                pad = jax.random.split(jax.random.key(0), qmax - len(idxs))
+                ks = jnp.concatenate([ks, pad])
+            key_rows.append(ks)
+        keys = jnp.stack(key_rows)                          # (S, Qmax)
+        timings["embed_query"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        stack = self.memory_stack(tuple(group_sids))
+        sims, probs = stack.search(jnp.asarray(q_stack), tau=cfg.tau)
+        self.io_stats["fused_scans"] += 1
+        timings["similarity"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        members, counts = stack.device_members()
+        if budget is not None and not use_akr:
+            u = jnp.asarray(VenusMemory.expand_u(cfg.seed, budget),
+                            jnp.int32)
+            draws, fids, ok = _fused_sample_expand(
+                probs, keys, members, counts, u, n=budget)
+            draws = np.asarray(draws)
+            n_drawn = np.full((sn, qmax), budget)
+            mass = np.full((sn, qmax), np.nan)
+        else:
+            n_max = budget if budget is not None else cfg.n_max
+            u = jnp.asarray(VenusMemory.expand_u(cfg.seed, n_max),
+                            jnp.int32)
+            akr, fids, ok = _fused_akr_expand(
+                probs, keys, members, counts, u,
+                theta=cfg.theta, beta=cfg.beta, n_max=n_max)
+            draws = np.asarray(akr.draws)
+            n_drawn, mass = np.asarray(akr.n_drawn), np.asarray(akr.mass)
+        self.io_stats["device_expands"] += 1
+        fids, ok = np.asarray(fids), np.asarray(ok)
+        timings["sample_expand"] = time.perf_counter() - t0
+
+        results: List[Optional[QueryResult]] = [None] * len(sids)
+        for si, sid in enumerate(group_sids):
+            for qi, j in enumerate(order[sid]):
+                frame_ids = np.unique(
+                    fids[si, qi][ok[si, qi]].astype(np.int64))
+                results[j] = QueryResult(
+                    frame_ids=frame_ids, draws=draws[si, qi],
+                    n_drawn=int(n_drawn[si, qi]),
+                    mass=float(mass[si, qi]), timings=dict(timings))
+        return results
+
+    # stacked device views are ~S×(index + members) buffers each; bound
+    # how many distinct session subsets stay cached (LRU) so arbitrary
+    # query groupings can't grow device memory without limit
+    MAX_CACHED_STACKS = 8
+
+    def memory_stack(self, sids: Tuple[int, ...]) -> MemoryStack:
+        """The cached ``MemoryStack`` over the given session tuple."""
+        stk = self._stacks.pop(sids, None)
+        if stk is None:
+            stk = MemoryStack([self.sessions[s].memory for s in sids])
+            while len(self._stacks) >= self.MAX_CACHED_STACKS:
+                self._stacks.pop(next(iter(self._stacks)))
+        self._stacks[sids] = stk          # re-insert = mark most recent
+        return stk
+
     def query_topk(self, sid: int, text: str, k: int,
                    query_emb: Optional[np.ndarray] = None) -> np.ndarray:
         st = self.sessions[sid]
         if query_emb is None:
             query_emb = self.embedder.embed_query(text)
+        # same device-index path as query/query_batch: the scan runs over
+        # memory.search so io_stats (uploads + scans) stays accountable
         sims, _ = st.memory.search(jnp.asarray(query_emb)[None],
                                    tau=self.cfg.tau)
-        valid = jnp.arange(st.memory.capacity) < st.memory.size
+        self.io_stats["scans"] += 1
+        _, valid = st.memory.device_index()
         idx = rt.topk_retrieve(sims[0], valid, k)
         return st.memory.index_frames(np.asarray(idx))

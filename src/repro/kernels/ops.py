@@ -84,6 +84,20 @@ def similarity(query, index, *, tau: float, valid
     return ref.similarity_ref(query, index, tau=tau, valid=valid)
 
 
+def similarity_stack(query, index, *, tau: float, valid
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cross-session scan: query (S,Q,d) × index (S,N,d) + valid (S,N)
+    -> (sims (S,Q,N), probs (S,Q,N)) in ONE kernel launch."""
+    if _BACKEND == "pallas":
+        from repro.kernels import similarity as sk
+        sims, m, l = sk.similarity_scan_stack(query, index, valid, tau=tau,
+                                              interpret=_interpret())
+        logits = jnp.where(valid[:, None, :], sims / tau, ref.NEG_INF)
+        probs = jnp.exp(logits - m) / jnp.maximum(l, 1e-30)
+        return sims.astype(query.dtype), probs
+    return ref.similarity_stack_ref(query, index, tau=tau, valid=valid)
+
+
 def scene_score(frames, weights) -> jnp.ndarray:
     """frames (T,H,W,3) in [0,1] -> φ (T,)."""
     if _BACKEND == "pallas":

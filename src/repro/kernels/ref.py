@@ -86,6 +86,18 @@ def similarity_ref(query: jnp.ndarray, index: jnp.ndarray, *, tau: float,
     return sims.astype(query.dtype), probs.astype(f32)
 
 
+def similarity_stack_ref(query: jnp.ndarray, index: jnp.ndarray, *,
+                         tau: float, valid: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cross-session form: query (S,Q,d); index (S,N,d); valid (S,N).
+
+    Returns (sims (S,Q,N), probs (S,Q,N)) — per-session Eq. 4 + Eq. 5,
+    vmapped so every lane matches ``similarity_ref`` on that session.
+    """
+    fn = lambda q, x, v: similarity_ref(q, x, tau=tau, valid=v)
+    return jax.vmap(fn)(query, index, valid)
+
+
 # ---------------------------------------------------------------------------
 # scene score (Eq. 1): fused HSL+edge frame-difference metric
 # ---------------------------------------------------------------------------

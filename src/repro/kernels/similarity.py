@@ -10,6 +10,14 @@ The wrapper finishes probs = exp(s/τ − m)/l — an O(N) vector epilogue XLA
 fuses with the consumer.
 
 Grid: ``(N/BLK_N,)`` sequential, queries resident in VMEM.
+
+``similarity_scan_stack`` is the cross-session form: a padded stack of S
+session indices ``(S, capacity, d)`` with per-session valid masks and a
+per-session query block ``(S, Q, d)`` scanned by ONE program over grid
+``(S, capacity/BLK_N)`` — the multi-tenant edge box's whole query tick
+in a single kernel launch. Capacities that do not divide the block size
+are zero-padded by the wrapper (pad lanes are masked invalid, so they
+contribute nothing to the softmax statistics).
 """
 
 from __future__ import annotations
@@ -104,3 +112,94 @@ def similarity_scan(query, index, valid, *, tau: float,
         interpret=interpret,
     )(qnorm, index, valid[None, :])
     return sims, m, l
+
+
+# ---------------------------------------------------------------------------
+# Cross-session padded-stack scan
+# ---------------------------------------------------------------------------
+
+
+def _sim_stack_kernel(q_ref, x_ref, valid_ref, sims_ref, m_ref, l_ref,
+                      m_acc, l_acc, *, tau, blocks):
+    i = pl.program_id(1)                          # block within session s
+
+    @pl.when(i == 0)
+    def _init():                                  # fresh stats per session
+        m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+        l_acc[...] = jnp.zeros_like(l_acc)
+
+    q = q_ref[0].astype(jnp.float32)              # (Q, d) pre-normalised
+    x = x_ref[0].astype(jnp.float32)              # (BLK, d)
+    valid = valid_ref[0]                          # (BLK,)
+
+    xn = x * jax.lax.rsqrt(jnp.sum(x * x, -1, keepdims=True) + 1e-12)
+    s = jax.lax.dot_general(q, xn, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, BLK)
+    sims_ref[0] = s.astype(sims_ref.dtype)
+
+    logit = jnp.where(valid[None, :], s / tau, NEG_INF)
+    m_prev = m_acc[...]                           # (Q, 1)
+    m_new = jnp.maximum(m_prev[:, 0], jnp.max(logit, -1))[:, None]
+    corr = jnp.exp(m_prev - m_new)
+    l_acc[...] = l_acc[...] * corr + jnp.sum(
+        jnp.exp(logit - m_new), -1, keepdims=True)
+    m_acc[...] = m_new
+
+    @pl.when(i == blocks - 1)
+    def _final():
+        m_ref[0] = m_acc[...]
+        l_ref[0] = l_acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "blk_n", "interpret"))
+def similarity_scan_stack(query, index, valid, *, tau: float,
+                          blk_n: int = DEFAULT_BLK_N,
+                          interpret: bool = True):
+    """query: (S,Q,d); index: (S,N,d); valid: (S,N) bool.
+
+    One program over all S session indices: grid (S, N/BLK). Returns
+    (sims (S,Q,N), m (S,Q,1), l (S,Q,1)); probs = exp(sims/τ − m)/l on
+    valid entries, per session. N is zero-padded (invalid lanes) up to a
+    block multiple, so any capacity works with any block size.
+    """
+    sn, qn, d = query.shape
+    n = index.shape[1]
+    blk = min(blk_n, n)
+    pad = (-n) % blk
+    if pad:
+        index = jnp.pad(index, ((0, 0), (0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    npad = n + pad
+    blocks = npad // blk
+
+    q32 = query.astype(jnp.float32)
+    qnorm = q32 * jax.lax.rsqrt(
+        jnp.sum(q32 * q32, -1, keepdims=True) + 1e-12)
+
+    kernel = functools.partial(_sim_stack_kernel, tau=tau, blocks=blocks)
+    sims, m, l = pl.pallas_call(
+        kernel,
+        grid=(sn, blocks),
+        in_specs=[
+            pl.BlockSpec((1, qn, d), lambda s, i: (s, 0, 0)),
+            pl.BlockSpec((1, blk, d), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((1, blk), lambda s, i: (s, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, qn, blk), lambda s, i: (s, 0, i)),
+            pl.BlockSpec((1, qn, 1), lambda s, i: (s, 0, 0)),
+            pl.BlockSpec((1, qn, 1), lambda s, i: (s, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((sn, qn, npad), jnp.float32),
+            jax.ShapeDtypeStruct((sn, qn, 1), jnp.float32),
+            jax.ShapeDtypeStruct((sn, qn, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((qn, 1), jnp.float32),
+            pltpu.VMEM((qn, 1), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(qnorm, index, valid)
+    return sims[:, :, :n], m, l

@@ -10,9 +10,11 @@ continuous-batching engine:
                 └─▶ patch-embedded into ``Request.vision_embeds`` and
                     submitted to the ``ServingEngine`` slots.
 
-Queries arriving in the same service tick are grouped by session so each
-session's memory is scanned ONCE for all of its queries (the batched
-query path), and the VLM answers them under continuous batching.
+Queries arriving in the same service tick are grouped by budget ONLY —
+not by ``(session, budget)`` — and each group runs through the fused
+cross-session query path: one similarity scan over the stacked session
+indices answers every query in the group, regardless of how many
+sessions it spans, and the VLM answers them under continuous batching.
 """
 
 from __future__ import annotations
@@ -77,27 +79,28 @@ class VenusService:
         return pe.astype(np.float32)
 
     def submit(self, queries: Sequence[StreamQuery]) -> List[Request]:
-        """Retrieve per stream (one batched scan per session and budget),
-        build the VLM requests, and enqueue them on the engine."""
-        groups: Dict[tuple, List[StreamQuery]] = {}
+        """Retrieve (ONE fused cross-session scan per budget group, no
+        matter how many streams), build the VLM requests, and enqueue
+        them on the engine."""
+        groups: Dict[Optional[int], List[StreamQuery]] = {}
         for q in queries:
-            groups.setdefault((q.sid, q.budget), []).append(q)
+            groups.setdefault(q.budget, []).append(q)
         reqs: List[Request] = []
-        for (sid, budget), group in groups.items():
+        for budget, group in groups.items():
             # honour caller-supplied embeddings; embed only the rest
             embs = np.stack([
                 q.query_emb if q.query_emb is not None
                 else self.manager.embedder.embed_query(q.text)
                 for q in group])
-            results = self.manager.query_batch(
-                sid, [q.text for q in group], query_embs=embs,
-                budget=budget)
+            results = self.manager.query_batch_cross(
+                [q.sid for q in group], [q.text for q in group],
+                query_embs=embs, budget=budget)
             for q, res in zip(group, results):
                 q.frame_ids = res.frame_ids
                 req = Request(
                     rid=q.rid, tokens=np.asarray(q.prompt_tokens, np.int32),
                     max_new_tokens=q.max_new_tokens,
-                    vision_embeds=self._vision_embeds(sid, res.frame_ids))
+                    vision_embeds=self._vision_embeds(q.sid, res.frame_ids))
                 reqs.append(req)
                 self.engine.submit(req)
         return reqs

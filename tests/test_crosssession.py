@@ -1,0 +1,297 @@
+"""Cross-session fused query path: ONE scan over all sessions.
+
+Equivalence suite for the tentpole invariant — the fused path
+(``query_batch_cross``: padded-stack similarity scan + one jit'd
+sampling→AKR→reservoir-expansion program) must match the per-session
+``query_batch`` path and the sequential ``query`` path draw-for-draw:
+same subkey chain, same draws, same AKR ``n_drawn``/``mass``, same frame
+ids, for unequal session sizes and unequal per-session query counts
+(padding lanes must not leak into results). It must also do its work in
+exactly ONE similarity scan with ZERO host-side reservoir gathers.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.memory import MemoryStack, VenusMemory
+from repro.core.session import SessionManager, VenusConfig
+from repro.data.video import (OracleEmbedder, PixelEmbedder, VideoWorld,
+                              WorldConfig)
+
+
+def _worlds(n_sessions):
+    # n_scenes varies per stream ⇒ genuinely unequal memory sizes
+    return [VideoWorld(WorldConfig(n_scenes=4 + s, seed=20 + s))
+            for s in range(n_sessions)]
+
+
+def _ingested_manager(worlds, chunk=64):
+    mgr = SessionManager(VenusConfig(), PixelEmbedder(dim=64),
+                         embed_dim=64)
+    sids = [mgr.create_session() for _ in worlds]
+    for sid, w in zip(sids, worlds):
+        for i in range(0, w.total_frames, chunk):
+            mgr.ingest_tick({sid: w.frames[i:i + chunk]})
+    mgr.flush()
+    return mgr, sids
+
+
+def _queries(worlds, qsids, seed0=40):
+    return np.stack([
+        OracleEmbedder(worlds[s], dim=64).embed_queries(
+            worlds[s].make_queries(1, seed=seed0 + j))[0]
+        for j, s in enumerate(qsids)])
+
+
+def _per_session_baseline(mgr, qsids, qes, **kw):
+    """Per-session query_batch in canonical (sorted-sid) session order —
+    the same per-session subkey consumption the fused path performs."""
+    order = {}
+    for j, s in enumerate(qsids):
+        order.setdefault(s, []).append(j)
+    out = [None] * len(qsids)
+    for s in sorted(order):
+        idxs = order[s]
+        for j, r in zip(idxs, mgr.query_batch(s, query_embs=qes[idxs],
+                                              **kw)):
+            out[j] = r
+    return out
+
+
+def _sequential_baseline(mgr, qsids, qes, **kw):
+    order = {}
+    for j, s in enumerate(qsids):
+        order.setdefault(s, []).append(j)
+    out = [None] * len(qsids)
+    for s in sorted(order):
+        for j in order[s]:
+            out[j] = mgr.query(s, "", query_emb=qes[j], **kw)
+    return out
+
+
+def _assert_equal_results(got, want, check_akr=True):
+    assert len(got) == len(want)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a.draws, b.draws)
+        np.testing.assert_array_equal(a.frame_ids, b.frame_ids)
+        if check_akr:
+            assert a.n_drawn == b.n_drawn
+            np.testing.assert_allclose(a.mass, b.mass, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused == per-session query_batch == sequential query
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_sessions,qsids", [
+    (1, [0, 0, 0]),                       # S=1: degenerate stack
+    (3, [0, 1, 1, 2, 0, 2, 2]),           # S=3: unequal query counts
+])
+def test_fused_matches_per_session_and_sequential(n_sessions, qsids):
+    worlds = _worlds(n_sessions)
+    qes = _queries(worlds, qsids)
+
+    mgr_f, sids = _ingested_manager(worlds)
+    mgr_b, _ = _ingested_manager(worlds)
+    mgr_s, _ = _ingested_manager(worlds)
+    sizes = {mgr_f[s].memory.size for s in sids}
+    if n_sessions > 1:
+        assert len(sizes) > 1, "want genuinely unequal session sizes"
+
+    fused = mgr_f.query_batch_cross(qsids, query_embs=qes)
+    per_session = _per_session_baseline(mgr_b, qsids, qes)
+    sequential = _sequential_baseline(mgr_s, qsids, qes)
+    _assert_equal_results(fused, per_session)
+    _assert_equal_results(fused, sequential)
+
+
+@pytest.mark.parametrize("n_sessions,qsids", [
+    (1, [0, 0]),
+    (3, [0, 1, 1, 2, 2, 2]),
+])
+def test_fused_fixed_budget_matches(n_sessions, qsids):
+    worlds = _worlds(n_sessions)
+    qes = _queries(worlds, qsids, seed0=70)
+    mgr_f, _ = _ingested_manager(worlds)
+    mgr_b, _ = _ingested_manager(worlds)
+    mgr_s, _ = _ingested_manager(worlds)
+
+    fused = mgr_f.query_batch_cross(qsids, query_embs=qes, budget=6,
+                                    use_akr=False)
+    per_session = _per_session_baseline(mgr_b, qsids, qes, budget=6,
+                                        use_akr=False)
+    sequential = _sequential_baseline(mgr_s, qsids, qes, budget=6,
+                                      use_akr=False)
+    _assert_equal_results(fused, per_session, check_akr=False)
+    _assert_equal_results(fused, sequential, check_akr=False)
+
+
+def test_fused_then_per_session_same_manager():
+    """The fused path consumes each session's subkey chain exactly like
+    the per-session path, so the NEXT query on the same manager still
+    matches a twin manager that only ever used per-session calls."""
+    worlds = _worlds(3)
+    qsids = [0, 1, 2, 1]
+    qes = _queries(worlds, qsids)
+    mgr_f, _ = _ingested_manager(worlds)
+    mgr_b, _ = _ingested_manager(worlds)
+
+    _assert_equal_results(mgr_f.query_batch_cross(qsids, query_embs=qes),
+                          _per_session_baseline(mgr_b, qsids, qes))
+    # chain positions now identical ⇒ follow-up queries agree too
+    follow = _queries(worlds, [1], seed0=90)
+    a = mgr_f.query(1, "", query_emb=follow[0])
+    b = mgr_b.query(1, "", query_emb=follow[0])
+    np.testing.assert_array_equal(a.draws, b.draws)
+    np.testing.assert_array_equal(a.frame_ids, b.frame_ids)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: ONE scan, ZERO host-side reservoir gathers
+# ---------------------------------------------------------------------------
+
+
+def test_fused_one_scan_zero_host_gathers():
+    worlds = _worlds(3)
+    qsids = [0, 1, 1, 2, 2]
+    qes = _queries(worlds, qsids)
+    mgr, sids = _ingested_manager(worlds)
+
+    before_scans = dict(mgr.io_stats)
+    before_mem = {s: dict(mgr[s].memory.io_stats) for s in sids}
+    results = mgr.query_batch_cross(qsids, query_embs=qes)
+    assert all(r is not None for r in results)
+
+    # exactly ONE similarity scan for the whole group: one fused scan,
+    # zero per-session scans
+    assert mgr.io_stats["fused_scans"] == before_scans["fused_scans"] + 1
+    assert mgr.io_stats["scans"] == before_scans["scans"]
+    for s in sids:
+        io = mgr[s].memory.io_stats
+        assert io["scans"] == before_mem[s]["scans"]
+        # zero host-side reservoir gathers: expansion ran on device
+        assert (io["host_expand_gathers"]
+                == before_mem[s]["host_expand_gathers"])
+    assert mgr.io_stats["device_expands"] == \
+        before_scans["device_expands"] + 1
+
+
+def test_stack_cached_between_queries():
+    """Repeated fused queries with no intervening inserts must reuse the
+    device stack — no rebuilds, no new uploads."""
+    worlds = _worlds(3)
+    qsids = [0, 1, 2]
+    mgr, sids = _ingested_manager(worlds)
+    mgr.query_batch_cross(qsids, query_embs=_queries(worlds, qsids))
+    stack = mgr.memory_stack(tuple(sorted(set(qsids))))
+    builds = dict(stack.io_stats)
+    uploads = {s: mgr[s].memory.io_stats["full_uploads"] for s in sids}
+    for k in range(3):
+        mgr.query_batch_cross(qsids,
+                              query_embs=_queries(worlds, qsids,
+                                                  seed0=50 + 7 * k))
+    assert stack.io_stats == builds
+    for s in sids:
+        assert mgr[s].memory.io_stats["full_uploads"] == uploads[s]
+
+
+# ---------------------------------------------------------------------------
+# MemoryStack view invariants
+# ---------------------------------------------------------------------------
+
+
+def test_memory_stack_matches_per_memory_index():
+    rng = np.random.default_rng(0)
+    mems = []
+    for k, n in enumerate((5, 12, 1)):
+        m = VenusMemory(capacity=32, dim=8, member_cap=4)
+        rows = rng.normal(0, 1, (n, 8)).astype(np.float32)
+        m.insert_batch(rows, scene_ids=[0] * n,
+                       index_frames=list(range(n)),
+                       member_lists=[[i] for i in range(n)])
+        mems.append(m)
+    stack = MemoryStack(mems)
+    emb, valid = stack.device_stack()
+    assert emb.shape == (3, 32, 8) and valid.shape == (3, 32)
+    for k, m in enumerate(mems):
+        e, v = m.device_index()
+        np.testing.assert_array_equal(np.asarray(emb[k]), np.asarray(e))
+        np.testing.assert_array_equal(np.asarray(valid[k]), np.asarray(v))
+        assert np.asarray(valid[k]).sum() == m.size
+
+    q = rng.normal(0, 1, (3, 2, 8)).astype(np.float32)
+    import jax.numpy as jnp
+    sims, probs = stack.search(jnp.asarray(q), tau=0.1)
+    for k, m in enumerate(mems):
+        s1, p1 = m.search(jnp.asarray(q[k]), tau=0.1)
+        np.testing.assert_allclose(np.asarray(sims[k]), np.asarray(s1),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(probs[k]), np.asarray(p1),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_memory_stack_rejects_mismatched_shapes():
+    a = VenusMemory(capacity=16, dim=8)
+    b = VenusMemory(capacity=32, dim=8)
+    with pytest.raises(AssertionError):
+        MemoryStack([a, b])
+
+
+def test_memory_stack_tracks_inserts():
+    rng = np.random.default_rng(1)
+    m = VenusMemory(capacity=16, dim=4, member_cap=4)
+    stack = MemoryStack([m])
+    m.insert_batch(rng.normal(0, 1, (3, 4)).astype(np.float32),
+                   scene_ids=[0] * 3, index_frames=[0, 1, 2],
+                   member_lists=[[0], [1], [2]])
+    emb, valid = stack.device_stack()
+    assert np.asarray(valid).sum() == 3
+    m.insert_batch(rng.normal(0, 1, (2, 4)).astype(np.float32),
+                   scene_ids=[1] * 2, index_frames=[3, 4],
+                   member_lists=[[3], [4]])
+    emb, valid = stack.device_stack()          # version bump ⇒ restack
+    assert np.asarray(valid).sum() == 5
+    np.testing.assert_array_equal(np.asarray(emb[0, :5]), m._emb[:5])
+    assert m.io_stats["full_uploads"] == 1     # append path, not re-upload
+
+
+# ---------------------------------------------------------------------------
+# service-level: budget-only grouping spans sessions in one scan
+# ---------------------------------------------------------------------------
+
+
+def test_service_groups_by_budget_across_sessions():
+    from repro.configs import registry
+    from repro.models.transformer import Transformer
+    from repro.serving.engine import ServingEngine
+    from repro.serving.venus_service import StreamQuery, VenusService
+    import jax
+
+    worlds = _worlds(3)
+    mgr = SessionManager(VenusConfig(), PixelEmbedder(dim=64),
+                         embed_dim=64)
+    cfg = registry.get_smoke_config("qwen2-vl-7b")
+    model = Transformer(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServingEngine(cfg, params, batch_slots=2, max_len=128)
+    svc = VenusService(mgr, eng, max_frames=2)
+    sids = [svc.create_stream() for _ in worlds]
+    for sid, w in zip(sids, worlds):
+        for i in range(0, w.total_frames, 64):
+            svc.ingest_tick({sid: w.frames[i:i + 64]})
+    svc.flush()
+
+    rng = np.random.default_rng(0)
+    queries = [StreamQuery(rid=r, sid=sids[r % 3], text=f"q{r}",
+                           prompt_tokens=rng.integers(
+                               3, cfg.vocab_size, size=8),
+                           max_new_tokens=2)
+               for r in range(5)]
+    before = dict(mgr.io_stats)
+    done = svc.answer(queries)
+    # 5 queries over 3 sessions, one budget group ⇒ ONE fused scan
+    assert mgr.io_stats["fused_scans"] == before["fused_scans"] + 1
+    assert mgr.io_stats["scans"] == before["scans"]
+    assert len(done) == 5
+    assert all(q.frame_ids is not None for q in queries)

@@ -11,7 +11,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attention import gqa_decode, mla_decode
 from repro.kernels.scene_score import scene_score
-from repro.kernels.similarity import similarity_scan
+from repro.kernels.similarity import similarity_scan, similarity_scan_stack
 
 
 def _tol(dtype):
@@ -95,6 +95,80 @@ def test_similarity_matches_ref(dtype, q, n, d, blk):
     np.testing.assert_allclose(np.asarray(probs), np.asarray(want_p),
                                rtol=1e-4, atol=1e-5)
     assert np.isclose(np.asarray(probs).sum(axis=-1), 1.0).all()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,q,n,d,blk", [
+    (1, 2, 256, 64, 64),          # S=1 degenerate stack
+    (3, 4, 512, 128, 128),
+    (2, 3, 192, 32, 64),          # non-pow2 capacity, divides blk
+    (3, 2, 200, 16, 64),          # capacity NOT divisible by blk (pad)
+    (2, 1, 100, 32, 64),          # ... with Q=1
+])
+def test_similarity_stack_matches_ref(dtype, s, q, n, d, blk):
+    """3D cross-session scan vs the vmapped jnp oracle, including
+    capacities the block size does not divide (wrapper pads with invalid
+    lanes — they must not perturb sims or the softmax statistics)."""
+    ks = jax.random.split(jax.random.key(6), 3)
+    query = jax.random.normal(ks[0], (s, q, d), dtype)
+    index = jax.random.normal(ks[1], (s, n, d), dtype)
+    nvalid = jax.random.randint(ks[2], (s,), 1, n + 1)
+    valid = jnp.arange(n)[None, :] < nvalid[:, None]
+    sims, m, l = similarity_scan_stack(query, index, valid, tau=0.07,
+                                       blk_n=blk)
+    assert sims.shape == (s, q, n)
+    want_s, want_p = ref.similarity_stack_ref(query, index, tau=0.07,
+                                              valid=valid)
+    probs = jnp.exp(jnp.where(valid[:, None], sims / 0.07, -1e30) - m) / l
+    np.testing.assert_allclose(np.asarray(sims, np.float32),
+                               np.asarray(want_s, np.float32),
+                               **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(probs), np.asarray(want_p),
+                               rtol=1e-4, atol=1e-5)
+    assert np.isclose(np.asarray(probs).sum(axis=-1), 1.0).all()
+
+
+def test_similarity_stack_lanes_match_2d_scan():
+    """Each session lane of the stacked scan equals an independent 2D
+    ``similarity_scan`` over that session's index."""
+    ks = jax.random.split(jax.random.key(7), 3)
+    s, q, n, d = 3, 2, 256, 32
+    query = jax.random.normal(ks[0], (s, q, d))
+    index = jax.random.normal(ks[1], (s, n, d))
+    nvalid = jax.random.randint(ks[2], (s,), 1, n + 1)
+    valid = jnp.arange(n)[None, :] < nvalid[:, None]
+    sims3, m3, l3 = similarity_scan_stack(query, index, valid, tau=0.1,
+                                          blk_n=64)
+    for k in range(s):
+        sims2, m2, l2 = similarity_scan(query[k], index[k], valid[k],
+                                        tau=0.1, blk_n=64)
+        np.testing.assert_allclose(np.asarray(sims3[k]),
+                                   np.asarray(sims2), rtol=1e-6,
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(m3[k]), np.asarray(m2),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(l3[k]), np.asarray(l2),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_ops_similarity_stack_dispatch():
+    from repro.kernels import ops
+    ks = jax.random.split(jax.random.key(8), 2)
+    query = jax.random.normal(ks[0], (2, 3, 32))
+    index = jax.random.normal(ks[1], (2, 100, 32))
+    valid = jnp.arange(100)[None, :] < jnp.asarray([57, 100])[:, None]
+    old = ops.backend()
+    try:
+        ops.set_backend("jnp")
+        s_a, p_a = ops.similarity_stack(query, index, tau=0.1, valid=valid)
+        ops.set_backend("pallas")
+        s_b, p_b = ops.similarity_stack(query, index, tau=0.1, valid=valid)
+    finally:
+        ops.set_backend(old)
+    np.testing.assert_allclose(np.asarray(s_a), np.asarray(s_b),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(p_a), np.asarray(p_b),
+                               rtol=1e-4, atol=1e-5)
 
 
 @pytest.mark.parametrize("t,h,w", [(4, 16, 16), (7, 32, 24), (2, 8, 128)])

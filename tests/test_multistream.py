@@ -248,6 +248,75 @@ def test_capacity_guard_batched():
         _fill(mem, np.ones((2, 4), np.float32))
 
 
+def test_cross_session_queries_no_full_uploads_after_stack():
+    """io_stats regression: once the cross-session stack is built, N
+    post-ingest fused queries must report 0 additional full index
+    uploads — inserts extend the per-session device buffers in place and
+    the stack rebuilds device-side from them."""
+    from repro.data.video import OracleEmbedder
+    worlds = [VideoWorld(WorldConfig(n_scenes=4 + s, seed=40 + s))
+              for s in range(3)]
+    mgr = SessionManager(VenusConfig(), PixelEmbedder(dim=64),
+                         embed_dim=64)
+    sids = [mgr.create_session() for _ in worlds]
+    half = min(w.total_frames for w in worlds) // 2
+    for i in range(0, half, 64):
+        mgr.ingest_tick({sid: w.frames[i:i + 64]
+                         for sid, w in zip(sids, worlds)})
+
+    def qes(seed0):
+        return np.stack([OracleEmbedder(w, dim=64).embed_queries(
+            w.make_queries(1, seed=seed0 + j))[0]
+            for j, w in enumerate(worlds)])
+
+    mgr.query_batch_cross(sids, query_embs=qes(50))    # builds the stack
+    uploads = {s: mgr[s].memory.io_stats["full_uploads"] for s in sids}
+    assert all(v == 1 for v in uploads.values())
+
+    # keep ingesting, then query repeatedly: appends only, no re-uploads
+    for i in range(half, half + 192, 64):
+        mgr.ingest_tick({sid: w.frames[i:i + 64]
+                         for sid, w in zip(sids, worlds)})
+    for k in range(4):
+        mgr.query_batch_cross(sids, query_embs=qes(60 + 7 * k))
+    for s in sids:
+        io = mgr[s].memory.io_stats
+        assert io["full_uploads"] == uploads[s]        # 0 additional
+        assert io["member_uploads"] == 1
+        assert io["appended_rows"] > 0
+
+
+# ---------------------------------------------------------------------------
+# query_topk routes through the accounted device-index path
+# ---------------------------------------------------------------------------
+
+
+def test_query_topk_uses_device_index_accounting():
+    """query_topk must hit the same device-resident index as query /
+    query_batch: scans are counted and no extra full upload happens
+    after the index is on device."""
+    from repro.data.video import OracleEmbedder
+    world = VideoWorld(WorldConfig(n_scenes=5, seed=17))
+    mgr = SessionManager(VenusConfig(), PixelEmbedder(dim=64),
+                         embed_dim=64)
+    sid = mgr.create_session()
+    for i in range(0, world.total_frames, 64):
+        mgr.ingest_tick({sid: world.frames[i:i + 64]})
+    mgr.flush()
+
+    qe = OracleEmbedder(world, dim=64).embed_queries(
+        world.make_queries(1, seed=5))[0]
+    mgr.query(sid, "", query_emb=qe)                   # index now on device
+    mem_io = dict(mgr[sid].memory.io_stats)
+    mgr_io = dict(mgr.io_stats)
+    frames = mgr.query_topk(sid, "", k=4, query_emb=qe)
+    assert len(frames) == 4
+    io = mgr[sid].memory.io_stats
+    assert io["scans"] == mem_io["scans"] + 1          # scan accounted
+    assert io["full_uploads"] == mem_io["full_uploads"]  # no re-upload
+    assert mgr.io_stats["scans"] == mgr_io["scans"] + 1
+
+
 # ---------------------------------------------------------------------------
 # serving bridge: retrieved frames feed the VLM engine
 # ---------------------------------------------------------------------------

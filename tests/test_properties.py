@@ -181,3 +181,65 @@ def test_kv_ring_buffer_consistency(data):
                                     scale=0.25)
     np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# on-device reservoir expansion == seed-style loop reference
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def member_memories(draw):
+    """A VenusMemory with random member reservoirs — including empty
+    reservoirs and clusters at the member_cap bound."""
+    from repro.core.memory import VenusMemory
+    cap = draw(st.integers(4, 32))
+    mcap = draw(st.sampled_from([4, 8, 16]))
+    n_clusters = draw(st.integers(1, cap))
+    sizes = draw(st.lists(st.integers(0, 2 * mcap), min_size=n_clusters,
+                          max_size=n_clusters))
+    mem = VenusMemory(capacity=cap, dim=4, member_cap=mcap, seed=0)
+    base = 0
+    for i, m in enumerate(sizes):
+        mem.insert_cluster(np.ones(4, np.float32), scene_id=0,
+                           index_frame=base,
+                           member_frames=list(range(base, base + m)))
+        base += max(m, 1)
+    return mem
+
+
+@_settings
+@given(mem=member_memories(), data=st.data())
+def test_expand_draws_device_matches_loop(mem, data):
+    """The jit'd device gather over the device-resident members table is
+    draw-for-draw equal to the seed-style host loop — random draws and
+    valid masks, empty reservoirs, and negative (padding-slot) draws."""
+    n = data.draw(st.integers(0, 40))
+    draws = np.asarray(data.draw(st.lists(
+        st.integers(-2, mem.capacity - 1), min_size=n, max_size=n)),
+        np.int64)
+    valid = np.asarray(data.draw(st.lists(st.booleans(), min_size=n,
+                                          max_size=n)), bool)
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    got = mem.expand_draws_device(draws, valid, seed=seed)
+    want = mem._expand_draws_loop(draws, valid, seed=seed)
+    np.testing.assert_array_equal(got, want)
+    # and the vectorised host path agrees too (shared variate sequence)
+    np.testing.assert_array_equal(mem.expand_draws(draws, valid,
+                                                   seed=seed), want)
+
+
+@_settings
+@given(mem=member_memories(), data=st.data())
+def test_expand_draws_device_all_invalid_rows(mem, data):
+    """All-invalid masks and empty draw vectors expand to nothing."""
+    n = data.draw(st.integers(1, 16))
+    draws = np.asarray(data.draw(st.lists(
+        st.integers(0, mem.capacity - 1), min_size=n, max_size=n)),
+        np.int64)
+    seed = data.draw(st.integers(0, 1000))
+    out = mem.expand_draws_device(draws, np.zeros(n, bool), seed=seed)
+    assert out.size == 0
+    out = mem.expand_draws_device(np.asarray([], np.int64),
+                                  np.asarray([], bool), seed=seed)
+    assert out.size == 0
