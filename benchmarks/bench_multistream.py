@@ -153,8 +153,62 @@ def _bench_query(n_sessions: int, n_queries: int, chunk: int = 64):
           "speedup": f"{sequential_s / batched_s:.2f}x"})
 
 
+def _bench_query_plan(n_sessions: int, n_queries: int, chunk: int = 64,
+                      ticks: int = 5, n_scenes: int = 6):
+    """Mixed-strategy service ticks through the declarative planner.
+
+    Each tick answers ``n_queries`` queries per session with a strategy
+    mix (AKR / top-k / BOLT). The planner must fuse the tick into one
+    execution group per strategy — ``group_scans`` counts exactly
+    ``len(strategies)`` scans per tick no matter how many sessions or
+    queries the tick spans."""
+    from repro.core.queryplan import QuerySpec
+
+    mix = ("akr", "topk", "bolt")
+    worlds = [VideoWorld(WorldConfig(n_scenes=n_scenes, seed=20 + s))
+              for s in range(n_sessions)]
+    n_frames = min(w.total_frames for w in worlds)
+    mgr = SessionManager(VenusConfig(), PixelEmbedder(dim=64),
+                         embed_dim=64)
+    sids = [mgr.create_session() for _ in range(n_sessions)]
+    for i in range(0, n_frames, chunk):
+        mgr.ingest_tick({sid: w.frames[i:i + chunk]
+                         for sid, w in zip(sids, worlds)})
+    mgr.flush()
+
+    def tick_specs(t):
+        specs = []
+        for si, (sid, w) in enumerate(zip(sids, worlds)):
+            qes = OracleEmbedder(w, dim=64).embed_queries(
+                w.make_queries(n_queries, seed=131 + 7 * t))
+            specs += [QuerySpec(sid=sid, embedding=qes[qi],
+                                strategy=mix[(si + qi) % len(mix)],
+                                budget=8)
+                      for qi in range(n_queries)]
+        return specs
+
+    # specs (incl. embeddings) precomputed so the timed loop measures the
+    # planner/executor only — comparable to the cross bench's qe_by_tick
+    specs_by_tick = [tick_specs(t) for t in range(ticks)]
+    plan = mgr.plan(specs_by_tick[0])
+    assert plan.n_scans == len(mix), plan.describe()
+    mgr.execute(plan)                                   # warm
+    base = dict(mgr.io_stats)
+    t0 = time.perf_counter()
+    for specs in specs_by_tick:
+        mgr.query_specs(specs)
+    plan_s = time.perf_counter() - t0
+    scans_per_tick = (mgr.io_stats["group_scans"]
+                      - base["group_scans"]) / ticks
+    assert scans_per_tick == len(mix), scans_per_tick
+    emit("multistream/query_plan_mixed", plan_s,
+         {"sessions": n_sessions, "queries_per_tick": len(sids) * n_queries,
+          "strategies": len(mix), "ticks": ticks,
+          "scans_per_tick": f"{scans_per_tick:.1f}"})
+
+
 def _bench_query_cross(n_sessions: int, n_queries: int, chunk: int = 64,
-                       ticks: int = 5):
+                       ticks: int = 5, n_scenes: int = 6):
     """Cross-session fused query path vs per-session vs sequential.
 
     Each "tick" answers ``n_queries`` queries per session (the service
@@ -162,7 +216,7 @@ def _bench_query_cross(n_sessions: int, n_queries: int, chunk: int = 64,
     fused path must issue ONE scan per tick regardless of S; the
     per-session path issues S; sequential issues S×Q. Transfer counters
     come straight from the memory/manager io_stats."""
-    worlds = [VideoWorld(WorldConfig(n_scenes=6, seed=20 + s))
+    worlds = [VideoWorld(WorldConfig(n_scenes=n_scenes, seed=20 + s))
               for s in range(n_sessions)]
     n_frames = min(w.total_frames for w in worlds)
 
@@ -279,12 +333,21 @@ def _bench_incremental_index(capacity: int = 16384, dim: int = 256,
 
 
 def run(n_sessions: int = 4, n_queries: int = 8, *,
-        cross_only: bool = False) -> None:
+        cross_only: bool = False, smoke: bool = False) -> None:
     assert n_sessions >= 4, "multi-tenant scenario needs ≥4 sessions"
+    # smoke: tiny worlds / few ticks — CI exercises the fused cross path
+    # and the mixed-strategy planner path end-to-end in ~a minute
+    ticks = 2 if smoke else 5
+    n_scenes = 3 if smoke else 6
+    if smoke:
+        n_queries = min(n_queries, 2)
     if not cross_only:
         _bench_ingest(n_sessions)
         _bench_query(n_sessions, n_queries)
-    _bench_query_cross(n_sessions, n_queries)
+    _bench_query_cross(n_sessions, n_queries, ticks=ticks,
+                       n_scenes=n_scenes)
+    _bench_query_plan(n_sessions, n_queries, ticks=ticks,
+                      n_scenes=n_scenes)
     if not cross_only:
         _bench_incremental_index()
 
@@ -294,6 +357,10 @@ if __name__ == "__main__":
     ap.add_argument("--sessions", type=int, default=4)
     ap.add_argument("--queries", type=int, default=8)
     ap.add_argument("--cross", action="store_true",
-                    help="only the cross-session fused query bench")
+                    help="only the cross-session fused query benches "
+                         "(query_batch_cross shim + mixed-strategy plan)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny worlds / few ticks for CI")
     args = ap.parse_args()
-    run(args.sessions, args.queries, cross_only=args.cross)
+    run(args.sessions, args.queries, cross_only=args.cross,
+        smoke=args.smoke)

@@ -2,8 +2,10 @@
 
 Streams a procedural video into the Venus ingestion pipeline (scene
 segmentation → clustering → MEM embedding → hierarchical memory), then
-answers natural-language queries with sampling-based retrieval + AKR and
-compares against greedy Top-K.
+answers natural-language queries through the declarative query-plan API:
+every query is a ``QuerySpec`` (here AKR vs greedy Top-K per question),
+the planner fuses compatible specs into execution groups, and ONE
+similarity scan per group answers everything.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -19,8 +21,8 @@ import numpy as np
 
 from repro.configs.venus_mem import smoke_config
 from repro.core.aux_models import DetectorStub, OCRStub
-from repro.core.pipeline import MEMEmbedder, VenusConfig, VenusSystem, \
-    patchify
+from repro.core.pipeline import MEMEmbedder, QuerySpec, VenusConfig, \
+    VenusSystem, patchify
 from repro.data.text import tokenize_batch
 from repro.data.video import VideoWorld, WorldConfig
 from repro.models.mem import MEM
@@ -80,13 +82,23 @@ def main() -> None:
           f"{s['frames_seen']} frames "
           f"({100 * s['frames_embedded'] / s['frames_seen']:.1f}%)")
 
-    # 4. querying stage: AKR (adaptive budget) vs greedy Top-K
-    for q in world.make_queries(3, seed=1):
-        res = system.query(q.text)
+    # 4. querying stage: ONE declarative plan answers every question
+    #    twice — Venus AKR (adaptive budget) vs the greedy Top-K
+    #    baseline — fused into two execution groups (one scan each)
+    queries = world.make_queries(3, seed=1)
+    specs = [QuerySpec(sid=0, text=q.text, strategy="akr")
+             for q in queries]
+    specs += [QuerySpec(sid=0, text=q.text, strategy="topk", budget=8)
+              for q in queries]
+    plan = system.plan(specs)
+    print("\n" + plan.describe())
+    results = system.execute(plan)
+    for i, q in enumerate(queries):
+        res, topk = results[i], results[len(queries) + i]
         scenes = sorted({int(world.scene_of_frame[f])
                          for f in res.frame_ids})
-        topk = system.query_topk(q.text, 8)
-        tk_scenes = sorted({int(world.scene_of_frame[f]) for f in topk})
+        tk_scenes = sorted({int(world.scene_of_frame[f])
+                            for f in topk.frame_ids})
         print(f"\nquery: '{q.text}' (relevant scenes "
               f"{q.relevant_scenes})")
         print(f"  venus/AKR: {res.n_drawn} draws -> "

@@ -2,8 +2,11 @@
 
 Runs the paper's step ⑦ as a real serving workload: the continuous-
 batching engine hosts the (reduced) Qwen2-VL backbone — the paper's own
-cloud VLM — and answers a stream of requests whose "vision" inputs are
-the keyframes Venus selected (patch-embedding stubs).
+cloud VLM — behind ``VenusService``. Each request is a ``StreamQuery``
+(any registered retrieval strategy); one service tick compiles ALL of
+them into ONE query plan, the planner fuses compatible specs into
+execution groups (one similarity scan each), and the retrieved keyframes
+become the VLM's vision inputs (patch-embedding stubs).
 
   PYTHONPATH=src python examples/serve_batch.py --requests 6
 """
@@ -18,10 +21,11 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core.pipeline import VenusConfig, VenusSystem, patchify
+from repro.core.pipeline import VenusConfig, VenusSystem
 from repro.data.video import OracleEmbedder, VideoWorld, WorldConfig
 from repro.models.transformer import Transformer
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import ServingEngine
+from repro.serving.venus_service import StreamQuery, VenusService
 
 
 def main() -> None:
@@ -31,7 +35,7 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=12)
     args = ap.parse_args()
 
-    # --- edge side: Venus picks keyframes ---------------------------------
+    # --- edge side: Venus ingests the stream ------------------------------
     world = VideoWorld(WorldConfig(n_scenes=10, seed=4))
     oracle = OracleEmbedder(world, dim=64)
     venus = VenusSystem(VenusConfig(), oracle, embed_dim=64)
@@ -44,35 +48,34 @@ def main() -> None:
     model = Transformer(cfg)
     params = model.init(jax.random.key(0))
     eng = ServingEngine(cfg, params, batch_slots=args.slots, max_len=512)
+    svc = VenusService(venus.manager, eng, max_frames=4)
 
+    # one StreamQuery per request; alternate AKR with the greedy Top-K
+    # baseline so the tick's plan has a real strategy mix to fuse
     rng = np.random.default_rng(0)
-    queries = world.make_queries(args.requests, seed=7)
-    reqs = []
-    for i, q in enumerate(queries):
-        res = venus.query(q.text, query_emb=oracle.embed_query(q))
-        frames = world.frames[res.frame_ids[:4]] if len(res.frame_ids) \
-            else world.frames[:1]
-        # vision stub: patchify selected keyframes into the VLM's
-        # embedding space, truncated to the config's token budget
-        pe = np.asarray(patchify(frames, 8, cfg.d_model))
-        pe = pe.reshape(-1, cfg.d_model)[: cfg.vision_tokens]
-        if pe.shape[0] < cfg.vision_tokens:
-            pe = np.pad(pe, ((0, cfg.vision_tokens - pe.shape[0]), (0, 0)))
-        reqs.append(Request(
-            rid=i,
-            tokens=rng.integers(3, cfg.vocab_size, size=24),
-            max_new_tokens=args.max_new,
-            vision_embeds=pe.astype(np.float32)))
+    queries = []
+    for i, q in enumerate(world.make_queries(args.requests, seed=7)):
+        strategy, budget = (("akr", None) if i % 2 == 0 else ("topk", 4))
+        queries.append(StreamQuery(
+            rid=i, sid=venus.sid, text=q.text,
+            prompt_tokens=rng.integers(3, cfg.vocab_size, size=24),
+            query_emb=oracle.embed_query(q),
+            strategy=strategy, budget=budget,
+            max_new_tokens=args.max_new))
+
+    plan = svc.plan(queries)
+    print(plan.describe())
 
     t0 = time.perf_counter()
-    done = eng.run(reqs)
+    done = svc.answer(queries)
     wall = time.perf_counter() - t0
     tok = sum(len(r.generated) for r in done)
     for r in done:
         print(f"req {r.rid}: {len(r.generated)} tokens, "
               f"ttft {(r.first_token_at - r.submitted_at) * 1e3:.0f} ms")
     print(f"[serve_batch] {tok} tokens / {wall:.2f}s "
-          f"= {tok / wall:.1f} tok/s with continuous batching")
+          f"= {tok / wall:.1f} tok/s with continuous batching; "
+          f"{plan.n_scans} scans for {len(queries)} requests")
 
 
 if __name__ == "__main__":

@@ -4,6 +4,16 @@ from repro.core.pipeline import (  # noqa: F401
     VenusConfig,
     VenusSystem,
 )
+from repro.core.queryplan import (  # noqa: F401
+    QueryPlan,
+    QuerySpec,
+    RetrievalStrategy,
+    build_plan,
+    execute_plan,
+    get_strategy,
+    register_strategy,
+    strategies,
+)
 from repro.core.session import (  # noqa: F401
     SessionManager,
     SessionState,

@@ -89,6 +89,13 @@ def _append_member_rows(members: jnp.ndarray, counts: jnp.ndarray,
     return members, counts
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _append_id_rows(buf: jnp.ndarray, rows: jnp.ndarray,
+                    pos: jnp.ndarray) -> jnp.ndarray:
+    """In-place append for 1-D id tables (index_frame)."""
+    return jax.lax.dynamic_update_slice(buf, rows, (pos,))
+
+
 # Uniform member pick: one variate per draw slot, represented as an
 # integer u ∈ [0, 2^U_BITS) so host (int64) and device (int32) paths
 # compute pick = (u * cnt) >> U_BITS *bit-identically* — no float
@@ -137,11 +144,22 @@ class VenusMemory:
         self._emb_dev: Optional[jnp.ndarray] = None
         self._members_dev: Optional[jnp.ndarray] = None
         self._member_count_dev: Optional[jnp.ndarray] = None
+        self._index_frame_dev: Optional[jnp.ndarray] = None
         self.version = 0               # bumped per insert (stack caching)
         self.io_stats = {"full_uploads": 0, "appended_rows": 0,
                          "member_uploads": 0, "appended_member_rows": 0,
+                         "index_frame_uploads": 0,
+                         "appended_index_frame_rows": 0,
                          "scans": 0, "host_expand_gathers": 0,
                          "device_expand_gathers": 0}
+
+    def reset_io_stats(self) -> None:
+        """Zero the transfer/scan counters in place (the dict identity is
+        preserved, so held references keep observing the live counters).
+        Benchmarks and tests use this to assert per-phase counts without
+        rebuilding the memory."""
+        for k in self.io_stats:
+            self.io_stats[k] = 0
 
     # ------------------------------------------------------------- ingestion
     def insert_cluster(self, embedding: np.ndarray, *, scene_id: int,
@@ -191,6 +209,7 @@ class VenusMemory:
             self._emb_dev = None         # seed behaviour: full re-upload
             self._members_dev = None
             self._member_count_dev = None
+            self._index_frame_dev = None
             return
         # bucket the row count (bounds jit specialisations); padded rows
         # land past the valid region and are overwritten by later appends
@@ -211,6 +230,13 @@ class VenusMemory:
                 jnp.asarray(rows), jnp.asarray(cnts),
                 jnp.asarray(lo, jnp.int32))
             self.io_stats["appended_member_rows"] += b
+        if self._index_frame_dev is not None:
+            rows = np.zeros((b,), np.int32)
+            rows[:n] = self._index_frame[lo:lo + n]
+            self._index_frame_dev = _append_id_rows(
+                self._index_frame_dev, jnp.asarray(rows),
+                jnp.asarray(lo, jnp.int32))
+            self.io_stats["appended_index_frame_rows"] += b
 
     # ----------------------------------------------------------------- query
     @property
@@ -253,6 +279,17 @@ class VenusMemory:
             self._member_count_dev = jnp.asarray(self._member_count)
             self.io_stats["member_uploads"] += 1
         return self._members_dev, self._member_count_dev
+
+    def device_index_frames(self) -> jnp.ndarray:
+        """index_frame ids (cap,) device-resident — the centroid frame id
+        of each memory slot, for strategies whose draws map straight to
+        indexed frames (top-k / BOLT / MDF / AKS) rather than through the
+        member reservoirs. Same contract as ``device_index``: first call
+        uploads once, subsequent inserts append in place (donated)."""
+        if self._index_frame_dev is None:
+            self._index_frame_dev = jnp.asarray(self._index_frame)
+            self.io_stats["index_frame_uploads"] += 1
+        return self._index_frame_dev
 
     @staticmethod
     def expand_u(seed: int, size) -> np.ndarray:
@@ -368,9 +405,12 @@ class MemoryStack:
         self._valid: Optional[jnp.ndarray] = None
         self._members_stack: Optional[jnp.ndarray] = None
         self._counts_stack: Optional[jnp.ndarray] = None
+        self._index_frame_stack: Optional[jnp.ndarray] = None
         self._emb_versions: Optional[Tuple[int, ...]] = None
         self._mem_versions: Optional[Tuple[int, ...]] = None
-        self.io_stats = {"stack_builds": 0, "member_stack_builds": 0}
+        self._if_versions: Optional[Tuple[int, ...]] = None
+        self.io_stats = {"stack_builds": 0, "member_stack_builds": 0,
+                         "index_frame_stack_builds": 0}
 
     def __len__(self) -> int:
         return len(self.memories)
@@ -403,6 +443,16 @@ class MemoryStack:
             self._mem_versions = vers
             self.io_stats["member_stack_builds"] += 1
         return self._members_stack, self._counts_stack
+
+    def device_index_frames(self) -> jnp.ndarray:
+        """index_frame ids (S, cap) device arrays (cached per version)."""
+        vers = self._versions()
+        if self._index_frame_stack is None or vers != self._if_versions:
+            self._index_frame_stack = jnp.stack(
+                [m.device_index_frames() for m in self.memories])
+            self._if_versions = vers
+            self.io_stats["index_frame_stack_builds"] += 1
+        return self._index_frame_stack
 
     # ----------------------------------------------------------------- query
     def search(self, query_emb: jnp.ndarray, *, tau: float

@@ -21,6 +21,7 @@ The embedder is pluggable:
 
 from __future__ import annotations
 
+from dataclasses import replace
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -28,13 +29,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aux_models import AuxModel
+from repro.core.queryplan import QueryPlan, QuerySpec
 from repro.core.session import (QueryResult, SessionManager, SessionState,
                                 VenusConfig)
 from repro.data.text import tokenize_batch
 from repro.util import pow2_bucket
 
 __all__ = ["patchify", "MEMEmbedder", "VenusConfig", "QueryResult",
-           "VenusSystem", "SessionManager", "SessionState"]
+           "QuerySpec", "QueryPlan", "VenusSystem", "SessionManager",
+           "SessionState"]
 
 
 # ---------------------------------------------------------------------------
@@ -156,6 +159,20 @@ class VenusSystem:
         self.manager.flush([self.sid])
 
     # -------------------------------------------------------------- querying
+    def plan(self, specs: Sequence[QuerySpec]) -> QueryPlan:
+        """Declarative path: group specs into execution groups. Specs
+        are pinned to this system's single session."""
+        return self.manager.plan(
+            [replace(s, sid=self.sid) for s in specs])
+
+    def execute(self, plan: QueryPlan) -> List[QueryResult]:
+        return self.manager.execute(plan)
+
+    def query_specs(self, specs: Sequence[QuerySpec]) -> List[QueryResult]:
+        """``execute(plan(specs))`` — any registered retrieval strategy
+        through the fused one-scan-per-group path."""
+        return self.execute(self.plan(specs))
+
     def query(self, text: str, *, budget: Optional[int] = None,
               use_akr: bool = True, query_emb: Optional[np.ndarray] = None
               ) -> QueryResult:

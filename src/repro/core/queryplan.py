@@ -1,0 +1,520 @@
+"""Declarative query plans: ``QuerySpec`` → planner → fused executor.
+
+The querying stage is one algorithm family (a similarity scan over the
+hierarchical memory followed by a selection rule), but the legacy API
+exposed it through four divergent entry points of which only the
+sampling/AKR pair reached the fused cross-session device path. This
+module unifies all of it behind three layers:
+
+* **QuerySpec** — a declarative description of ONE query against ONE
+  session: text or precomputed embedding, retrieval strategy name,
+  budget, per-query ``tau``/``theta``/``beta`` overrides, and a seed
+  policy (``seed=None`` consumes the session's PRNG chain exactly like
+  the legacy paths; an explicit seed derives a detached key and leaves
+  the chain untouched).
+* **Planner** (``build_plan``) — groups compatible specs into
+  ``ExecutionGroup``s (same strategy + resolved budget + scan/sampling
+  parameters → one padded block) and emits an explicit ``QueryPlan``
+  the caller can inspect before running anything.
+* **Executor** (``execute_plan``) — runs ONE ``similarity_scan_stack``
+  launch per group over the sessions' ``MemoryStack`` and dispatches
+  vmapped per-strategy post-processing, so every registered strategy —
+  not just sampling/AKR — gets the "one scan, zero host gathers" path.
+
+Strategies live in a registry (``register_strategy`` / ``get_strategy``)
+wrapping every selection rule in ``repro.core.retrieval`` behind a
+common batched interface over ``(S, Q, cap)`` scan outputs. Each
+strategy declares how its draws expand to raw frame ids:
+
+* ``members`` — through the cluster member reservoirs, fused with the
+  sampling itself into one jit'd device program (sampling, AKR);
+* ``index``  — draws are memory slots mapped to their centroid frame id
+  via the device-resident index_frame table (top-k, BOLT, MDF, AKS);
+* ``raw``    — draws already are frame ids (uniform).
+
+PRNG discipline: within a group, sessions are visited in sorted-sid
+order and each session's chain advances by exactly its own chain-policy
+query count (padding lanes consume dummy keys), so every legacy entry
+point shimmed over this module stays draw-for-draw identical to its
+pre-redesign output — see tests/test_crosssession.py and
+tests/test_queryplan.py.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import (Callable, Dict, List, NamedTuple, Optional, Sequence,
+                    Tuple)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import retrieval as rt
+from repro.core.memory import VenusMemory, expand_gather
+
+
+# ---------------------------------------------------------------------------
+# Specs and plans
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class QuerySpec:
+    """One query against one session, declaratively.
+
+    ``budget`` means "draw count" for sampling/uniform/BOLT/MDF/AKS,
+    "k" for top-k, and "n_max" for AKR; ``None`` falls back to the
+    manager config (``cfg.n_max``). ``tau``/``theta``/``beta`` override
+    the config per query (``tau`` feeds both the scan softmax and
+    BOLT's inverse-transform CDF). ``seed=None`` = chain policy (consume
+    the session PRNG chain); an int detaches the query from the chain.
+    """
+    sid: int
+    text: Optional[str] = None
+    embedding: Optional[np.ndarray] = None
+    strategy: str = "akr"
+    budget: Optional[int] = None
+    tau: Optional[float] = None
+    theta: Optional[float] = None
+    beta: Optional[float] = None
+    seed: Optional[int] = None
+
+
+class GroupKey(NamedTuple):
+    """Resolved compatibility key: specs sharing it run as one block."""
+    strategy: str
+    budget: int
+    tau: float
+    theta: float
+    beta: float
+
+
+@dataclass
+class ExecutionGroup:
+    """One padded execution block: ONE fused scan answers every spec."""
+    strategy: "RetrievalStrategy"
+    key: GroupKey
+    indices: List[int] = field(default_factory=list)   # spec positions
+    order: Dict[int, List[int]] = field(default_factory=dict)
+
+    @property
+    def sids(self) -> Tuple[int, ...]:
+        return tuple(sorted(self.order))
+
+    @property
+    def qmax(self) -> int:
+        return max(len(v) for v in self.order.values())
+
+    def describe(self) -> str:
+        k = self.key
+        return (f"{k.strategy}(budget={k.budget}, tau={k.tau:g}, "
+                f"theta={k.theta:g}, beta={k.beta:g}) "
+                f"sessions={list(self.sids)} queries={len(self.indices)}")
+
+
+@dataclass
+class QueryPlan:
+    """The planner's output: inspectable before (or instead of) running."""
+    specs: List[QuerySpec]
+    groups: List[ExecutionGroup]
+
+    @property
+    def n_scans(self) -> int:
+        """Fused scan launches this plan will cost — one per group."""
+        return len(self.groups)
+
+    def describe(self) -> str:
+        lines = [f"QueryPlan: {len(self.specs)} specs -> "
+                 f"{len(self.groups)} groups ({self.n_scans} scans)"]
+        lines += [f"  group {i}: {g.describe()}"
+                  for i, g in enumerate(self.groups)]
+        return "\n".join(lines)
+
+
+def build_plan(specs: Sequence[QuerySpec], cfg) -> QueryPlan:
+    """Group compatible specs into execution groups.
+
+    ``cfg`` supplies the ``tau``/``theta``/``beta``/``n_max`` defaults
+    (any object with those attributes — ``VenusConfig`` in practice).
+    Groups are emitted in first-spec-appearance order; within a group,
+    sessions run in sorted-sid order and each session's queries keep
+    arrival order (the order its PRNG chain is consumed in).
+    """
+    specs = list(specs)
+    groups: Dict[GroupKey, ExecutionGroup] = {}
+    for j, spec in enumerate(specs):
+        if spec.text is None and spec.embedding is None:
+            raise ValueError(f"spec {j}: needs text or embedding")
+        strat = get_strategy(spec.strategy)
+        key = GroupKey(
+            strategy=strat.name,
+            budget=int(spec.budget if spec.budget is not None
+                       else cfg.n_max),
+            tau=float(spec.tau if spec.tau is not None else cfg.tau),
+            theta=float(spec.theta if spec.theta is not None
+                        else cfg.theta),
+            beta=float(spec.beta if spec.beta is not None else cfg.beta))
+        g = groups.get(key)
+        if g is None:
+            g = groups[key] = ExecutionGroup(strategy=strat, key=key)
+        g.indices.append(j)
+        g.order.setdefault(int(spec.sid), []).append(j)
+    return QueryPlan(specs=specs, groups=list(groups.values()))
+
+
+# ---------------------------------------------------------------------------
+# Strategy registry: every retrieval.py selection rule, batched
+# ---------------------------------------------------------------------------
+
+
+class StrategyContext(NamedTuple):
+    """Everything a strategy may post-process after the ONE fused scan."""
+    sims: jnp.ndarray             # (S, Q, cap) cosine similarities
+    probs: jnp.ndarray            # (S, Q, cap) temperature softmax
+    valid: jnp.ndarray            # (S, cap) per-session slot validity
+    emb: jnp.ndarray              # (S, cap, d) index embedding stack
+    keys: Optional[jnp.ndarray]   # (S, Q) PRNG keys (stochastic only)
+    total_frames: np.ndarray      # (S,) raw frames seen per session
+    key: GroupKey                 # resolved strategy/budget/params
+    qcount: np.ndarray            # (S,) real (non-padding) queries
+
+
+class StrategyOutput(NamedTuple):
+    draws: jnp.ndarray            # (S, Q, n) int32 — see strategy.expand
+    valid: jnp.ndarray            # (S, Q, n) bool — slot actually drawn
+    n_drawn: np.ndarray           # (S, Q) int
+    mass: np.ndarray              # (S, Q) float (nan if undefined)
+
+
+@dataclass(frozen=True)
+class RetrievalStrategy:
+    """A retrieval rule behind the common batched interface.
+
+    ``run`` post-processes the scan outputs into draws; ``run_expand``
+    (members strategies only) fuses selection + reservoir expansion into
+    one jit'd device program, returning ``(output, frame_ids, ok)``.
+    """
+    name: str
+    stochastic: bool              # consumes the session PRNG chain
+    expand: str                   # "members" | "index" | "raw"
+    run: Callable[[StrategyContext], StrategyOutput]
+    run_expand: Optional[Callable] = None
+
+    def __post_init__(self):
+        assert self.expand in ("members", "index", "raw"), self.expand
+        assert (self.run_expand is not None) == (self.expand == "members")
+
+
+_REGISTRY: Dict[str, RetrievalStrategy] = {}
+
+
+def register_strategy(strategy: RetrievalStrategy) -> RetrievalStrategy:
+    assert strategy.name not in _REGISTRY, strategy.name
+    _REGISTRY[strategy.name] = strategy
+    return strategy
+
+
+def get_strategy(name: str) -> RetrievalStrategy:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown retrieval strategy {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}") from None
+
+
+def strategies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# --- Venus sampling / AKR (expand through member reservoirs) ---------------
+
+
+@functools.partial(jax.jit, static_argnames=("theta", "beta", "n_max"))
+def _fused_akr_expand(probs, keys, members, counts, u, *, theta, beta,
+                      n_max):
+    """probs (S,Q,cap) + keys (S,Q) → AKR draws (S,Q,n_max) → member
+    frame ids (S,Q,n_max), all in one program: the reservoir gather runs
+    on the device-resident members stack, so nothing round-trips to host
+    between sampling and expansion. Each (s, q) lane is bitwise the
+    scalar ``akr_progressive`` + ``expand_draws`` chain for that key."""
+    akr = jax.vmap(lambda p, k: rt.akr_progressive_batch(
+        p, k, theta=theta, beta=beta, n_max=n_max))(probs, keys)
+    fids, ok = jax.vmap(lambda m, c, d, v: expand_gather(m, c, d, v, u))(
+        members, counts, akr.draws, akr.valid)
+    return akr, fids, ok
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _fused_sample_expand(probs, keys, members, counts, u, *, n):
+    """Fixed-budget variant: n draws per lane, every slot valid."""
+    draws, _ = jax.vmap(lambda p, k: rt.sampling_retrieve_batch(
+        p, k, n))(probs, keys)
+    valid = jnp.ones(draws.shape, bool)
+    fids, ok = jax.vmap(lambda m, c, d, v: expand_gather(m, c, d, v, u))(
+        members, counts, draws, valid)
+    return draws, fids, ok
+
+
+def _run_sampling(ctx: StrategyContext) -> StrategyOutput:
+    n = ctx.key.budget
+    draws, _ = jax.vmap(lambda p, k: rt.sampling_retrieve_batch(
+        p, k, n))(ctx.probs, ctx.keys)
+    sq = draws.shape[:2]
+    return StrategyOutput(draws, jnp.ones(draws.shape, bool),
+                          np.full(sq, n), np.full(sq, np.nan))
+
+
+def _run_expand_sampling(ctx: StrategyContext, members, counts, u):
+    draws, fids, ok = _fused_sample_expand(ctx.probs, ctx.keys, members,
+                                           counts, u, n=ctx.key.budget)
+    sq = draws.shape[:2]
+    out = StrategyOutput(draws, jnp.ones(draws.shape, bool),
+                         np.full(sq, ctx.key.budget), np.full(sq, np.nan))
+    return out, fids, ok
+
+
+def _run_akr(ctx: StrategyContext) -> StrategyOutput:
+    k = ctx.key
+    akr = jax.vmap(lambda p, kk: rt.akr_progressive_batch(
+        p, kk, theta=k.theta, beta=k.beta, n_max=k.budget))(
+            ctx.probs, ctx.keys)
+    return StrategyOutput(akr.draws, akr.valid, np.asarray(akr.n_drawn),
+                          np.asarray(akr.mass))
+
+
+def _run_expand_akr(ctx: StrategyContext, members, counts, u):
+    k = ctx.key
+    akr, fids, ok = _fused_akr_expand(ctx.probs, ctx.keys, members,
+                                      counts, u, theta=k.theta,
+                                      beta=k.beta, n_max=k.budget)
+    out = StrategyOutput(akr.draws, akr.valid, np.asarray(akr.n_drawn),
+                         np.asarray(akr.mass))
+    return out, fids, ok
+
+
+# --- baselines (expand via the index_frame table, or raw frame ids) --------
+
+
+def _run_topk(ctx: StrategyContext) -> StrategyOutput:
+    k = ctx.key.budget
+    draws = rt.topk_retrieve_batch(ctx.sims, ctx.valid, k)
+    sq = draws.shape[:2]
+    return StrategyOutput(draws, jnp.ones(draws.shape, bool),
+                          np.full(sq, k), np.full(sq, np.nan))
+
+
+def _run_uniform(ctx: StrategyContext) -> StrategyOutput:
+    n = ctx.key.budget
+    per_s = rt.uniform_retrieve_batch(
+        jnp.asarray(ctx.total_frames, jnp.int32), n)      # (S, n)
+    s, q = ctx.sims.shape[:2]
+    draws = jnp.broadcast_to(per_s[:, None, :], (s, q, n))
+    return StrategyOutput(draws, jnp.ones(draws.shape, bool),
+                          np.full((s, q), n), np.full((s, q), np.nan))
+
+
+def _run_bolt(ctx: StrategyContext) -> StrategyOutput:
+    n = ctx.key.budget
+    draws = rt.bolt_inverse_transform_batch(ctx.sims, ctx.valid, n,
+                                            tau=ctx.key.tau)
+    sq = draws.shape[:2]
+    return StrategyOutput(draws, jnp.ones(draws.shape, bool),
+                          np.full(sq, n), np.full(sq, np.nan))
+
+
+def _run_mdf(ctx: StrategyContext) -> StrategyOutput:
+    n = ctx.key.budget
+    per_s = rt.mdf_retrieve_batch(ctx.emb, ctx.valid, n)  # (S, n)
+    s, q = ctx.sims.shape[:2]
+    draws = jnp.broadcast_to(per_s[:, None, :], (s, q, n))
+    return StrategyOutput(draws, jnp.ones(draws.shape, bool),
+                          np.full((s, q), n), np.full((s, q), np.nan))
+
+
+def _run_aks(ctx: StrategyContext) -> StrategyOutput:
+    """AKS's recursive budget split concretises per-region masses, so
+    its post-processing is host-driven — the group still costs only the
+    ONE fused scan; padding lanes are skipped entirely."""
+    n = ctx.key.budget
+    s, q = ctx.sims.shape[:2]
+    rows = np.zeros((s, q, n), np.int32)
+    for si in range(s):
+        for qi in range(int(ctx.qcount[si])):
+            rows[si, qi] = np.asarray(rt.aks_retrieve(
+                ctx.sims[si, qi], ctx.valid[si], n))
+    draws = jnp.asarray(rows)
+    return StrategyOutput(draws, jnp.ones(draws.shape, bool),
+                          np.full((s, q), n), np.full((s, q), np.nan))
+
+
+register_strategy(RetrievalStrategy(
+    "sampling", stochastic=True, expand="members",
+    run=_run_sampling, run_expand=_run_expand_sampling))
+register_strategy(RetrievalStrategy(
+    "akr", stochastic=True, expand="members",
+    run=_run_akr, run_expand=_run_expand_akr))
+register_strategy(RetrievalStrategy(
+    "topk", stochastic=False, expand="index", run=_run_topk))
+register_strategy(RetrievalStrategy(
+    "uniform", stochastic=False, expand="raw", run=_run_uniform))
+register_strategy(RetrievalStrategy(
+    "bolt", stochastic=False, expand="index", run=_run_bolt))
+register_strategy(RetrievalStrategy(
+    "mdf", stochastic=False, expand="index", run=_run_mdf))
+register_strategy(RetrievalStrategy(
+    "aks", stochastic=False, expand="index", run=_run_aks))
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class QueryResult:
+    frame_ids: np.ndarray          # selected raw-frame ids (deduped for
+    #                                members strategies; rank/time order
+    #                                preserved for the baselines)
+    draws: np.ndarray              # index draws (or frame ids for "raw")
+    n_drawn: int
+    mass: float
+    timings: Dict[str, float]
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _gather_index_frames(table: jnp.ndarray, draws: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """table (S, cap) index_frame ids; draws (S, Q, n) slots → frame
+    ids (S, Q, n), all on device."""
+    cap = table.shape[1]
+    return jax.vmap(lambda t, d: t[jnp.clip(d, 0, cap - 1)])(table, draws)
+
+
+def execute_plan(manager, plan: QueryPlan) -> List[QueryResult]:
+    """Run every group of the plan: ONE ``similarity_scan_stack`` launch
+    per group, vmapped strategy post-processing, device-side expansion.
+    Returns results in the plan's spec order."""
+    specs = plan.specs
+    results: List[Optional[QueryResult]] = [None] * len(specs)
+    t0 = time.perf_counter()
+    missing = [j for j, s in enumerate(specs) if s.embedding is None]
+    embedded: Dict[int, np.ndarray] = {}
+    if missing:
+        embs = manager.embedder.embed_queries(
+            [specs[j].text for j in missing])
+        embedded = {j: np.asarray(embs[i], np.float32)
+                    for i, j in enumerate(missing)}
+    t_embed = time.perf_counter() - t0
+    for group in plan.groups:
+        _execute_group(manager, group, specs, embedded, results, t_embed)
+    return results
+
+
+def _spec_embedding(spec: QuerySpec, j: int, embedded) -> np.ndarray:
+    return (np.asarray(spec.embedding, np.float32)
+            if spec.embedding is not None else embedded[j])
+
+
+def _group_keys(manager, group: ExecutionGroup, specs, qmax
+                ) -> Optional[jnp.ndarray]:
+    """Per-session key rows (S, qmax). Chain-policy lanes consume the
+    session PRNG chain in arrival order — exactly the subkeys the same
+    queries would have drawn through the legacy paths; explicit-seed
+    lanes derive detached keys; padding lanes get dummy keys."""
+    if not group.strategy.stochastic:
+        return None
+    key_rows = []
+    for sid in group.sids:
+        idxs = group.order[sid]
+        n_chain = sum(1 for j in idxs if specs[j].seed is None)
+        chain = (manager.sessions[sid].next_keys(n_chain)
+                 if n_chain else None)
+        ks, ci = [], 0
+        for j in idxs:
+            if specs[j].seed is None:
+                ks.append(chain[ci])
+                ci += 1
+            else:
+                ks.append(jax.random.key(int(specs[j].seed)))
+        if len(ks) < qmax:
+            ks.extend(list(jax.random.split(jax.random.key(0),
+                                            qmax - len(ks))))
+        key_rows.append(jnp.stack(ks))
+    return jnp.stack(key_rows)
+
+
+def _execute_group(manager, group: ExecutionGroup, specs, embedded,
+                   results, t_embed: float) -> None:
+    cfg = manager.cfg
+    strat = group.strategy
+    sids = group.sids
+    sn, qmax = len(sids), group.qmax
+    timings: Dict[str, float] = {"embed_query": t_embed}
+
+    q_stack = np.zeros((sn, qmax, manager.embed_dim), np.float32)
+    qcount = np.zeros((sn,), np.int32)
+    for si, sid in enumerate(sids):
+        idxs = group.order[sid]
+        qcount[si] = len(idxs)
+        for qi, j in enumerate(idxs):
+            q_stack[si, qi] = _spec_embedding(specs[j], j, embedded)
+    keys = _group_keys(manager, group, specs, qmax)
+
+    # --- the ONE fused scan for this group -------------------------------
+    t0 = time.perf_counter()
+    stack = manager.memory_stack(sids)
+    sims, probs = stack.search(jnp.asarray(q_stack), tau=group.key.tau)
+    if sn == 1:      # single-session launch: legacy per-session accounting
+        manager.io_stats["scans"] += 1
+        manager.sessions[sids[0]].memory.io_stats["scans"] += 1
+    else:
+        manager.io_stats["fused_scans"] += 1
+    manager.io_stats["group_scans"] += 1
+    timings["similarity"] = time.perf_counter() - t0
+
+    # --- strategy post-processing + expansion ----------------------------
+    t0 = time.perf_counter()
+    emb_stack, valid = stack.device_stack()
+    ctx = StrategyContext(
+        sims=sims, probs=probs, valid=valid, emb=emb_stack, keys=keys,
+        total_frames=np.asarray(
+            [manager.sessions[s].stats["frames_seen"] for s in sids],
+            np.int64),
+        key=group.key, qcount=qcount)
+
+    if strat.expand == "members":
+        members, counts = stack.device_members()
+        u = jnp.asarray(VenusMemory.expand_u(cfg.seed, group.key.budget),
+                        jnp.int32)
+        out, fids, ok = strat.run_expand(ctx, members, counts, u)
+        manager.io_stats["device_expands"] += 1
+        fids_np, ok_np = np.asarray(fids), np.asarray(ok)
+    else:
+        out = strat.run(ctx)
+        ok_np = np.asarray(out.valid)
+        if strat.expand == "index":
+            fids_np = np.asarray(_gather_index_frames(
+                stack.device_index_frames(), out.draws))
+        else:                                   # raw: draws ARE frame ids
+            fids_np = np.asarray(out.draws)
+    draws_np = np.asarray(out.draws)
+    n_drawn, mass = np.asarray(out.n_drawn), np.asarray(out.mass)
+    timings["sample_expand"] = time.perf_counter() - t0
+
+    for si, sid in enumerate(sids):
+        for qi, j in enumerate(group.order[sid]):
+            lane = fids_np[si, qi][ok_np[si, qi]].astype(np.int64)
+            if strat.expand == "members":       # reservoir picks: dedup
+                lane = np.unique(lane)
+            results[j] = QueryResult(
+                frame_ids=lane, draws=draws_np[si, qi],
+                n_drawn=int(n_drawn[si, qi]), mass=float(mass[si, qi]),
+                timings=dict(timings))

@@ -168,6 +168,39 @@ def mdf_retrieve(embs: jnp.ndarray, valid: jnp.ndarray, n: int,
     return kept_idx[pick].astype(jnp.int32)
 
 
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk_retrieve_batch(sims: jnp.ndarray, valid: jnp.ndarray, k: int
+                        ) -> jnp.ndarray:
+    """Stacked Top-K: sims (S, Q, cap) + valid (S, cap) -> (S, Q, k).
+    Each (s, q) lane is exactly ``topk_retrieve(sims[s, q], valid[s], k)``."""
+    return jax.vmap(lambda s, v: jax.vmap(
+        lambda sq: topk_retrieve(sq, v, k))(s))(sims, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def uniform_retrieve_batch(total_frames: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Per-session uniform baseline: total_frames (S,) -> (S, n) frame
+    ids; row s matches ``uniform_retrieve(total_frames[s], n)``."""
+    return jax.vmap(lambda t: uniform_retrieve(t, n))(total_frames)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def bolt_inverse_transform_batch(sims: jnp.ndarray, valid: jnp.ndarray,
+                                 n: int, *, tau: float = 0.1) -> jnp.ndarray:
+    """Stacked BOLT: sims (S, Q, cap) + valid (S, cap) -> (S, Q, n)."""
+    return jax.vmap(lambda s, v: jax.vmap(
+        lambda sq: bolt_inverse_transform(sq, v, n, tau=tau))(s))(sims, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def mdf_retrieve_batch(embs: jnp.ndarray, valid: jnp.ndarray, n: int,
+                       *, sim_threshold: float = 0.95) -> jnp.ndarray:
+    """Stacked MDF (query-agnostic): embs (S, cap, d) + valid (S, cap)
+    -> (S, n); row s matches ``mdf_retrieve(embs[s], valid[s], n)``."""
+    return jax.vmap(lambda e, v: mdf_retrieve(
+        e, v, n, sim_threshold=sim_threshold))(embs, valid)
+
+
 def aks_retrieve(sims: jnp.ndarray, valid: jnp.ndarray, n: int,
                  *, depth: int = 3) -> jnp.ndarray:
     """AKS-style judge-&-split: recursively split the timeline, allocate

@@ -11,29 +11,30 @@ per-stream stages operating on a ``SessionState``:
   into each session's device-resident memory with batched appends (④).
 
 ``SessionManager`` owns N concurrent streams (the edge box's cameras)
-and drives the stages; ``query_batch`` runs Q queries through ONE
-similarity scan (the Pallas kernel already takes ``(Q, d)``), a vmapped
-sampling/AKR pass, and one vectorised cluster expansion — matching the
-sequential ``query`` path result-for-result while amortising every
-device round-trip across the batch.
+and drives the stages. Querying is declarative: ``plan(specs)`` groups
+``QuerySpec``s into execution groups and ``execute(plan)`` runs ONE
+fused similarity scan per group over the sessions' ``MemoryStack`` plus
+vmapped per-strategy post-processing (``repro.core.queryplan``). The
+legacy entry points — ``query``, ``query_batch``, ``query_batch_cross``,
+``query_topk`` — are thin shims over plan/execute and stay draw-for-draw
+identical to their pre-redesign outputs (same per-session PRNG chains).
 """
 
 from __future__ import annotations
 
-import functools
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import retrieval as rt
 from repro.core.aux_models import AuxModel, build_aux_prompt
 from repro.core.clustering import cluster_partition, frame_vectors
-from repro.core.memory import (FrameStore, MemoryStack, VenusMemory,
-                               expand_gather)
+from repro.core.memory import FrameStore, MemoryStack, VenusMemory
+from repro.core.queryplan import (QueryPlan, QueryResult, QuerySpec,
+                                  build_plan, execute_plan)
 from repro.core.scene import Partition, StreamSegmenter
 
 
@@ -54,15 +55,6 @@ class VenusConfig:
     beta: float = 1.0
     n_max: int = 32
     seed: int = 0
-
-
-@dataclass
-class QueryResult:
-    frame_ids: np.ndarray          # selected raw-frame ids (deduped)
-    draws: np.ndarray              # index draws
-    n_drawn: int
-    mass: float
-    timings: Dict[str, float]
 
 
 @dataclass
@@ -184,37 +176,6 @@ def commit_jobs(sessions: Mapping[int, SessionState], embedder,
 
 
 # ---------------------------------------------------------------------------
-# Fused sampling → AKR → reservoir expansion (cross-session, on device)
-# ---------------------------------------------------------------------------
-
-
-@functools.partial(jax.jit, static_argnames=("theta", "beta", "n_max"))
-def _fused_akr_expand(probs, keys, members, counts, u, *, theta, beta,
-                      n_max):
-    """probs (S,Q,cap) + keys (S,Q) → AKR draws (S,Q,n_max) → member
-    frame ids (S,Q,n_max), all in one program: the reservoir gather runs
-    on the device-resident members stack, so nothing round-trips to host
-    between sampling and expansion. Each (s, q) lane is bitwise the
-    scalar ``akr_progressive`` + ``expand_draws`` chain for that key."""
-    akr = jax.vmap(lambda p, k: rt.akr_progressive_batch(
-        p, k, theta=theta, beta=beta, n_max=n_max))(probs, keys)
-    fids, ok = jax.vmap(lambda m, c, d, v: expand_gather(m, c, d, v, u))(
-        members, counts, akr.draws, akr.valid)
-    return akr, fids, ok
-
-
-@functools.partial(jax.jit, static_argnames=("n",))
-def _fused_sample_expand(probs, keys, members, counts, u, *, n):
-    """Fixed-budget variant: n draws per lane, every slot valid."""
-    draws, _ = jax.vmap(lambda p, k: rt.sampling_retrieve_batch(
-        p, k, n))(probs, keys)
-    valid = jnp.ones(draws.shape, bool)
-    fids, ok = jax.vmap(lambda m, c, d, v: expand_gather(m, c, d, v, u))(
-        members, counts, draws, valid)
-    return draws, fids, ok
-
-
-# ---------------------------------------------------------------------------
 # Session manager
 # ---------------------------------------------------------------------------
 
@@ -233,8 +194,21 @@ class SessionManager:
         self._next_sid = 0
         self._stacks: Dict[Tuple[int, ...], MemoryStack] = {}
         # per-session scans vs fused cross-session scans, for the "one
-        # scan per query tick" invariant (tests/benches assert on these)
-        self.io_stats = {"scans": 0, "fused_scans": 0, "device_expands": 0}
+        # scan per query tick" invariant (tests/benches assert on these);
+        # group_scans counts every executor launch regardless of S
+        self.io_stats = {"scans": 0, "fused_scans": 0,
+                         "device_expands": 0, "group_scans": 0}
+
+    def reset_io_stats(self, *, include_memories: bool = True) -> None:
+        """Zero the scan counters (dict identity preserved) and, by
+        default, every session memory's transfer counters too — so
+        benchmarks/tests can assert per-phase counts without rebuilding
+        the manager."""
+        for k in self.io_stats:
+            self.io_stats[k] = 0
+        if include_memories:
+            for st in self.sessions.values():
+                st.memory.reset_io_stats()
 
     # ------------------------------------------------------------- lifecycle
     def create_session(self, sid: Optional[int] = None) -> int:
@@ -287,93 +261,48 @@ class SessionManager:
         commit_jobs(self.sessions, self.embedder, jobs)
 
     # -------------------------------------------------------------- querying
+    #
+    # The declarative plan/execute pair is the ONE query path; everything
+    # below it is a thin shim kept for API compatibility. All shims
+    # preserve the per-session PRNG chains draw-for-draw (see
+    # tests/test_crosssession.py + tests/test_queryplan.py).
+
+    def plan(self, specs: Sequence[QuerySpec]) -> QueryPlan:
+        """Group specs into execution groups (one fused scan each)."""
+        return build_plan(specs, self.cfg)
+
+    def execute(self, plan: QueryPlan) -> List[QueryResult]:
+        """Run a plan: one ``similarity_scan_stack`` launch per group."""
+        return execute_plan(self, plan)
+
+    def query_specs(self, specs: Sequence[QuerySpec]) -> List[QueryResult]:
+        """Convenience: ``execute(plan(specs))``."""
+        return self.execute(self.plan(specs))
+
+    @staticmethod
+    def _legacy_strategy(budget: Optional[int], use_akr: bool) -> str:
+        return "sampling" if (budget is not None and not use_akr) else "akr"
+
     def query(self, sid: int, text: str, *, budget: Optional[int] = None,
               use_akr: bool = True, query_emb: Optional[np.ndarray] = None
               ) -> QueryResult:
-        """Single-query path (budget set ⇒ fixed-N sampling; else AKR)."""
-        cfg = self.cfg
-        st = self.sessions[sid]
-        timings: Dict[str, float] = {}
-        t0 = time.perf_counter()
-        if query_emb is None:
-            query_emb = self.embedder.embed_query(text)
-        timings["embed_query"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        sims, probs = st.memory.search(jnp.asarray(query_emb)[None],
-                                       tau=cfg.tau)
-        self.io_stats["scans"] += 1
-        probs0 = probs[0]
-        timings["similarity"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        sub = st.next_keys(1)[0]
-        if budget is not None and not use_akr:
-            draws, _ = rt.sampling_retrieve(probs0, sub, budget)
-            valid = np.ones((budget,), bool)
-            n_drawn, mass = budget, float("nan")
-        else:
-            n_max = budget if budget is not None else cfg.n_max
-            res = rt.akr_progressive(probs0, sub, theta=cfg.theta,
-                                     beta=cfg.beta, n_max=n_max)
-            draws, valid = np.asarray(res.draws), np.asarray(res.valid)
-            n_drawn, mass = int(res.n_drawn), float(res.mass)
-        timings["sampling"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        frame_ids = st.memory.expand_draws(np.asarray(draws), valid,
-                                           seed=cfg.seed)
-        timings["expand"] = time.perf_counter() - t0
-        return QueryResult(frame_ids=frame_ids, draws=np.asarray(draws),
-                           n_drawn=n_drawn, mass=mass, timings=timings)
+        """Single-query shim (budget set ⇒ fixed-N sampling; else AKR)."""
+        return self.query_specs([QuerySpec(
+            sid=sid, text=text, embedding=query_emb,
+            strategy=self._legacy_strategy(budget, use_akr),
+            budget=budget)])[0]
 
     def query_batch(self, sid: int, texts: Optional[Sequence[str]] = None,
                     *, query_embs: Optional[np.ndarray] = None,
                     budget: Optional[int] = None, use_akr: bool = True
                     ) -> List[QueryResult]:
-        """Q queries through ONE similarity scan + vmapped sampling/AKR +
-        vectorised expansion. Draws the same per-query subkeys as Q
-        sequential ``query`` calls, so results match query-for-query."""
-        cfg = self.cfg
-        st = self.sessions[sid]
-        timings: Dict[str, float] = {}
-        t0 = time.perf_counter()
-        if query_embs is None:
-            query_embs = self.embedder.embed_queries(list(texts))
-        qe = jnp.asarray(query_embs)
-        qn = qe.shape[0]
-        timings["embed_query"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        sims, probs = st.memory.search(qe, tau=cfg.tau)     # (Q, cap)
-        self.io_stats["scans"] += 1
-        timings["similarity"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        keys = st.next_keys(qn)
-        if budget is not None and not use_akr:
-            draws, _ = rt.sampling_retrieve_batch(probs, keys, budget)
-            draws = np.asarray(draws)
-            valid = np.ones((qn, budget), bool)
-            n_drawn = np.full((qn,), budget)
-            mass = np.full((qn,), np.nan)
-        else:
-            n_max = budget if budget is not None else cfg.n_max
-            res = rt.akr_progressive_batch(probs, keys, theta=cfg.theta,
-                                           beta=cfg.beta, n_max=n_max)
-            draws, valid = np.asarray(res.draws), np.asarray(res.valid)
-            n_drawn, mass = np.asarray(res.n_drawn), np.asarray(res.mass)
-        timings["sampling"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        frame_lists = st.memory.expand_draws_batch(draws, valid,
-                                                   seed=cfg.seed)
-        timings["expand"] = time.perf_counter() - t0
-        # timings are whole-batch stage times; each result gets its own
-        # copy so callers can annotate without aliasing the others
-        return [QueryResult(frame_ids=frame_lists[i], draws=draws[i],
-                            n_drawn=int(n_drawn[i]), mass=float(mass[i]),
-                            timings=dict(timings)) for i in range(qn)]
+        """Q same-session queries → one single-group plan → ONE scan.
+        Draws the same per-query subkeys as Q sequential ``query`` calls,
+        so results match query-for-query."""
+        n = len(query_embs) if query_embs is not None else len(texts)
+        return self.query_batch_cross(
+            [sid] * n, texts, query_embs=query_embs, budget=budget,
+            use_akr=use_akr)
 
     def query_batch_cross(self, sids: Sequence[int],
                           texts: Optional[Sequence[str]] = None, *,
@@ -382,84 +311,25 @@ class SessionManager:
                           use_akr: bool = True) -> List[QueryResult]:
         """Queries against SEVERAL sessions through ONE fused scan.
 
-        ``sids[j]`` is the session query j targets. The queries are
-        packed into a per-session padded block (S, Qmax, d), scanned over
-        the ``MemoryStack`` in a single kernel launch, and sampled +
-        expanded by one jit'd program over the device-resident members
-        stack — zero host-side reservoir gathers. Each session's PRNG
-        chain advances by exactly its own query count (padding lanes
-        consume dummy keys), so results are equivalent query-for-query
-        to per-session ``query_batch`` calls and to sequential
-        ``query`` calls. Results come back in input order."""
-        cfg = self.cfg
+        ``sids[j]`` is the session query j targets. All specs share one
+        strategy/budget, so the planner emits a single execution group:
+        one padded-stack scan + one fused sampling→expansion program,
+        with each session's PRNG chain advancing by exactly its own
+        query count. Results come back in input order."""
         sids = [int(s) for s in sids]
-        timings: Dict[str, float] = {}
-        t0 = time.perf_counter()
-        if query_embs is None:
-            query_embs = self.embedder.embed_queries(list(texts))
-        qe = np.asarray(query_embs, np.float32)
-        assert len(sids) == qe.shape[0]
-
-        # group by session, preserving within-session arrival order (the
-        # order the per-session subkey chain is consumed in)
-        order: Dict[int, List[int]] = {}
-        for j, sid in enumerate(sids):
-            order.setdefault(sid, []).append(j)
-        group_sids = sorted(order)
-        sn = len(group_sids)
-        qmax = max(len(order[s]) for s in group_sids)
-        q_stack = np.zeros((sn, qmax, qe.shape[1]), np.float32)
-        key_rows = []
-        for si, sid in enumerate(group_sids):
-            idxs = order[sid]
-            q_stack[si, :len(idxs)] = qe[idxs]
-            ks = self.sessions[sid].next_keys(len(idxs))
-            if len(idxs) < qmax:      # padding lanes: dummy keys, results
-                pad = jax.random.split(jax.random.key(0), qmax - len(idxs))
-                ks = jnp.concatenate([ks, pad])
-            key_rows.append(ks)
-        keys = jnp.stack(key_rows)                          # (S, Qmax)
-        timings["embed_query"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        stack = self.memory_stack(tuple(group_sids))
-        sims, probs = stack.search(jnp.asarray(q_stack), tau=cfg.tau)
-        self.io_stats["fused_scans"] += 1
-        timings["similarity"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        members, counts = stack.device_members()
-        if budget is not None and not use_akr:
-            u = jnp.asarray(VenusMemory.expand_u(cfg.seed, budget),
-                            jnp.int32)
-            draws, fids, ok = _fused_sample_expand(
-                probs, keys, members, counts, u, n=budget)
-            draws = np.asarray(draws)
-            n_drawn = np.full((sn, qmax), budget)
-            mass = np.full((sn, qmax), np.nan)
+        strategy = self._legacy_strategy(budget, use_akr)
+        if query_embs is not None:
+            qe = np.asarray(query_embs, np.float32)
+            assert len(sids) == qe.shape[0]
+            specs = [QuerySpec(sid=s, embedding=qe[j], strategy=strategy,
+                               budget=budget)
+                     for j, s in enumerate(sids)]
         else:
-            n_max = budget if budget is not None else cfg.n_max
-            u = jnp.asarray(VenusMemory.expand_u(cfg.seed, n_max),
-                            jnp.int32)
-            akr, fids, ok = _fused_akr_expand(
-                probs, keys, members, counts, u,
-                theta=cfg.theta, beta=cfg.beta, n_max=n_max)
-            draws = np.asarray(akr.draws)
-            n_drawn, mass = np.asarray(akr.n_drawn), np.asarray(akr.mass)
-        self.io_stats["device_expands"] += 1
-        fids, ok = np.asarray(fids), np.asarray(ok)
-        timings["sample_expand"] = time.perf_counter() - t0
-
-        results: List[Optional[QueryResult]] = [None] * len(sids)
-        for si, sid in enumerate(group_sids):
-            for qi, j in enumerate(order[sid]):
-                frame_ids = np.unique(
-                    fids[si, qi][ok[si, qi]].astype(np.int64))
-                results[j] = QueryResult(
-                    frame_ids=frame_ids, draws=draws[si, qi],
-                    n_drawn=int(n_drawn[si, qi]),
-                    mass=float(mass[si, qi]), timings=dict(timings))
-        return results
+            assert len(sids) == len(texts)
+            specs = [QuerySpec(sid=s, text=t, strategy=strategy,
+                               budget=budget)
+                     for s, t in zip(sids, texts)]
+        return self.query_specs(specs)
 
     # stacked device views are ~S×(index + members) buffers each; bound
     # how many distinct session subsets stay cached (LRU) so arbitrary
@@ -478,14 +348,10 @@ class SessionManager:
 
     def query_topk(self, sid: int, text: str, k: int,
                    query_emb: Optional[np.ndarray] = None) -> np.ndarray:
-        st = self.sessions[sid]
-        if query_emb is None:
-            query_emb = self.embedder.embed_query(text)
-        # same device-index path as query/query_batch: the scan runs over
-        # memory.search so io_stats (uploads + scans) stays accountable
-        sims, _ = st.memory.search(jnp.asarray(query_emb)[None],
-                                   tau=self.cfg.tau)
-        self.io_stats["scans"] += 1
-        _, valid = st.memory.device_index()
-        idx = rt.topk_retrieve(sims[0], valid, k)
-        return st.memory.index_frames(np.asarray(idx))
+        """Greedy Top-K shim: same accounted device-index path as every
+        other strategy (scan counted, no re-upload), frame ids in rank
+        order via the device-resident index_frame table."""
+        res = self.query_specs([QuerySpec(
+            sid=sid, text=text, embedding=query_emb, strategy="topk",
+            budget=k)])[0]
+        return res.frame_ids

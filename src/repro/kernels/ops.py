@@ -35,6 +35,23 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# Dispatch-level launch accounting: every similarity scan entering the
+# kernel layer is counted here, independent of backend, so the query-plan
+# executor's "ONE similarity_scan_stack launch per execution group"
+# invariant is assertable at the layer that actually launches the scan
+# (manager/memory io_stats only see their own call sites).
+_scan_counts = {"similarity": 0, "similarity_stack": 0}
+
+
+def scan_counts() -> dict:
+    return dict(_scan_counts)
+
+
+def reset_scan_counts() -> None:
+    for k in _scan_counts:
+        _scan_counts[k] = 0
+
+
 # ---------------------------------------------------------------------------
 
 
@@ -71,6 +88,7 @@ def mla_decode_attention(q_abs, q_rope, ckv, krope, valid, *,
 def similarity(query, index, *, tau: float, valid
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """query (Q,d) × index (N,d) -> (sims (Q,N), probs (Q,N))."""
+    _scan_counts["similarity"] += 1
     if _BACKEND == "pallas":
         from repro.kernels import similarity as sk
         n = index.shape[0]
@@ -88,6 +106,7 @@ def similarity_stack(query, index, *, tau: float, valid
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Cross-session scan: query (S,Q,d) × index (S,N,d) + valid (S,N)
     -> (sims (S,Q,N), probs (S,Q,N)) in ONE kernel launch."""
+    _scan_counts["similarity_stack"] += 1
     if _BACKEND == "pallas":
         from repro.kernels import similarity as sk
         sims, m, l = sk.similarity_scan_stack(query, index, valid, tau=tau,

@@ -10,11 +10,12 @@ continuous-batching engine:
                 └─▶ patch-embedded into ``Request.vision_embeds`` and
                     submitted to the ``ServingEngine`` slots.
 
-Queries arriving in the same service tick are grouped by budget ONLY —
-not by ``(session, budget)`` — and each group runs through the fused
-cross-session query path: one similarity scan over the stacked session
-indices answers every query in the group, regardless of how many
-sessions it spans, and the VLM answers them under continuous batching.
+Queries arriving in the same service tick compile to ONE query plan:
+each query becomes a declarative ``QuerySpec`` and the planner groups
+compatible specs (same strategy + budget class) into execution groups —
+one fused similarity scan over the stacked session indices answers a
+whole group regardless of how many sessions it spans, whatever the
+strategy mix, and the VLM answers everything under continuous batching.
 """
 
 from __future__ import annotations
@@ -25,6 +26,7 @@ from typing import Dict, List, Mapping, Optional, Sequence
 import numpy as np
 
 from repro.core.pipeline import patchify
+from repro.core.queryplan import QueryPlan, QuerySpec
 from repro.core.session import SessionManager
 from repro.serving.engine import Request, ServingEngine
 
@@ -38,9 +40,15 @@ class StreamQuery:
     prompt_tokens: np.ndarray
     query_emb: Optional[np.ndarray] = None
     budget: Optional[int] = None
+    strategy: str = "akr"          # any registered retrieval strategy
     max_new_tokens: int = 12
     # filled by the service
     frame_ids: Optional[np.ndarray] = None
+
+    def to_spec(self) -> QuerySpec:
+        return QuerySpec(sid=self.sid, text=self.text,
+                         embedding=self.query_emb,
+                         strategy=self.strategy, budget=self.budget)
 
 
 class VenusService:
@@ -78,31 +86,27 @@ class VenusService:
             pe = np.pad(pe, ((0, cfg.vision_tokens - pe.shape[0]), (0, 0)))
         return pe.astype(np.float32)
 
+    def plan(self, queries: Sequence[StreamQuery]) -> QueryPlan:
+        """The retrieval plan one service tick compiles to — inspectable
+        before anything runs (``plan.n_scans`` == number of execution
+        groups == number of fused scans)."""
+        return self.manager.plan([q.to_spec() for q in queries])
+
     def submit(self, queries: Sequence[StreamQuery]) -> List[Request]:
-        """Retrieve (ONE fused cross-session scan per budget group, no
-        matter how many streams), build the VLM requests, and enqueue
-        them on the engine."""
-        groups: Dict[Optional[int], List[StreamQuery]] = {}
-        for q in queries:
-            groups.setdefault(q.budget, []).append(q)
+        """Compile the tick's queries into ONE plan (the planner groups
+        compatible specs; each group costs one fused cross-session scan
+        no matter how many streams it spans), retrieve, build the VLM
+        requests, and enqueue them on the engine in arrival order."""
+        results = self.manager.execute(self.plan(queries))
         reqs: List[Request] = []
-        for budget, group in groups.items():
-            # honour caller-supplied embeddings; embed only the rest
-            embs = np.stack([
-                q.query_emb if q.query_emb is not None
-                else self.manager.embedder.embed_query(q.text)
-                for q in group])
-            results = self.manager.query_batch_cross(
-                [q.sid for q in group], [q.text for q in group],
-                query_embs=embs, budget=budget)
-            for q, res in zip(group, results):
-                q.frame_ids = res.frame_ids
-                req = Request(
-                    rid=q.rid, tokens=np.asarray(q.prompt_tokens, np.int32),
-                    max_new_tokens=q.max_new_tokens,
-                    vision_embeds=self._vision_embeds(q.sid, res.frame_ids))
-                reqs.append(req)
-                self.engine.submit(req)
+        for q, res in zip(queries, results):
+            q.frame_ids = res.frame_ids
+            req = Request(
+                rid=q.rid, tokens=np.asarray(q.prompt_tokens, np.int32),
+                max_new_tokens=q.max_new_tokens,
+                vision_embeds=self._vision_embeds(q.sid, res.frame_ids))
+            reqs.append(req)
+            self.engine.submit(req)
         return reqs
 
     def answer(self, queries: Sequence[StreamQuery]) -> List[Request]:

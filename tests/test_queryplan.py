@@ -1,0 +1,276 @@
+"""Unified query-plan API: QuerySpec → planner → fused executor.
+
+Equivalence suite for the PR-3 tentpole invariant — every registered
+retrieval strategy executed through the fused plan path (one
+``similarity_scan_stack`` launch per execution group, vmapped
+post-processing, device-side expansion) must match its direct
+``retrieval.py`` call on identical inputs, for unequal session sizes
+and the S=1 degenerate stack. Plus planner semantics (grouping,
+validation, inspectability), the one-scan-per-group accounting at both
+the manager and the kernel-dispatch layer, the seed policy, and the
+``reset_io_stats`` helpers.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import retrieval as rt
+from repro.core.queryplan import (QuerySpec, build_plan, get_strategy,
+                                  strategies)
+from repro.core.session import SessionManager, VenusConfig
+from repro.data.video import (OracleEmbedder, PixelEmbedder, VideoWorld,
+                              WorldConfig)
+from repro.kernels import ops as kops
+
+ALL_STRATEGIES = ("sampling", "akr", "topk", "uniform", "bolt", "mdf",
+                  "aks")
+BUDGET = 6
+
+
+def _ingest(worlds, chunk=96):
+    mgr = SessionManager(VenusConfig(), PixelEmbedder(dim=64),
+                         embed_dim=64)
+    sids = [mgr.create_session() for _ in worlds]
+    for sid, w in zip(sids, worlds):
+        for i in range(0, w.total_frames, chunk):
+            mgr.ingest_tick({sid: w.frames[i:i + chunk]})
+    mgr.flush()
+    return mgr
+
+
+@pytest.fixture(scope="module")
+def setups():
+    """(worlds, plan-path manager, direct-path manager) per S, built
+    once — the equivalence tests consume both managers' PRNG chains in
+    lockstep, so sharing them across strategies is sound."""
+    cache = {}
+
+    def get(n_sessions):
+        if n_sessions not in cache:
+            worlds = [VideoWorld(WorldConfig(n_scenes=3 + s, seed=60 + s))
+                      for s in range(n_sessions)]
+            cache[n_sessions] = (worlds, _ingest(worlds), _ingest(worlds))
+        return cache[n_sessions]
+
+    return get
+
+
+def _query_embs(worlds, qsids, seed0=40):
+    return np.stack([
+        OracleEmbedder(worlds[s], dim=64).embed_queries(
+            worlds[s].make_queries(1, seed=seed0 + j))[0]
+        for j, s in enumerate(qsids)])
+
+
+def _direct_results(mgr, qsids, qes, strategy, budget):
+    """The strategy's direct retrieval.py call per query, sessions in
+    the executor's canonical order (sorted sid, arrival order within a
+    session — the order the PRNG chains are consumed in)."""
+    cfg = mgr.cfg
+    order = {}
+    for j, s in enumerate(qsids):
+        order.setdefault(s, []).append(j)
+    out = [None] * len(qsids)
+    for s in sorted(order):
+        st = mgr[s]
+        for j in order[s]:
+            emb, valid = st.memory.device_index()
+            sims, probs = st.memory.search(jnp.asarray(qes[j])[None],
+                                           tau=cfg.tau)
+            sims0, probs0 = sims[0], probs[0]
+            if strategy == "sampling":
+                sub = st.next_keys(1)[0]
+                draws, _ = rt.sampling_retrieve(probs0, sub, budget)
+                draws = np.asarray(draws)
+                fids = st.memory.expand_draws(
+                    draws, np.ones(budget, bool), seed=cfg.seed)
+            elif strategy == "akr":
+                sub = st.next_keys(1)[0]
+                res = rt.akr_progressive(probs0, sub, theta=cfg.theta,
+                                         beta=cfg.beta, n_max=budget)
+                draws = np.asarray(res.draws)
+                fids = st.memory.expand_draws(
+                    draws, np.asarray(res.valid), seed=cfg.seed)
+            elif strategy == "topk":
+                draws = np.asarray(rt.topk_retrieve(sims0, valid, budget))
+                fids = st.memory.index_frames(draws)
+            elif strategy == "uniform":
+                draws = np.asarray(rt.uniform_retrieve(
+                    st.stats["frames_seen"], budget))
+                fids = draws
+            elif strategy == "bolt":
+                draws = np.asarray(rt.bolt_inverse_transform(
+                    sims0, valid, budget, tau=cfg.tau))
+                fids = st.memory.index_frames(draws)
+            elif strategy == "mdf":
+                draws = np.asarray(rt.mdf_retrieve(emb, valid, budget))
+                fids = st.memory.index_frames(draws)
+            elif strategy == "aks":
+                draws = np.asarray(rt.aks_retrieve(sims0, valid, budget))
+                fids = st.memory.index_frames(draws)
+            else:
+                raise AssertionError(strategy)
+            out[j] = (draws, np.asarray(fids))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# every registry strategy: fused plan path == direct retrieval.py call
+# ---------------------------------------------------------------------------
+
+
+def test_registry_covers_all_retrieval_strategies():
+    assert strategies() == tuple(sorted(ALL_STRATEGIES))
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+@pytest.mark.parametrize("n_sessions,qsids", [
+    (1, [0, 0]),                     # S=1: degenerate stack
+    (3, [0, 1, 1, 2, 0]),            # S=3: unequal sizes + query counts
+])
+def test_strategy_plan_path_matches_direct(setups, strategy, n_sessions,
+                                           qsids):
+    worlds, mgr_plan, mgr_direct = setups(n_sessions)
+    if n_sessions > 1:               # genuinely unequal session sizes
+        assert len({mgr_plan[s].memory.size
+                    for s in range(n_sessions)}) > 1
+    qes = _query_embs(worlds, qsids, seed0=40 + 11 * len(strategy))
+
+    specs = [QuerySpec(sid=s, embedding=qes[j], strategy=strategy,
+                       budget=BUDGET) for j, s in enumerate(qsids)]
+    plan = mgr_plan.plan(specs)
+    assert len(plan.groups) == 1     # one strategy/budget ⇒ one group
+    got = mgr_plan.execute(plan)
+    want = _direct_results(mgr_direct, qsids, qes, strategy, BUDGET)
+
+    for res, (draws, fids) in zip(got, want):
+        np.testing.assert_array_equal(res.draws, draws)
+        np.testing.assert_array_equal(res.frame_ids, fids)
+
+
+# ---------------------------------------------------------------------------
+# planner: grouping, validation, inspectability
+# ---------------------------------------------------------------------------
+
+
+def test_planner_groups_by_strategy_and_budget_class():
+    e = np.zeros(8, np.float32)
+    specs = [QuerySpec(sid=0, embedding=e, strategy="akr"),
+             QuerySpec(sid=1, embedding=e, strategy="akr"),
+             QuerySpec(sid=0, embedding=e, strategy="topk", budget=4),
+             QuerySpec(sid=2, embedding=e, strategy="akr", budget=16),
+             QuerySpec(sid=1, embedding=e, strategy="topk", budget=4)]
+    plan = build_plan(specs, VenusConfig())
+    assert plan.n_scans == len(plan.groups) == 3
+    assert [g.key.strategy for g in plan.groups] == ["akr", "topk", "akr"]
+    # same (strategy, budget class) fuses across sessions
+    assert plan.groups[0].sids == (0, 1)
+    assert plan.groups[1].sids == (0, 1)
+    assert plan.groups[1].indices == [2, 4]
+    # akr with an explicit n_max is a different budget class
+    assert plan.groups[2].key.budget == 16
+    assert "topk" in plan.describe()
+
+
+def test_planner_parameter_overrides_split_groups():
+    e = np.zeros(8, np.float32)
+    specs = [QuerySpec(sid=0, embedding=e, strategy="akr"),
+             QuerySpec(sid=0, embedding=e, strategy="akr", theta=0.5),
+             QuerySpec(sid=0, embedding=e, strategy="akr", tau=0.2)]
+    plan = build_plan(specs, VenusConfig())
+    assert len(plan.groups) == 3
+    assert {g.key.theta for g in plan.groups} == {0.9, 0.5}
+    assert {g.key.tau for g in plan.groups} == {0.1, 0.2}
+
+
+def test_planner_rejects_bad_specs():
+    with pytest.raises(KeyError, match="unknown retrieval strategy"):
+        build_plan([QuerySpec(sid=0, text="q", strategy="nope")],
+                   VenusConfig())
+    with pytest.raises(ValueError, match="text or embedding"):
+        build_plan([QuerySpec(sid=0)], VenusConfig())
+    with pytest.raises(KeyError):
+        get_strategy("nope")
+
+
+# ---------------------------------------------------------------------------
+# acceptance: ONE similarity_scan_stack launch per execution group
+# ---------------------------------------------------------------------------
+
+
+def test_one_stack_launch_per_group_all_strategies(setups):
+    """A mixed-strategy plan over 3 sessions: kernel-dispatch counters
+    must show exactly len(groups) similarity_scan_stack launches, zero
+    per-session 2-D scans, and zero host reservoir gathers."""
+    worlds, mgr, _ = setups(3)
+    qsids = [0, 1, 2, 0, 1, 2, 1]
+    strat_of = [ALL_STRATEGIES[j % len(ALL_STRATEGIES)]
+                for j in range(len(qsids))]
+    qes = _query_embs(worlds, qsids, seed0=90)
+    specs = [QuerySpec(sid=s, embedding=qes[j], strategy=strat_of[j],
+                       budget=BUDGET) for j, s in enumerate(qsids)]
+    plan = mgr.plan(specs)
+    assert len(plan.groups) == len(set(strat_of))
+
+    kops.reset_scan_counts()
+    before = dict(mgr.io_stats)
+    host_gathers = sum(mgr[s].memory.io_stats["host_expand_gathers"]
+                       for s in range(3))
+    results = mgr.execute(plan)
+    counts = kops.scan_counts()
+    assert counts["similarity_stack"] == len(plan.groups)
+    assert counts["similarity"] == 0
+    assert (mgr.io_stats["group_scans"]
+            == before["group_scans"] + len(plan.groups))
+    assert sum(mgr[s].memory.io_stats["host_expand_gathers"]
+               for s in range(3)) == host_gathers
+    assert all(r is not None and len(r.frame_ids) > 0 for r in results)
+
+
+# ---------------------------------------------------------------------------
+# seed policy: explicit seeds detach from the session PRNG chain
+# ---------------------------------------------------------------------------
+
+
+def test_fixed_seed_specs_leave_chain_untouched(setups):
+    worlds, mgr_a, mgr_b = setups(1)
+    qes = _query_embs(worlds, [0, 0], seed0=120)
+
+    # two identical fixed-seed specs on mgr_a only: reproducible, and
+    # the session chain must not advance
+    spec = QuerySpec(sid=0, embedding=qes[0], strategy="akr", seed=7)
+    r1 = mgr_a.query_specs([spec])[0]
+    r2 = mgr_a.query_specs([spec])[0]
+    np.testing.assert_array_equal(r1.draws, r2.draws)
+    np.testing.assert_array_equal(r1.frame_ids, r2.frame_ids)
+
+    # chain-policy follow-up still matches the twin manager that never
+    # ran the seeded queries ⇒ the chain position is unchanged
+    a = mgr_a.query(0, "", query_emb=qes[1])
+    b = mgr_b.query(0, "", query_emb=qes[1])
+    np.testing.assert_array_equal(a.draws, b.draws)
+    np.testing.assert_array_equal(a.frame_ids, b.frame_ids)
+
+
+# ---------------------------------------------------------------------------
+# io_stats reset helpers
+# ---------------------------------------------------------------------------
+
+
+def test_reset_io_stats_manager_and_memory(setups):
+    worlds, mgr, _ = setups(1)
+    qes = _query_embs(worlds, [0], seed0=150)
+    mgr.query(0, "", query_emb=qes[0])
+    mem = mgr[0].memory
+    assert any(v for v in mgr.io_stats.values())
+    assert any(v for v in mem.io_stats.values())
+
+    held_mgr, held_mem = mgr.io_stats, mem.io_stats
+    mgr.reset_io_stats()
+    assert all(v == 0 for v in mgr.io_stats.values())
+    assert all(v == 0 for v in mem.io_stats.values())
+    # dict identity preserved: held references observe the live counters
+    assert mgr.io_stats is held_mgr and mem.io_stats is held_mem
+    mgr.query(0, "", query_emb=qes[0])
+    assert held_mgr["scans"] == 1 and held_mem["scans"] == 1
