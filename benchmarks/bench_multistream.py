@@ -17,6 +17,15 @@ The edge box serves N concurrent camera streams with real-time queries
   ALL sessions' stacked indices vs one ``query_batch`` scan per session
   vs fully sequential ``query`` calls, with scans-per-tick and
   host↔device transfer counters from ``io_stats``.
+* **arena vs restack** (``--arena``) — interleaved ingest-tick/query
+  rounds where every session grows every tick: the grow-in-place
+  ``MemoryArena`` (zero restacks, donated appends) vs the PR-2/3
+  detached path (device stack rebuilt every round), with restacks/tick
+  and append bandwidth from the counters.
+
+``--json`` additionally writes every emitted row (plus run metadata) to
+``BENCH_multistream.json`` so CI can upload a machine-readable perf
+artifact per commit.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run --only multistream
    (or  PYTHONPATH=src python benchmarks/bench_multistream.py)
@@ -25,6 +34,7 @@ Usage:  PYTHONPATH=src python -m benchmarks.run --only multistream
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 from typing import Dict
@@ -36,6 +46,7 @@ if __package__ in (None, ""):               # direct-script invocation
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit
 from repro.core.memory import VenusMemory
 from repro.core.pipeline import VenusConfig, VenusSystem
@@ -295,6 +306,92 @@ def _bench_query_cross(n_sessions: int, n_queries: int, chunk: int = 64,
           **transfers(mgr, sids)})
 
 
+def _bench_arena(n_sessions: int, n_queries: int, chunk: int = 64,
+                 ticks: int = 5, n_scenes: int = 6):
+    """Grow-in-place arena vs the PR-2/3 restack path.
+
+    The adversarial schedule for a version-cached stack: every tick
+    grows EVERY session (``max_partition_len`` < chunk forces ≥ 1
+    partition close per tick), then a query plan runs — the detached
+    path must restack the grown sessions' device buffers before each
+    scan, the arena path consumes its super-buffers as-is. Reports
+    wall time split into ingest/query, restacks per tick, and append
+    bandwidth (rows moved per second of ingest)."""
+    cfg = VenusConfig(max_partition_len=min(48, chunk - 16))
+    worlds = [VideoWorld(WorldConfig(n_scenes=n_scenes, seed=20 + s))
+              for s in range(n_sessions)]
+
+    def chunk_at(w, t):
+        lo = (t * chunk) % max(w.total_frames - chunk, 1)
+        return w.frames[lo:lo + chunk]
+
+    qe_by_tick = [np.concatenate([OracleEmbedder(w, dim=64).embed_queries(
+        w.make_queries(n_queries, seed=31 + 7 * t)) for w in worlds])
+        for t in range(ticks)]
+    qsids = [s for s in range(n_sessions) for _ in range(n_queries)]
+
+    def run_mode(use_arena: bool):
+        mgr = SessionManager(cfg, PixelEmbedder(dim=64), embed_dim=64,
+                             use_arena=use_arena)
+        sids = [mgr.create_session() for _ in range(n_sessions)]
+        tick_sids = [sids[s] for s in qsids]
+        # warm-up: compile ingest + append + scan + expansion paths
+        mgr.ingest_tick({sid: chunk_at(w, 0)
+                         for sid, w in zip(sids, worlds)})
+        mgr.query_batch_cross(tick_sids, query_embs=qe_by_tick[0])
+        mgr.reset_io_stats()
+        rows0 = sum(mgr[s].memory.size for s in sids)
+
+        t_ingest = t_query = 0.0
+        for t in range(1, ticks + 1):
+            t0 = time.perf_counter()
+            mgr.ingest_tick({sid: chunk_at(w, t)
+                             for sid, w in zip(sids, worlds)})
+            t_ingest += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            mgr.query_batch_cross(tick_sids,
+                                  query_embs=qe_by_tick[t % ticks])
+            t_query += time.perf_counter() - t0
+        # rows actually indexed over the timed window — identical units
+        # for both modes (io_stats appended_rows counts raw rows on the
+        # deferred arena path but bucket-padded rows on the detached
+        # path, so it cannot be compared across modes)
+        rows = sum(mgr[s].memory.size for s in sids) - rows0
+        return mgr, sids, t_ingest, t_query, rows
+
+    # a full untimed pass per mode first: the clustering stage's eager
+    # ops compile per partition-length, and those caches are GLOBAL —
+    # without this, whichever mode runs first pays every compile and
+    # the comparison measures compiler order, not the memory paths
+    for use_arena in (True, False):
+        run_mode(use_arena)
+
+    out = {}
+    for name, use_arena in (("arena", True), ("restack", False)):
+        mgr, sids, t_ingest, t_query, rows = run_mode(use_arena)
+        restacks_per_tick = mgr.io_stats["stack_rebuilds"] / ticks
+        out[name] = {"total": t_ingest + t_query, "query": t_query,
+                     "restacks_per_tick": restacks_per_tick}
+        emit(f"multistream/arena_{name}", t_ingest + t_query,
+             {"sessions": n_sessions, "ticks": ticks,
+              "queries_per_tick": len(qsids),
+              "ingest_s": f"{t_ingest:.4f}",
+              "query_s": f"{t_query:.4f}",
+              "restacks_per_tick": restacks_per_tick,
+              "indexed_rows": rows,
+              "append_rows_per_s": f"{rows / max(t_ingest, 1e-9):.0f}"})
+
+    # the tentpole invariant, asserted where CI runs it: the arena never
+    # restacks, the detached path restacks every round it grew
+    assert out["arena"]["restacks_per_tick"] == 0.0, out["arena"]
+    assert out["restack"]["restacks_per_tick"] >= 1.0, out["restack"]
+    emit("multistream/arena_speedup", 0.0,
+         {"query_speedup":
+          f"{out['restack']['query'] / out['arena']['query']:.2f}x",
+          "total_speedup":
+          f"{out['restack']['total'] / out['arena']['total']:.2f}x"})
+
+
 def _bench_incremental_index(capacity: int = 16384, dim: int = 256,
                              rounds: int = 20):
     """Post-ingest query latency: incremental append vs full re-upload."""
@@ -332,24 +429,54 @@ def _bench_incremental_index(capacity: int = 16384, dim: int = 256,
          {"speedup": f"{out['seed_reupload'] / out['incremental']:.2f}x"})
 
 
+ALL_PARTS = ("ingest", "query", "cross", "plan", "arena", "incremental")
+JSON_PATH = "BENCH_multistream.json"
+
+
 def run(n_sessions: int = 4, n_queries: int = 8, *,
-        cross_only: bool = False, smoke: bool = False) -> None:
+        cross_only: bool = False, smoke: bool = False,
+        parts=None, json_path: str | None = None) -> None:
     assert n_sessions >= 4, "multi-tenant scenario needs ≥4 sessions"
-    # smoke: tiny worlds / few ticks — CI exercises the fused cross path
-    # and the mixed-strategy planner path end-to-end in ~a minute
+    if parts is None:
+        parts = ("cross", "plan", "arena") if cross_only else ALL_PARTS
+    rows: list = []
+    common.set_sink(rows)
+    # smoke: tiny worlds / few ticks — CI exercises the fused cross
+    # path, the planner path, and the arena-vs-restack comparison
+    # end-to-end in ~a minute
     ticks = 2 if smoke else 5
     n_scenes = 3 if smoke else 6
     if smoke:
         n_queries = min(n_queries, 2)
-    if not cross_only:
-        _bench_ingest(n_sessions)
-        _bench_query(n_sessions, n_queries)
-    _bench_query_cross(n_sessions, n_queries, ticks=ticks,
-                       n_scenes=n_scenes)
-    _bench_query_plan(n_sessions, n_queries, ticks=ticks,
-                      n_scenes=n_scenes)
-    if not cross_only:
-        _bench_incremental_index()
+    try:
+        if "ingest" in parts:
+            _bench_ingest(n_sessions)
+        if "query" in parts:
+            _bench_query(n_sessions, n_queries)
+        if "cross" in parts:
+            _bench_query_cross(n_sessions, n_queries, ticks=ticks,
+                               n_scenes=n_scenes)
+        if "plan" in parts:
+            _bench_query_plan(n_sessions, n_queries, ticks=ticks,
+                              n_scenes=n_scenes)
+        if "arena" in parts:
+            _bench_arena(n_sessions, n_queries, ticks=ticks,
+                         n_scenes=n_scenes)
+        if "incremental" in parts:
+            _bench_incremental_index()
+    finally:
+        common.set_sink(None)
+    if json_path:
+        payload = {"meta": {"bench": "multistream",
+                            "sessions": n_sessions,
+                            "queries": n_queries, "smoke": smoke,
+                            "parts": list(parts),
+                            "timestamp": time.time()},
+                   "benchmarks": rows}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"[bench_multistream] wrote {json_path} "
+              f"({len(rows)} rows)")
 
 
 if __name__ == "__main__":
@@ -357,10 +484,18 @@ if __name__ == "__main__":
     ap.add_argument("--sessions", type=int, default=4)
     ap.add_argument("--queries", type=int, default=8)
     ap.add_argument("--cross", action="store_true",
-                    help="only the cross-session fused query benches "
+                    help="the cross-session fused query benches "
                          "(query_batch_cross shim + mixed-strategy plan)")
+    ap.add_argument("--arena", action="store_true",
+                    help="the grow-in-place arena vs restack bench")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny worlds / few ticks for CI")
+    ap.add_argument("--json", action="store_true",
+                    help=f"also write every emitted row to {JSON_PATH}")
     args = ap.parse_args()
-    run(args.sessions, args.queries, cross_only=args.cross,
-        smoke=args.smoke)
+    parts = None
+    if args.cross or args.arena:
+        parts = (("cross", "plan") if args.cross else ()) + \
+                (("arena",) if args.arena else ())
+    run(args.sessions, args.queries, smoke=args.smoke, parts=parts,
+        json_path=JSON_PATH if args.json else None)

@@ -1,14 +1,18 @@
-"""Shared benchmark utilities: timing + CSV emission.
+"""Shared benchmark utilities: timing + CSV emission + JSON recording.
 
 Every benchmark prints ``name,us_per_call,derived`` rows (harness
 contract) — ``derived`` carries the benchmark's headline metric
-(accuracy, coverage, speedup, ...) as ``key=value|key=value``.
+(accuracy, coverage, speedup, ...) as ``key=value|key=value``. A
+benchmark that wants a machine-readable artifact installs a sink with
+``set_sink([])``: every subsequent ``emit`` row is also appended to the
+sink as a dict, ready to ``json.dump`` (see
+``bench_multistream.py --json`` → ``BENCH_multistream.json``).
 """
 
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict
+from typing import Callable, Dict, List, Optional
 
 
 def time_call(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
@@ -24,6 +28,19 @@ def time_call(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
     return ts[len(ts) // 2]
 
 
+_SINK: Optional[List[dict]] = None
+
+
+def set_sink(sink: Optional[List[dict]]) -> None:
+    """Install (or clear, with None) a list that records every emitted
+    row as ``{"name", "seconds", "derived"}`` for JSON artifacts."""
+    global _SINK
+    _SINK = sink
+
+
 def emit(name: str, seconds: float, derived: Dict | None = None) -> None:
     d = "|".join(f"{k}={v}" for k, v in (derived or {}).items())
+    if _SINK is not None:
+        _SINK.append({"name": name, "seconds": seconds,
+                      "derived": dict(derived or {})})
     print(f"{name},{seconds * 1e6:.1f},{d}")

@@ -8,6 +8,13 @@ them into ONE query plan, the planner fuses compatible specs into
 execution groups (one similarity scan each), and the retrieved keyframes
 become the VLM's vision inputs (patch-embedding stubs).
 
+Each scan's operand is the session manager's grow-in-place
+``MemoryArena``: ingestion appended the index rows into shared device
+super-buffers, so querying consumes them as-is — no device-side restack
+of session memory ever sits between a request and its answer (the
+driver prints the service's ``stack_rebuilds`` counter, which must read
+0; PR 2's version-cached per-query-group stack rebuild is gone).
+
   PYTHONPATH=src python examples/serve_batch.py --requests 6
 """
 
@@ -73,9 +80,12 @@ def main() -> None:
     for r in done:
         print(f"req {r.rid}: {len(r.generated)} tokens, "
               f"ttft {(r.first_token_at - r.submitted_at) * 1e3:.0f} ms")
+    stats = svc.io_stats()
     print(f"[serve_batch] {tok} tokens / {wall:.2f}s "
           f"= {tok / wall:.1f} tok/s with continuous batching; "
-          f"{plan.n_scans} scans for {len(queries)} requests")
+          f"{plan.n_scans} scans for {len(queries)} requests; "
+          f"{stats['stack_rebuilds']} stack rebuilds (arena: appends "
+          f"in place)")
 
 
 if __name__ == "__main__":

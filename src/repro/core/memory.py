@@ -23,14 +23,29 @@ lookup. ``io_stats`` counts full uploads vs appended rows (and host vs
 device expansion gathers) so tests/benches can assert the transfer
 behaviour.
 
-``MemoryStack`` stacks several sessions' device buffers into
-``(S, capacity, …)`` views for the cross-session fused query path: one
-kernel launch scans every session, one jit'd gather expands every
-session's draws. Stacks are cached against per-memory insert versions.
+``MemoryArena`` is the grow-in-place form of the cross-session view:
+one set of device-resident super-buffers ``(S, capacity, d)`` /
+``(S, capacity, K)`` owned by the session manager, inside which every
+session's index, member reservoirs, and index_frame rows live from the
+start. Per-tick batched appends are donated ``dynamic_update_slice``
+writes at ``(slot, pos)``, so the arena buffers ARE the fused-scan
+operand — queries between (or after) ingest ticks never restack
+anything. Only the per-session valid masks depend on the sizes, and
+those are derived on device from the tiny ``(S,)`` sizes vector.
+
+``MemoryStack`` remains the padded-stack view over S ``VenusMemory``
+instances for the cross-session fused query path. When its members all
+live in one arena and cover it exactly (the session manager's default),
+every view IS the arena buffer — zero stack rebuilds ever. Detached
+memories (standalone use) fall back to the PR-2 behaviour: device-side
+``jnp.stack`` of the per-memory buffers, cached against the members'
+insert versions and rebuilt when any version changes (each rebuild is
+counted into ``rebuild_stats["stack_rebuilds"]`` when provided).
 """
 
 from __future__ import annotations
 
+import contextlib
 import functools
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
@@ -96,6 +111,54 @@ def _append_id_rows(buf: jnp.ndarray, rows: jnp.ndarray,
     return jax.lax.dynamic_update_slice(buf, rows, (pos,))
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _arena_append_rows(buf: jnp.ndarray, rows: jnp.ndarray,
+                       slot: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """Donated row-block append into one session's arena rows: buf
+    (S, cap, d) gets rows (b, d) written at (slot, pos, 0) in place."""
+    return jax.lax.dynamic_update_slice(buf, rows[None], (slot, pos, 0))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _arena_append_members(members: jnp.ndarray, counts: jnp.ndarray,
+                          rows: jnp.ndarray, cnts: jnp.ndarray,
+                          slot: jnp.ndarray, pos: jnp.ndarray
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Donated append of member-reservoir rows + counts into the arena."""
+    members = jax.lax.dynamic_update_slice(members, rows[None],
+                                           (slot, pos, 0))
+    counts = jax.lax.dynamic_update_slice(counts, cnts[None], (slot, pos))
+    return members, counts
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _arena_append_ids(buf: jnp.ndarray, rows: jnp.ndarray,
+                      slot: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """Donated append into a (S, cap) id table (index_frame)."""
+    return jax.lax.dynamic_update_slice(buf, rows[None], (slot, pos))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _arena_scatter_rows(buf: jnp.ndarray, rows: jnp.ndarray,
+                        slots: jnp.ndarray, poss: jnp.ndarray
+                        ) -> jnp.ndarray:
+    """Donated scatter of a whole TICK's rows — every session's appends
+    in one program: buf (S, cap, …) gets rows (B, …) written at
+    (slots[i], poss[i]) in place. Padding rows duplicate row 0 (same
+    index, same value — a deterministic no-op rewrite)."""
+    return buf.at[slots, poss].set(rows)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _arena_scatter_meta(counts: jnp.ndarray, ifr: jnp.ndarray,
+                        cnt_rows: jnp.ndarray, if_rows: jnp.ndarray,
+                        slots: jnp.ndarray, poss: jnp.ndarray
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Donated per-tick scatter of the small (S, cap) tables."""
+    return (counts.at[slots, poss].set(cnt_rows),
+            ifr.at[slots, poss].set(if_rows))
+
+
 # Uniform member pick: one variate per draw slot, represented as an
 # integer u ∈ [0, 2^U_BITS) so host (int64) and device (int32) paths
 # compute pick = (u * cnt) >> U_BITS *bit-identically* — no float
@@ -123,17 +186,210 @@ def expand_gather(members: jnp.ndarray, counts: jnp.ndarray,
 from repro.util import pow2_bucket
 
 
+class MemoryArena:
+    """Shared device-resident super-buffers for S sessions' memories.
+
+    Sessions allocate their index (``emb``), member reservoirs
+    (``members``/``member_count``), and ``index_frame`` rows directly
+    inside ``(S, capacity, …)`` buffers owned here, so the fused
+    cross-session query path scans the arena buffers AS-IS: batched tick
+    appends are donated ``dynamic_update_slice`` writes at
+    ``(slot, pos)``, and after warm-up no ingest↔query interleaving ever
+    triggers a device-side restack (``stack_rebuilds`` stays 0 — see
+    ``MemoryStack``). Per-session valid masks are derived on device from
+    the ``(S,)`` sizes vector (the only thing that moves host→device
+    per tick besides the appended rows themselves).
+
+    Growth is per-session: ``add_session`` extends the buffers by one
+    slot (a copy, counted in ``io_stats["grows"]``) — session creation
+    is warm-up, not the steady ingest↔query loop.
+    """
+
+    def __init__(self, capacity: int, dim: int, member_cap: int = 128):
+        self.capacity = capacity
+        self.dim = dim
+        self.member_cap = member_cap
+        self.n_sessions = 0
+        self.emb: Optional[jnp.ndarray] = None          # (S, cap, d)
+        self.members: Optional[jnp.ndarray] = None      # (S, cap, K)
+        self.member_count: Optional[jnp.ndarray] = None  # (S, cap)
+        self.index_frame: Optional[jnp.ndarray] = None   # (S, cap)
+        self.sizes = np.zeros((0,), np.int32)            # host mirror
+        self.version = 0          # bumped per append / grow
+        self._sizes_dev: Optional[jnp.ndarray] = None
+        self._valid_dev: Optional[jnp.ndarray] = None
+        self._valid_version = -1
+        self._deferred: Optional[list] = None   # open tick batch, or None
+        self.io_stats = {"grows": 0, "appends": 0, "appended_rows": 0}
+
+    def reset_io_stats(self) -> None:
+        for k in self.io_stats:
+            self.io_stats[k] = 0
+
+    # ------------------------------------------------------------- lifecycle
+    def _grow(self, buf: Optional[jnp.ndarray], shape: Tuple[int, ...],
+              dtype) -> jnp.ndarray:
+        if buf is None:
+            return jnp.zeros(shape, dtype)
+        pad = [(0, shape[0] - buf.shape[0])] + [(0, 0)] * (buf.ndim - 1)
+        return jnp.pad(buf, pad)
+
+    def add_session(self) -> int:
+        """Allocate the next slot, growing every super-buffer by one."""
+        slot = self.n_sessions
+        self.n_sessions = s = slot + 1
+        cap, d, k = self.capacity, self.dim, self.member_cap
+        self.emb = self._grow(self.emb, (s, cap, d), jnp.float32)
+        self.members = self._grow(self.members, (s, cap, k), jnp.int32)
+        self.member_count = self._grow(self.member_count, (s, cap),
+                                       jnp.int32)
+        self.index_frame = self._grow(self.index_frame, (s, cap),
+                                      jnp.int32)
+        self.sizes = np.append(self.sizes, np.int32(0))
+        self.version += 1
+        self.io_stats["grows"] += 1
+        return slot
+
+    # ------------------------------------------------------------ ingestion
+    @contextlib.contextmanager
+    def deferred_appends(self):
+        """Batch every ``append`` issued inside the context into ONE
+        donated scatter per super-buffer — the per-tick batched append
+        path: a multi-stream ingest tick moves each buffer once, no
+        matter how many sessions closed clusters. Device views read
+        inside the window see pre-tick state; they refresh at exit (one
+        version bump). Re-entrant: the outermost context flushes."""
+        if self._deferred is not None:
+            yield
+            return
+        self._deferred = []
+        try:
+            yield
+        finally:
+            pending, self._deferred = self._deferred, None
+            self._flush(pending)
+
+    def append(self, slot: int, pos: int, emb_rows: np.ndarray,
+               member_rows: np.ndarray, member_cnts: np.ndarray,
+               if_rows: np.ndarray) -> int:
+        """Append one session's row block at ``[slot, pos:pos+n]``.
+
+        Inside a ``deferred_appends`` window the block is queued for the
+        tick's fused scatter; otherwise it lands immediately as donated
+        ``dynamic_update_slice`` writes (row count bucketed to bound jit
+        specialisations — padding lands past the valid region and later
+        appends overwrite it). Returns the rows moved (bucketed size for
+        immediate mode, the raw count when deferred)."""
+        n = len(emb_rows)
+        if self._deferred is not None:
+            self._deferred.append((slot, pos, np.asarray(emb_rows),
+                                   np.asarray(member_rows),
+                                   np.asarray(member_cnts),
+                                   np.asarray(if_rows)))
+            return n
+        b = min(pow2_bucket(n, lo=8), self.capacity - pos)
+        pad = ((0, b - n),)
+        s = jnp.asarray(slot, jnp.int32)
+        p = jnp.asarray(pos, jnp.int32)
+        self.emb = _arena_append_rows(
+            self.emb, jnp.asarray(np.pad(emb_rows, pad + ((0, 0),))), s, p)
+        self.members, self.member_count = _arena_append_members(
+            self.members, self.member_count,
+            jnp.asarray(np.pad(member_rows, pad + ((0, 0),))),
+            jnp.asarray(np.pad(member_cnts, pad)), s, p)
+        self.index_frame = _arena_append_ids(
+            self.index_frame, jnp.asarray(np.pad(if_rows, pad)), s, p)
+        self.sizes[slot] = pos + n
+        self.version += 1
+        self.io_stats["appends"] += 1
+        self.io_stats["appended_rows"] += b
+        return b
+
+    def _flush(self, pending: list) -> None:
+        """Apply a tick's queued blocks: ONE donated scatter per
+        super-buffer, with the total row count bucketed (padding rows
+        duplicate row 0 — same index, same values, a no-op rewrite)."""
+        if not pending:
+            return
+        slots = np.concatenate([np.full(len(e), s, np.int32)
+                                for s, _, e, *_ in pending])
+        poss = np.concatenate([np.arange(p, p + len(e), dtype=np.int32)
+                               for _, p, e, *_ in pending])
+        emb_rows = np.concatenate([b[2] for b in pending])
+        mem_rows = np.concatenate([b[3] for b in pending])
+        cnt_rows = np.concatenate([b[4] for b in pending])
+        if_rows = np.concatenate([b[5] for b in pending])
+        n = len(slots)
+        b = pow2_bucket(n, lo=8)
+        if b != n:                       # pad = rewrite row 0 in place
+            reps = np.zeros((b - n,), np.int32)
+            slots = np.concatenate([slots, slots[reps]])
+            poss = np.concatenate([poss, poss[reps]])
+            emb_rows = np.concatenate([emb_rows, emb_rows[reps]])
+            mem_rows = np.concatenate([mem_rows, mem_rows[reps]])
+            cnt_rows = np.concatenate([cnt_rows, cnt_rows[reps]])
+            if_rows = np.concatenate([if_rows, if_rows[reps]])
+        sl, po = jnp.asarray(slots), jnp.asarray(poss)
+        self.emb = _arena_scatter_rows(self.emb, jnp.asarray(emb_rows),
+                                       sl, po)
+        self.members = _arena_scatter_rows(self.members,
+                                           jnp.asarray(mem_rows), sl, po)
+        self.member_count, self.index_frame = _arena_scatter_meta(
+            self.member_count, self.index_frame, jnp.asarray(cnt_rows),
+            jnp.asarray(if_rows), sl, po)
+        for slot, pos, rows, *_ in pending:
+            self.sizes[slot] = max(self.sizes[slot], pos + len(rows))
+        self.version += 1
+        self.io_stats["appends"] += 1
+        self.io_stats["appended_rows"] += b
+
+    # ----------------------------------------------------------------- views
+    def device_sizes(self) -> jnp.ndarray:
+        """Per-session sizes (S,) on device — the fused scan derives its
+        valid masks from these inside the kernel wrapper."""
+        if self._sizes_dev is None or self._valid_version != self.version:
+            self._refresh_valid()
+        return self._sizes_dev
+
+    def device_valid(self) -> jnp.ndarray:
+        """(S, capacity) bool valid mask, derived on device from sizes
+        and cached per version (no O(S·cap) host traffic — only the
+        (S,) sizes vector transfers)."""
+        if self._valid_dev is None or self._valid_version != self.version:
+            self._refresh_valid()
+        return self._valid_dev
+
+    def _refresh_valid(self) -> None:
+        self._sizes_dev = jnp.asarray(self.sizes)
+        self._valid_dev = _valid_stack(self._sizes_dev,
+                                       capacity=self.capacity)
+        self._valid_version = self.version
+
+
 class VenusMemory:
     """Index layer: packed vector store + cluster member reservoirs."""
 
     def __init__(self, capacity: int, dim: int, member_cap: int = 128,
-                 seed: int = 0, *, incremental: bool = True):
+                 seed: int = 0, *, incremental: bool = True,
+                 arena: Optional[MemoryArena] = None,
+                 slot: Optional[int] = None):
         # the exact integer pick (u * cnt) >> U_BITS must fit in int32
         assert member_cap <= (1 << (31 - U_BITS)), member_cap
         self.capacity = capacity
         self.dim = dim
         self.member_cap = member_cap
         self.incremental = incremental
+        # arena-backed: this memory's device rows live inside the shared
+        # super-buffers at ``slot`` (appends are donated writes into the
+        # arena; nothing is ever lazily uploaded). Detached fallback
+        # (arena=None): standalone per-memory device buffers, lazily
+        # uploaded on first query and appended in place (PR-1 path).
+        self.arena = arena
+        self.slot = slot
+        if arena is not None:
+            assert slot is not None and incremental
+            assert (arena.capacity, arena.dim, arena.member_cap) == \
+                (capacity, dim, member_cap)
         self._emb = np.zeros((capacity, dim), np.float32)
         self._members = np.zeros((capacity, member_cap), np.int32)
         self._member_count = np.zeros((capacity,), np.int32)
@@ -145,6 +401,11 @@ class VenusMemory:
         self._members_dev: Optional[jnp.ndarray] = None
         self._member_count_dev: Optional[jnp.ndarray] = None
         self._index_frame_dev: Optional[jnp.ndarray] = None
+        # version of the cached arena-row views (arena appends donate the
+        # super-buffers, so row views must be re-sliced after inserts)
+        self._emb_row_ver = -1
+        self._members_row_ver = -1
+        self._if_row_ver = -1
         self.version = 0               # bumped per insert (stack caching)
         self.io_stats = {"full_uploads": 0, "appended_rows": 0,
                          "member_uploads": 0, "appended_member_rows": 0,
@@ -211,6 +472,19 @@ class VenusMemory:
             self._member_count_dev = None
             self._index_frame_dev = None
             return
+        if self.arena is not None:
+            # arena-backed: the rows are resident from this point on, no
+            # lazy upload ever happens (full_uploads stays 0). Inside a
+            # tick's deferred window the arena fuses every session's
+            # blocks into one donated scatter per super-buffer.
+            moved = self.arena.append(
+                self.slot, lo, self._emb[lo:lo + n],
+                self._members[lo:lo + n], self._member_count[lo:lo + n],
+                self._index_frame[lo:lo + n])
+            self.io_stats["appended_rows"] += moved
+            self.io_stats["appended_member_rows"] += moved
+            self.io_stats["appended_index_frame_rows"] += moved
+            return
         # bucket the row count (bounds jit specialisations); padded rows
         # land past the valid region and are overwritten by later appends
         b = min(pow2_bucket(n, lo=8), self.capacity - lo)
@@ -246,12 +520,22 @@ class VenusMemory:
     def device_index(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """(embeddings (cap, d), valid (cap,)) as device arrays.
 
-        First call uploads the packed host array once; subsequent inserts
-        keep the device copy current via ``_append_rows``. NOTE: inserts
-        DONATE the current buffer to the in-place append, so a handle
-        returned here is invalidated by the next insert — re-call this
-        method after inserting rather than holding the arrays."""
-        if self._emb_dev is None:
+        Arena-backed: the rows already live on device inside the arena —
+        this returns a per-version cached slice of the super-buffer
+        (nothing uploads, ``full_uploads`` stays 0). Detached: first call
+        uploads the packed host array once; subsequent inserts keep the
+        device copy current via ``_append_rows``. NOTE: inserts DONATE
+        the current buffer to the in-place append, so a handle returned
+        here is invalidated by the next insert — re-call this method
+        after inserting rather than holding the arrays."""
+        if self.arena is not None:
+            # keyed on the ARENA version: appends land at tick-flush
+            # time, so that is when row views must refresh
+            if (self._emb_dev is None
+                    or self._emb_row_ver != self.arena.version):
+                self._emb_dev = self.arena.emb[self.slot]
+                self._emb_row_ver = self.arena.version
+        elif self._emb_dev is None:
             self._emb_dev = jnp.asarray(self._emb)
             self.io_stats["full_uploads"] += 1
         return self._emb_dev, _valid_mask(jnp.asarray(self._size, jnp.int32),
@@ -271,10 +555,17 @@ class VenusMemory:
     def device_members(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """(members (cap, member_cap), counts (cap,)) device-resident.
 
-        Same contract as ``device_index``: first call uploads once,
-        subsequent inserts append in place (and DONATE the buffers, so
-        re-call after inserting rather than holding the handles)."""
-        if self._members_dev is None:
+        Same contract as ``device_index``: arena rows are sliced from the
+        super-buffers (no upload); detached buffers upload once on first
+        call, then appends keep them current in place (and DONATE the
+        buffers, so re-call after inserting rather than holding)."""
+        if self.arena is not None:
+            if (self._members_dev is None
+                    or self._members_row_ver != self.arena.version):
+                self._members_dev = self.arena.members[self.slot]
+                self._member_count_dev = self.arena.member_count[self.slot]
+                self._members_row_ver = self.arena.version
+        elif self._members_dev is None:
             self._members_dev = jnp.asarray(self._members)
             self._member_count_dev = jnp.asarray(self._member_count)
             self.io_stats["member_uploads"] += 1
@@ -284,9 +575,15 @@ class VenusMemory:
         """index_frame ids (cap,) device-resident — the centroid frame id
         of each memory slot, for strategies whose draws map straight to
         indexed frames (top-k / BOLT / MDF / AKS) rather than through the
-        member reservoirs. Same contract as ``device_index``: first call
-        uploads once, subsequent inserts append in place (donated)."""
-        if self._index_frame_dev is None:
+        member reservoirs. Same contract as ``device_index``: arena rows
+        are sliced from the super-buffer (no upload); detached buffers
+        upload once, then append in place (donated)."""
+        if self.arena is not None:
+            if (self._index_frame_dev is None
+                    or self._if_row_ver != self.arena.version):
+                self._index_frame_dev = self.arena.index_frame[self.slot]
+                self._if_row_ver = self.arena.version
+        elif self._index_frame_dev is None:
             self._index_frame_dev = jnp.asarray(self._index_frame)
             self.io_stats["index_frame_uploads"] += 1
         return self._index_frame_dev
@@ -384,14 +681,25 @@ class MemoryStack:
     """Padded-stack view over S same-shape ``VenusMemory`` instances.
 
     Exposes the sessions' device-resident buffers as ``(S, capacity, …)``
-    stacks for the fused cross-session query path. The stacks are built
-    *device-side* from the per-session device buffers (``jnp.stack`` of
-    resident arrays — no host↔device transfer beyond each memory's one
-    lazy first upload) and cached against the members' insert versions,
-    so repeated queries between ingest ticks rebuild nothing.
+    stacks for the fused cross-session query path. Two regimes:
+
+    * **Arena-backed** (the session manager's default): when every
+      member memory lives in one ``MemoryArena`` and together they cover
+      it exactly (slots 0..S-1 in order), the views ARE the arena
+      super-buffers — appends already landed in place, so no
+      ingest↔query interleaving ever rebuilds anything and
+      ``search`` passes the arena's (S,) sizes straight to the kernel
+      wrapper, which derives the valid masks on device.
+    * **Detached fallback**: device-side ``jnp.stack`` of the per-memory
+      buffers, cached against the members' insert versions — rebuilt
+      when any version changes (the PR-2 behaviour). Each rebuild bumps
+      ``io_stats`` and, when provided, ``rebuild_stats["stack_rebuilds"]``
+      (the session manager passes its own counter dict here so the
+      zero-restack invariant is assertable at the manager level).
     """
 
-    def __init__(self, memories: Sequence[VenusMemory]):
+    def __init__(self, memories: Sequence[VenusMemory], *,
+                 rebuild_stats: Optional[dict] = None):
         memories = list(memories)
         assert memories, "empty stack"
         cap, dim, mcap = (memories[0].capacity, memories[0].dim,
@@ -401,6 +709,13 @@ class MemoryStack:
                 "stacked memories must share capacity/dim/member_cap"
         self.memories = memories
         self.capacity, self.dim, self.member_cap = cap, dim, mcap
+        self.rebuild_stats = rebuild_stats
+        arena = getattr(memories[0], "arena", None)
+        self._arena: Optional[MemoryArena] = None
+        if (arena is not None
+                and all(m.arena is arena for m in memories)
+                and [m.slot for m in memories] == list(range(len(memories)))):
+            self._arena = arena
         self._emb_stack: Optional[jnp.ndarray] = None
         self._valid: Optional[jnp.ndarray] = None
         self._members_stack: Optional[jnp.ndarray] = None
@@ -418,9 +733,26 @@ class MemoryStack:
     def _versions(self) -> Tuple[int, ...]:
         return tuple(m.version for m in self.memories)
 
+    def arena_view(self) -> Optional[MemoryArena]:
+        """The arena, iff this stack still covers it exactly (a session
+        added to the arena after this stack was built voids coverage —
+        the stack then falls back to the detached view path)."""
+        a = self._arena
+        if a is not None and len(self.memories) == a.n_sessions:
+            return a
+        return None
+
+    def _count_rebuild(self) -> None:
+        if self.rebuild_stats is not None:
+            self.rebuild_stats["stack_rebuilds"] = \
+                self.rebuild_stats.get("stack_rebuilds", 0) + 1
+
     # ----------------------------------------------------------- device views
     def device_stack(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """(emb (S, cap, d), valid (S, cap)) device arrays."""
+        a = self.arena_view()
+        if a is not None:
+            return a.emb, a.device_valid()
         vers = self._versions()
         if self._emb_stack is None or vers != self._emb_versions:
             self._emb_stack = jnp.stack(
@@ -431,10 +763,14 @@ class MemoryStack:
             self._valid = _valid_stack(sizes, capacity=self.capacity)
             self._emb_versions = vers
             self.io_stats["stack_builds"] += 1
+            self._count_rebuild()
         return self._emb_stack, self._valid
 
     def device_members(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """(members (S, cap, member_cap), counts (S, cap)) device arrays."""
+        a = self.arena_view()
+        if a is not None:
+            return a.members, a.member_count
         vers = self._versions()
         if self._members_stack is None or vers != self._mem_versions:
             tabs = [m.device_members() for m in self.memories]
@@ -442,22 +778,33 @@ class MemoryStack:
             self._counts_stack = jnp.stack([t[1] for t in tabs])
             self._mem_versions = vers
             self.io_stats["member_stack_builds"] += 1
+            self._count_rebuild()
         return self._members_stack, self._counts_stack
 
     def device_index_frames(self) -> jnp.ndarray:
         """index_frame ids (S, cap) device arrays (cached per version)."""
+        a = self.arena_view()
+        if a is not None:
+            return a.index_frame
         vers = self._versions()
         if self._index_frame_stack is None or vers != self._if_versions:
             self._index_frame_stack = jnp.stack(
                 [m.device_index_frames() for m in self.memories])
             self._if_versions = vers
             self.io_stats["index_frame_stack_builds"] += 1
+            self._count_rebuild()
         return self._index_frame_stack
 
     # ----------------------------------------------------------------- query
     def search(self, query_emb: jnp.ndarray, *, tau: float
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """query_emb (S, Q, d) -> (sims, probs) (S, Q, cap) — every
-        session scanned by ONE fused kernel launch."""
+        session scanned by ONE fused kernel launch. Arena-backed stacks
+        pass the (S,) sizes vector as ``valid`` — the mask materialises
+        on device inside the kernel wrapper."""
+        a = self.arena_view()
+        if a is not None:
+            return kops.similarity_stack(query_emb, a.emb, tau=tau,
+                                         valid=a.device_sizes())
         emb, valid = self.device_stack()
         return kops.similarity_stack(query_emb, emb, tau=tau, valid=valid)

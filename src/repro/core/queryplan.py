@@ -17,9 +17,16 @@ module unifies all of it behind three layers:
   parameters → one padded block) and emits an explicit ``QueryPlan``
   the caller can inspect before running anything.
 * **Executor** (``execute_plan``) — runs ONE ``similarity_scan_stack``
-  launch per group over the sessions' ``MemoryStack`` and dispatches
-  vmapped per-strategy post-processing, so every registered strategy —
-  not just sampling/AKR — gets the "one scan, zero host gathers" path.
+  launch per group and dispatches vmapped per-strategy post-processing,
+  so every registered strategy — not just sampling/AKR — gets the "one
+  scan, zero host gathers" path. With the manager's ``MemoryArena``
+  (the default) the scan operand IS the arena's grow-in-place
+  super-buffers: every group scans all sessions in slot order (lanes
+  without queries are padding — per-lane math is independent, so the
+  queried lanes are bit-identical to a subset scan) and NO
+  ingest↔query interleaving ever restacks device buffers
+  (``manager.io_stats["stack_rebuilds"]`` stays 0). Detached managers
+  fall back to the per-group version-cached ``MemoryStack``.
 
 Strategies live in a registry (``register_strategy`` / ``get_strategy``)
 wrapping every selection rule in ``repro.core.retrieval`` behind a
@@ -423,17 +430,19 @@ def _spec_embedding(spec: QuerySpec, j: int, embedded) -> np.ndarray:
             if spec.embedding is not None else embedded[j])
 
 
-def _group_keys(manager, group: ExecutionGroup, specs, qmax
+def _group_keys(manager, group: ExecutionGroup, specs, qmax, lanes
                 ) -> Optional[jnp.ndarray]:
-    """Per-session key rows (S, qmax). Chain-policy lanes consume the
-    session PRNG chain in arrival order — exactly the subkeys the same
-    queries would have drawn through the legacy paths; explicit-seed
-    lanes derive detached keys; padding lanes get dummy keys."""
+    """Per-lane key rows (L, qmax) over the scan's lane order.
+    Chain-policy lanes consume the session PRNG chain in arrival order —
+    exactly the subkeys the same queries would have drawn through the
+    legacy paths; explicit-seed lanes derive detached keys; padding
+    lanes (and whole sessions the group doesn't target — arena lanes)
+    get dummy keys and leave their chains untouched."""
     if not group.strategy.stochastic:
         return None
     key_rows = []
-    for sid in group.sids:
-        idxs = group.order[sid]
+    for sid in lanes:
+        idxs = group.order.get(sid, ())
         n_chain = sum(1 for j in idxs if specs[j].seed is None)
         chain = (manager.sessions[sid].next_keys(n_chain)
                  if n_chain else None)
@@ -456,23 +465,29 @@ def _execute_group(manager, group: ExecutionGroup, specs, embedded,
     cfg = manager.cfg
     strat = group.strategy
     sids = group.sids
-    sn, qmax = len(sids), group.qmax
+    # scan-lane order: arena mode scans EVERY session in slot order (the
+    # super-buffers are consumed as-is — zero restacks); detached mode
+    # scans exactly the group's sessions via the version-cached stack
+    lanes = manager.scan_lanes(sids)
+    lane_of = {sid: si for si, sid in enumerate(lanes)}
+    ln, qmax = len(lanes), group.qmax
     timings: Dict[str, float] = {"embed_query": t_embed}
 
-    q_stack = np.zeros((sn, qmax, manager.embed_dim), np.float32)
-    qcount = np.zeros((sn,), np.int32)
-    for si, sid in enumerate(sids):
+    q_stack = np.zeros((ln, qmax, manager.embed_dim), np.float32)
+    qcount = np.zeros((ln,), np.int32)
+    for sid in sids:
+        si = lane_of[sid]
         idxs = group.order[sid]
         qcount[si] = len(idxs)
         for qi, j in enumerate(idxs):
             q_stack[si, qi] = _spec_embedding(specs[j], j, embedded)
-    keys = _group_keys(manager, group, specs, qmax)
+    keys = _group_keys(manager, group, specs, qmax, lanes)
 
     # --- the ONE fused scan for this group -------------------------------
     t0 = time.perf_counter()
-    stack = manager.memory_stack(sids)
+    stack = manager.memory_stack(lanes)
     sims, probs = stack.search(jnp.asarray(q_stack), tau=group.key.tau)
-    if sn == 1:      # single-session launch: legacy per-session accounting
+    if len(sids) == 1:   # single-session group: legacy per-session accounting
         manager.io_stats["scans"] += 1
         manager.sessions[sids[0]].memory.io_stats["scans"] += 1
     else:
@@ -486,7 +501,7 @@ def _execute_group(manager, group: ExecutionGroup, specs, embedded,
     ctx = StrategyContext(
         sims=sims, probs=probs, valid=valid, emb=emb_stack, keys=keys,
         total_frames=np.asarray(
-            [manager.sessions[s].stats["frames_seen"] for s in sids],
+            [manager.sessions[s].stats["frames_seen"] for s in lanes],
             np.int64),
         key=group.key, qcount=qcount)
 
@@ -509,7 +524,8 @@ def _execute_group(manager, group: ExecutionGroup, specs, embedded,
     n_drawn, mass = np.asarray(out.n_drawn), np.asarray(out.mass)
     timings["sample_expand"] = time.perf_counter() - t0
 
-    for si, sid in enumerate(sids):
+    for sid in sids:
+        si = lane_of[sid]
         for qi, j in enumerate(group.order[sid]):
             lane = fids_np[si, qi][ok_np[si, qi]].astype(np.int64)
             if strat.expand == "members":       # reservoir picks: dedup

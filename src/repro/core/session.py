@@ -11,18 +11,27 @@ per-stream stages operating on a ``SessionState``:
   into each session's device-resident memory with batched appends (④).
 
 ``SessionManager`` owns N concurrent streams (the edge box's cameras)
-and drives the stages. Querying is declarative: ``plan(specs)`` groups
-``QuerySpec``s into execution groups and ``execute(plan)`` runs ONE
-fused similarity scan per group over the sessions' ``MemoryStack`` plus
-vmapped per-strategy post-processing (``repro.core.queryplan``). The
-legacy entry points — ``query``, ``query_batch``, ``query_batch_cross``,
-``query_topk`` — are thin shims over plan/execute and stay draw-for-draw
-identical to their pre-redesign outputs (same per-session PRNG chains).
+and drives the stages. By default every session's memory lives inside
+one shared ``MemoryArena`` — device-resident ``(S, capacity, …)``
+super-buffers that tick appends extend in place with donated writes, so
+the fused query path scans the arena buffers directly and NO
+ingest↔query interleaving ever restacks anything
+(``io_stats["stack_rebuilds"]`` stays 0; ``use_arena=False`` restores
+the PR-2 detached memories + version-cached ``MemoryStack`` path).
+Querying is declarative: ``plan(specs)`` groups ``QuerySpec``s into
+execution groups and ``execute(plan)`` runs ONE fused similarity scan
+per group over the arena (or stack) views plus vmapped per-strategy
+post-processing (``repro.core.queryplan``). The legacy entry points —
+``query``, ``query_batch``, ``query_batch_cross``, ``query_topk`` — are
+thin shims over plan/execute and stay draw-for-draw identical to their
+pre-redesign outputs (same per-session PRNG chains).
 """
 
 from __future__ import annotations
 
+import contextlib
 import time
+import weakref
 from dataclasses import dataclass
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -32,10 +41,24 @@ import numpy as np
 
 from repro.core.aux_models import AuxModel, build_aux_prompt
 from repro.core.clustering import cluster_partition, frame_vectors
-from repro.core.memory import FrameStore, MemoryStack, VenusMemory
+from repro.core.memory import (FrameStore, MemoryArena, MemoryStack,
+                               VenusMemory)
 from repro.core.queryplan import (QueryPlan, QueryResult, QuerySpec,
                                   build_plan, execute_plan)
 from repro.core.scene import Partition, StreamSegmenter
+
+# live managers, so test harnesses can reset every launch/transfer
+# counter between tests without threading references around
+# (tests/conftest.py) — weak so managers die with their tests
+_LIVE_MANAGERS: "weakref.WeakSet" = weakref.WeakSet()
+
+
+def reset_all_io_stats() -> None:
+    """Reset the io_stats of every live ``SessionManager`` (and their
+    memories/arena). Test-isolation hook: launch-count assertions must
+    not depend on which tests ran before them."""
+    for mgr in list(_LIVE_MANAGERS):
+        mgr.reset_io_stats()
 
 
 @dataclass(frozen=True)
@@ -71,14 +94,17 @@ class EmbedJob:
 class SessionState:
     """Per-stream state: segmenter, pending buffer, archive, memory."""
 
-    def __init__(self, sid: int, cfg: VenusConfig, embed_dim: int):
+    def __init__(self, sid: int, cfg: VenusConfig, embed_dim: int,
+                 arena: Optional[MemoryArena] = None,
+                 slot: Optional[int] = None):
         self.sid = sid
         self.cfg = cfg
         self.segmenter = StreamSegmenter(
             threshold=cfg.scene_threshold,
             max_partition_len=cfg.max_partition_len)
         self.memory = VenusMemory(cfg.memory_capacity, embed_dim,
-                                  cfg.member_cap, seed=cfg.seed)
+                                  cfg.member_cap, seed=cfg.seed,
+                                  arena=arena, slot=slot)
         self.frames = FrameStore()
         self.pending: List[np.ndarray] = []   # frames not yet clustered
         self.pending_base = 0                 # abs index of pending[0]
@@ -152,7 +178,10 @@ def release_pending(state: SessionState, closed: List[Partition]) -> None:
 def commit_jobs(sessions: Mapping[int, SessionState], embedder,
                 jobs: Sequence[EmbedJob]) -> int:
     """④ ONE batched MEM call over every index frame closed this tick,
-    scattered into each owning session's memory with batched appends."""
+    scattered into each owning session's memory with batched appends.
+    Arena-backed sessions defer their device writes into the tick's
+    fused scatter (one donated program per super-buffer per tick, no
+    matter how many sessions closed clusters)."""
     if not jobs:
         return 0
     frames = np.concatenate([j.frames for j in jobs])
@@ -163,15 +192,21 @@ def commit_jobs(sessions: Mapping[int, SessionState], embedder,
         for j in jobs:
             aux.extend(j.aux_texts or [""] * len(j.frame_ids))
     embs = embedder.embed_frames(frames, aux, frame_ids=ids)
-    off = 0
-    for j in jobs:
-        n = len(j.frame_ids)
-        st = sessions[j.sid]
-        st.memory.insert_batch(
-            embs[off:off + n], scene_ids=[j.scene_id] * n,
-            index_frames=j.frame_ids, member_lists=j.member_lists)
-        st.stats["frames_embedded"] += n
-        off += n
+    arenas = {id(a): a for a in
+              (sessions[j.sid].memory.arena for j in jobs)
+              if a is not None}
+    with contextlib.ExitStack() as stack:
+        for a in arenas.values():
+            stack.enter_context(a.deferred_appends())
+        off = 0
+        for j in jobs:
+            n = len(j.frame_ids)
+            st = sessions[j.sid]
+            st.memory.insert_batch(
+                embs[off:off + n], scene_ids=[j.scene_id] * n,
+                index_frames=j.frame_ids, member_lists=j.member_lists)
+            st.stats["frames_embedded"] += n
+            off += n
     return len(ids)
 
 
@@ -184,7 +219,8 @@ class SessionManager:
     """N concurrent streams sharing one embedder and one jit cache."""
 
     def __init__(self, cfg: VenusConfig, embedder, embed_dim: int,
-                 aux_models: Sequence[AuxModel] = (), annotation_fn=None):
+                 aux_models: Sequence[AuxModel] = (), annotation_fn=None,
+                 *, use_arena: bool = True):
         self.cfg = cfg
         self.embedder = embedder
         self.embed_dim = embed_dim
@@ -193,22 +229,34 @@ class SessionManager:
         self.sessions: Dict[int, SessionState] = {}
         self._next_sid = 0
         self._stacks: Dict[Tuple[int, ...], MemoryStack] = {}
+        # grow-in-place arena (default): sessions allocate their device
+        # rows inside shared (S, capacity, …) super-buffers, so queries
+        # never restack grown sessions. use_arena=False restores the
+        # PR-2 detached memories + version-cached MemoryStack path.
+        self.use_arena = use_arena
+        self.arena: Optional[MemoryArena] = None
         # per-session scans vs fused cross-session scans, for the "one
         # scan per query tick" invariant (tests/benches assert on these);
-        # group_scans counts every executor launch regardless of S
+        # group_scans counts every executor launch regardless of S;
+        # stack_rebuilds counts device-side restacks of session buffers
+        # (MUST stay 0 in arena mode — the zero-restack invariant)
         self.io_stats = {"scans": 0, "fused_scans": 0,
-                         "device_expands": 0, "group_scans": 0}
+                         "device_expands": 0, "group_scans": 0,
+                         "stack_rebuilds": 0}
+        _LIVE_MANAGERS.add(self)
 
     def reset_io_stats(self, *, include_memories: bool = True) -> None:
         """Zero the scan counters (dict identity preserved) and, by
-        default, every session memory's transfer counters too — so
-        benchmarks/tests can assert per-phase counts without rebuilding
-        the manager."""
+        default, every session memory's (and the arena's) transfer
+        counters too — so benchmarks/tests can assert per-phase counts
+        without rebuilding the manager."""
         for k in self.io_stats:
             self.io_stats[k] = 0
         if include_memories:
             for st in self.sessions.values():
                 st.memory.reset_io_stats()
+            if self.arena is not None:
+                self.arena.reset_io_stats()
 
     # ------------------------------------------------------------- lifecycle
     def create_session(self, sid: Optional[int] = None) -> int:
@@ -216,7 +264,15 @@ class SessionManager:
             sid = self._next_sid
         assert sid not in self.sessions, sid
         self._next_sid = max(self._next_sid, sid) + 1
-        self.sessions[sid] = SessionState(sid, self.cfg, self.embed_dim)
+        arena = slot = None
+        if self.use_arena:
+            if self.arena is None:
+                self.arena = MemoryArena(self.cfg.memory_capacity,
+                                         self.embed_dim,
+                                         self.cfg.member_cap)
+            arena, slot = self.arena, self.arena.add_session()
+        self.sessions[sid] = SessionState(sid, self.cfg, self.embed_dim,
+                                          arena=arena, slot=slot)
         return sid
 
     def __getitem__(self, sid: int) -> SessionState:
@@ -333,14 +389,32 @@ class SessionManager:
 
     # stacked device views are ~S×(index + members) buffers each; bound
     # how many distinct session subsets stay cached (LRU) so arbitrary
-    # query groupings can't grow device memory without limit
+    # query groupings can't grow device memory without limit (arena-
+    # covering stacks are views, not copies — they cost nothing extra)
     MAX_CACHED_STACKS = 8
+
+    def scan_lanes(self, sids: Sequence[int]) -> Tuple[int, ...]:
+        """The sessions one fused scan covers, in scan-lane order.
+
+        Arena mode: ALWAYS every session, in slot order — the arena
+        super-buffers ARE the scan operand, so a group targeting any
+        subset of sessions still consumes them as-is (lanes without
+        queries are padding; per-lane math is independent, so results
+        for the queried lanes are bit-identical to a subset scan) and
+        nothing ever restacks. Detached mode: exactly the requested
+        sessions, stacked (and version-cached) on demand."""
+        if self.arena is not None:
+            return tuple(sorted(
+                self.sessions,
+                key=lambda s: self.sessions[s].memory.slot))
+        return tuple(sids)
 
     def memory_stack(self, sids: Tuple[int, ...]) -> MemoryStack:
         """The cached ``MemoryStack`` over the given session tuple."""
         stk = self._stacks.pop(sids, None)
         if stk is None:
-            stk = MemoryStack([self.sessions[s].memory for s in sids])
+            stk = MemoryStack([self.sessions[s].memory for s in sids],
+                              rebuild_stats=self.io_stats)
             while len(self._stacks) >= self.MAX_CACHED_STACKS:
                 self._stacks.pop(next(iter(self._stacks)))
         self._stacks[sids] = stk          # re-insert = mark most recent

@@ -104,13 +104,16 @@ def similarity(query, index, *, tau: float, valid
 
 def similarity_stack(query, index, *, tau: float, valid
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Cross-session scan: query (S,Q,d) × index (S,N,d) + valid (S,N)
-    -> (sims (S,Q,N), probs (S,Q,N)) in ONE kernel launch."""
+    """Cross-session scan: query (S,Q,d) × index (S,N,d) + valid —
+    either a (S,N) bool mask or a (S,) int sizes vector (arena path:
+    per-session valid masks derive on device from the sizes) ->
+    (sims (S,Q,N), probs (S,Q,N)) in ONE kernel launch."""
     _scan_counts["similarity_stack"] += 1
     if _BACKEND == "pallas":
         from repro.kernels import similarity as sk
         sims, m, l = sk.similarity_scan_stack(query, index, valid, tau=tau,
                                               interpret=_interpret())
+        valid = ref.as_valid_mask(valid, index.shape[1])
         logits = jnp.where(valid[:, None, :], sims / tau, ref.NEG_INF)
         probs = jnp.exp(logits - m) / jnp.maximum(l, 1e-30)
         return sims.astype(query.dtype), probs

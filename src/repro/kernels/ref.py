@@ -68,6 +68,17 @@ def mla_decode_attention_ref(q_abs: jnp.ndarray, q_rope: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 
+def as_valid_mask(valid: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Canonical form of a stacked scan's ``valid`` argument: a (S, N)
+    bool mask passes through; a (S,) int per-session sizes vector (the
+    arena path) becomes the mask on device. ONE definition shared by the
+    Pallas wrapper, the oracle, and the ops dispatch layer, so the
+    sizes-form semantics cannot diverge between them."""
+    if valid.ndim == 1:
+        return jnp.arange(n)[None, :] < valid[:, None]
+    return valid
+
+
 def similarity_ref(query: jnp.ndarray, index: jnp.ndarray, *, tau: float,
                    valid: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """query: (Q,d); index: (N,d); valid: (N,) bool.
@@ -89,11 +100,14 @@ def similarity_ref(query: jnp.ndarray, index: jnp.ndarray, *, tau: float,
 def similarity_stack_ref(query: jnp.ndarray, index: jnp.ndarray, *,
                          tau: float, valid: jnp.ndarray
                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Cross-session form: query (S,Q,d); index (S,N,d); valid (S,N).
+    """Cross-session form: query (S,Q,d); index (S,N,d); valid (S,N)
+    bool mask OR (S,) int per-session sizes (the arena path — the mask
+    is derived on device here).
 
     Returns (sims (S,Q,N), probs (S,Q,N)) — per-session Eq. 4 + Eq. 5,
     vmapped so every lane matches ``similarity_ref`` on that session.
     """
+    valid = as_valid_mask(valid, index.shape[1])
     fn = lambda q, x, v: similarity_ref(q, x, tau=tau, valid=v)
     return jax.vmap(fn)(query, index, valid)
 

@@ -30,6 +30,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.ref import as_valid_mask
 
 NEG_INF = -1e30
 DEFAULT_BLK_N = 1024
@@ -155,7 +156,9 @@ def _sim_stack_kernel(q_ref, x_ref, valid_ref, sims_ref, m_ref, l_ref,
 def similarity_scan_stack(query, index, valid, *, tau: float,
                           blk_n: int = DEFAULT_BLK_N,
                           interpret: bool = True):
-    """query: (S,Q,d); index: (S,N,d); valid: (S,N) bool.
+    """query: (S,Q,d); index: (S,N,d); valid: (S,N) bool OR (S,) int
+    per-session sizes (the arena path passes its sizes vector and the
+    mask materialises here, inside the jit — no host-side mask build).
 
     One program over all S session indices: grid (S, N/BLK). Returns
     (sims (S,Q,N), m (S,Q,1), l (S,Q,1)); probs = exp(sims/τ − m)/l on
@@ -164,6 +167,7 @@ def similarity_scan_stack(query, index, valid, *, tau: float,
     """
     sn, qn, d = query.shape
     n = index.shape[1]
+    valid = as_valid_mask(valid, n)
     blk = min(blk_n, n)
     pad = (-n) % blk
     if pad:

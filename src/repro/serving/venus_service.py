@@ -13,9 +13,13 @@ continuous-batching engine:
 Queries arriving in the same service tick compile to ONE query plan:
 each query becomes a declarative ``QuerySpec`` and the planner groups
 compatible specs (same strategy + budget class) into execution groups —
-one fused similarity scan over the stacked session indices answers a
-whole group regardless of how many sessions it spans, whatever the
-strategy mix, and the VLM answers everything under continuous batching.
+one fused similarity scan answers a whole group regardless of how many
+sessions it spans, whatever the strategy mix, and the VLM answers
+everything under continuous batching. The scan operand is the session
+manager's grow-in-place ``MemoryArena`` (ingest ticks append into the
+shared device super-buffers, queries consume them as-is), so a serving
+deployment never restacks device memory between ingest and answer —
+``VenusService.io_stats()["stack_rebuilds"]`` stays 0.
 """
 
 from __future__ import annotations
@@ -113,3 +117,20 @@ class VenusService:
         """Submit and drain: run engine steps until every slot is free."""
         self.submit(queries)
         return self.engine.drain()
+
+    # ------------------------------------------------------------ monitoring
+    def io_stats(self) -> Dict[str, int]:
+        """One monitoring surface over the whole service: the manager's
+        scan/restack counters, the arena's grow/append counters
+        (``arena_*``), and the per-memory transfer counters summed over
+        sessions (``mem_*``). The production invariants to alert on:
+        ``stack_rebuilds == 0`` (arena mode) and ``mem_full_uploads``
+        flat after warm-up."""
+        out: Dict[str, int] = dict(self.manager.io_stats)
+        if self.manager.arena is not None:
+            for k, v in self.manager.arena.io_stats.items():
+                out[f"arena_{k}"] = v
+        for st in self.manager.sessions.values():
+            for k, v in st.memory.io_stats.items():
+                out[f"mem_{k}"] = out.get(f"mem_{k}", 0) + v
+        return out

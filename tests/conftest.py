@@ -1,0 +1,24 @@
+"""Shared fixtures: launch/transfer-counter isolation.
+
+The kernel-dispatch scan counters (``kops.scan_counts()``) are module
+globals and ``SessionManager``/``VenusMemory`` io_stats live as long as
+their managers (including module-scoped fixture managers), so a test
+asserting launch counts could historically be perturbed by whichever
+tests ran before it. The autouse fixture below resets every counter
+before each test, making launch-count assertions order-independent.
+"""
+
+import pytest
+
+from repro.core import session as session_mod
+from repro.kernels import ops as kops
+
+
+@pytest.fixture(autouse=True)
+def _isolate_launch_counters():
+    """Fresh scan/transfer counters for every test: kernel-dispatch
+    counts plus every live manager's (and its memories'/arena's)
+    io_stats."""
+    kops.reset_scan_counts()
+    session_mod.reset_all_io_stats()
+    yield

@@ -1,0 +1,391 @@
+"""Grow-in-place MemoryStack arena: zero-restack ingest↔query.
+
+Acceptance suite for the PR-4 tentpole invariant — with the
+``MemoryArena`` (the ``SessionManager`` default), sessions allocate
+their index / member / index_frame rows directly inside shared
+``(S, capacity, …)`` device super-buffers, tick appends are donated
+in-place writes, and the fused query path consumes the arena views
+AS-IS: after warm-up, ``io_stats["stack_rebuilds"]`` must read 0 across
+arbitrary interleavings of ingest ticks and query plans, while results
+stay draw-for-draw identical to the per-session sequential path (and to
+the ``use_arena=False`` detached/restack fallback, which must show ≥ 1
+rebuild per round when sessions grow).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.memory import MemoryArena, MemoryStack, VenusMemory
+from repro.core.queryplan import QuerySpec
+from repro.core.session import SessionManager, VenusConfig
+from repro.data.video import (OracleEmbedder, PixelEmbedder, VideoWorld,
+                              WorldConfig)
+
+# max_partition_len forces ≥1 partition close per 64-frame chunk, so
+# EVERY ingest tick grows every session — the adversarial schedule for
+# a restacking stack cache
+CFG = VenusConfig(max_partition_len=48)
+
+
+def _worlds(n):
+    return [VideoWorld(WorldConfig(n_scenes=4 + s, seed=20 + s))
+            for s in range(n)]
+
+
+def _manager(n_sessions, *, use_arena):
+    mgr = SessionManager(CFG, PixelEmbedder(dim=64), embed_dim=64,
+                         use_arena=use_arena)
+    sids = [mgr.create_session() for _ in range(n_sessions)]
+    return mgr, sids
+
+
+def _tick(mgr, sids, worlds, t, chunk=64):
+    # cycle through each world so any number of rounds keeps streaming
+    # non-empty chunks (identical across the twin managers)
+    def _chunk(w):
+        lo = (t * chunk) % max(w.total_frames - chunk, 1)
+        return w.frames[lo:lo + chunk]
+
+    mgr.ingest_tick({sid: _chunk(w) for sid, w in zip(sids, worlds)})
+
+
+def _round_queries(worlds, qsids, seed0):
+    return np.stack([
+        OracleEmbedder(worlds[s], dim=64).embed_queries(
+            worlds[s].make_queries(1, seed=seed0 + j))[0]
+        for j, s in enumerate(qsids)])
+
+
+def _assert_same_results(got, want):
+    assert len(got) == len(want)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a.draws, b.draws)
+        np.testing.assert_array_equal(a.frame_ids, b.frame_ids)
+        assert a.n_drawn == b.n_drawn
+
+
+# ---------------------------------------------------------------------------
+# acceptance: zero restacks across ≥5 interleaved ingest/query rounds
+# ---------------------------------------------------------------------------
+
+
+def test_zero_restacks_across_interleaved_rounds():
+    """≥ 3 sessions, ≥ 5 interleaved ingest-tick/query-plan rounds:
+    after warm-up the arena manager must report stack_rebuilds == 0
+    while the fused results stay draw-for-draw identical to both the
+    detached/restack manager and the fully sequential per-session query
+    path; the detached manager must restack every round (its sessions
+    grow every tick)."""
+    worlds = _worlds(3)
+    qsids = [0, 1, 1, 2]
+    mgr_a, sids = _manager(3, use_arena=True)     # arena (default)
+    mgr_d, _ = _manager(3, use_arena=False)       # detached / restack
+    mgr_s, _ = _manager(3, use_arena=False)       # sequential baseline
+
+    # --- warm-up: one ingest tick + one query round on each path
+    for mgr in (mgr_a, mgr_d, mgr_s):
+        _tick(mgr, sids, worlds, 0)
+    qes = _round_queries(worlds, qsids, seed0=40)
+    mgr_a.query_batch_cross(qsids, query_embs=qes)
+    mgr_d.query_batch_cross(qsids, query_embs=qes)
+    for s in sorted(set(qsids)):
+        for j, q in enumerate(qsids):
+            if q == s:
+                mgr_s.query(s, "", query_emb=qes[j])
+
+    mgr_a.reset_io_stats()
+    mgr_d.reset_io_stats()
+
+    # --- 5 rounds of (grow every session) → (query plan over all)
+    rounds = 5
+    for t in range(1, rounds + 1):
+        for mgr in (mgr_a, mgr_d, mgr_s):
+            _tick(mgr, sids, worlds, t)
+        qes = _round_queries(worlds, qsids, seed0=50 + 7 * t)
+        fused = mgr_a.query_batch_cross(qsids, query_embs=qes)
+        detached = mgr_d.query_batch_cross(qsids, query_embs=qes)
+        sequential = [None] * len(qsids)
+        for s in sorted(set(qsids)):
+            for j, q in enumerate(qsids):
+                if q == s:
+                    sequential[j] = mgr_s.query(s, "", query_emb=qes[j])
+        _assert_same_results(fused, detached)
+        _assert_same_results(fused, sequential)
+
+    # the invariant: the arena NEVER restacked; the detached path had to
+    # rebuild its device stacks every round because every session grew
+    assert mgr_a.io_stats["stack_rebuilds"] == 0
+    assert mgr_d.io_stats["stack_rebuilds"] >= rounds
+    # and the fused accounting is unchanged: one fused scan per round
+    assert mgr_a.io_stats["fused_scans"] == rounds
+    assert mgr_a.io_stats["group_scans"] == rounds
+
+
+def test_zero_restacks_mixed_strategy_plans():
+    """Arbitrary strategy mixes (members / index / raw expansion) over
+    the arena: every group consumes the arena views — still zero
+    restacks, with one scan per group at the kops layer."""
+    from repro.kernels import ops as kops
+
+    worlds = _worlds(3)
+    mgr, sids = _manager(3, use_arena=True)
+    for t in range(2):
+        _tick(mgr, sids, worlds, t)
+
+    mix = ("akr", "topk", "uniform", "bolt", "sampling")
+
+    def specs_for(seed0):
+        qsids = [0, 1, 2, 0, 2]
+        qes = _round_queries(worlds, qsids, seed0=seed0)
+        return [QuerySpec(sid=s, embedding=qes[j], strategy=mix[j],
+                          budget=4) for j, s in enumerate(qsids)]
+
+    mgr.query_specs(specs_for(80))                # warm-up
+    mgr.reset_io_stats()
+    kops.reset_scan_counts()
+    for t in range(3):
+        _tick(mgr, sids, worlds, 2 + t)
+        results = mgr.query_specs(specs_for(90 + 11 * t))
+        assert all(r is not None for r in results)
+    assert mgr.io_stats["stack_rebuilds"] == 0
+    assert kops.scan_counts()["similarity_stack"] == 3 * len(mix)
+    assert kops.scan_counts()["similarity"] == 0
+
+
+# ---------------------------------------------------------------------------
+# arena transfer accounting: appends only, zero uploads, zero rebuilds
+# ---------------------------------------------------------------------------
+
+
+def test_arena_appends_only_no_uploads():
+    """Arena twin of the detached no-full-uploads regression test: the
+    rows live in the arena from the start, so NOTHING is ever uploaded
+    lazily (full_uploads == member_uploads == 0 forever) and post-ingest
+    queries ride on donated appends alone."""
+    worlds = _worlds(3)
+    mgr, sids = _manager(3, use_arena=True)
+    for t in range(2):
+        _tick(mgr, sids, worlds, t)
+    qes = _round_queries(worlds, sids, seed0=40)
+    mgr.query_batch_cross(sids, query_embs=qes)
+
+    for t in range(2, 5):
+        _tick(mgr, sids, worlds, t)
+        mgr.query_batch_cross(sids,
+                              query_embs=_round_queries(worlds, sids,
+                                                        seed0=50 + t))
+    for s in sids:
+        io = mgr[s].memory.io_stats
+        assert io["full_uploads"] == 0
+        assert io["member_uploads"] == 0
+        assert io["index_frame_uploads"] == 0
+        assert io["appended_rows"] > 0
+    assert mgr.io_stats["stack_rebuilds"] == 0
+    assert mgr.arena.io_stats["appends"] > 0
+    assert mgr.arena.io_stats["appended_rows"] > 0
+
+
+def test_arena_sizes_drive_valid_masks():
+    """The per-session valid masks come from the arena sizes vector and
+    track growth exactly."""
+    mgr, sids = _manager(3, use_arena=True)
+    rng = np.random.default_rng(0)
+    arena = mgr.arena
+    assert list(np.asarray(arena.sizes)) == [0, 0, 0]
+    for k, (sid, n) in enumerate(zip(sids, (3, 0, 5))):
+        if n:
+            rows = rng.normal(0, 1, (n, 64)).astype(np.float32)
+            mgr[sid].memory.insert_batch(
+                rows, scene_ids=[0] * n, index_frames=list(range(n)),
+                member_lists=[[i] for i in range(n)])
+    np.testing.assert_array_equal(np.asarray(arena.sizes), [3, 0, 5])
+    valid = np.asarray(arena.device_valid())
+    assert valid.shape == (3, CFG.memory_capacity)
+    np.testing.assert_array_equal(valid.sum(axis=1), [3, 0, 5])
+    np.testing.assert_array_equal(np.asarray(arena.device_sizes()),
+                                  [3, 0, 5])
+    # arena rows == host mirrors, per session
+    for sid in sids:
+        m = mgr[sid].memory
+        emb, v = m.device_index()
+        np.testing.assert_array_equal(np.asarray(emb), m._emb)
+        assert int(np.asarray(v).sum()) == m.size
+
+
+def test_arena_grows_with_sessions():
+    """Sessions created over time grow the arena (counted, warm-up-only
+    copies); the stack view follows the new shape and queries against
+    the grown arena still match a detached twin."""
+    worlds = _worlds(3)
+    mgr, _ = _manager(1, use_arena=True)
+    mgr_d, _ = _manager(1, use_arena=False)
+    sids = [0]
+    _tick(mgr, sids, worlds, 0)
+    _tick(mgr_d, sids, worlds, 0)
+    assert mgr.arena.n_sessions == 1
+
+    for k in (1, 2):                       # two more streams come online
+        mgr.create_session()
+        mgr_d.create_session()
+        sids.append(k)
+    assert mgr.arena.n_sessions == 3
+    assert mgr.arena.io_stats["grows"] == 3
+    _tick(mgr, sids, worlds, 1)
+    _tick(mgr_d, sids, worlds, 1)
+
+    qsids = [0, 1, 2, 2]
+    qes = _round_queries(worlds, qsids, seed0=70)
+    _assert_same_results(mgr.query_batch_cross(qsids, query_embs=qes),
+                         mgr_d.query_batch_cross(qsids, query_embs=qes))
+
+
+# ---------------------------------------------------------------------------
+# MemoryStack over arena memories: coverage detection + subset fallback
+# ---------------------------------------------------------------------------
+
+
+def test_stack_arena_coverage_is_zero_copy():
+    """A stack covering the whole arena in slot order returns the arena
+    buffers themselves — no stack builds ever, views identical to the
+    per-memory slices."""
+    mgr, sids = _manager(3, use_arena=True)
+    rng = np.random.default_rng(1)
+    for sid, n in zip(sids, (4, 7, 2)):
+        rows = rng.normal(0, 1, (n, 64)).astype(np.float32)
+        mgr[sid].memory.insert_batch(
+            rows, scene_ids=[0] * n, index_frames=list(range(n)),
+            member_lists=[[i] for i in range(n)])
+    stack = mgr.memory_stack(tuple(sids))
+    assert stack.arena_view() is mgr.arena
+    emb, valid = stack.device_stack()
+    assert emb is mgr.arena.emb                     # the buffer, not a copy
+    assert stack.io_stats["stack_builds"] == 0
+    for k, sid in enumerate(sids):
+        m = mgr[sid].memory
+        np.testing.assert_array_equal(np.asarray(emb[k, :m.size]),
+                                      m._emb[:m.size])
+        assert int(np.asarray(valid[k]).sum()) == m.size
+
+
+def test_stack_subset_of_arena_falls_back():
+    """A stack over a strict subset of arena sessions cannot alias the
+    super-buffers — it falls back to the detached jnp.stack path (and
+    counts its rebuilds) while staying correct."""
+    mgr, sids = _manager(3, use_arena=True)
+    rng = np.random.default_rng(2)
+    for sid, n in zip(sids, (5, 3, 6)):
+        rows = rng.normal(0, 1, (n, 64)).astype(np.float32)
+        mgr[sid].memory.insert_batch(
+            rows, scene_ids=[0] * n, index_frames=list(range(n)),
+            member_lists=[[i] for i in range(n)])
+    rebuilds = {"stack_rebuilds": 0}
+    stack = MemoryStack([mgr[sids[0]].memory, mgr[sids[2]].memory],
+                        rebuild_stats=rebuilds)
+    assert stack.arena_view() is None
+    emb, valid = stack.device_stack()
+    assert emb.shape[0] == 2
+    assert rebuilds["stack_rebuilds"] == 1
+    for k, sid in enumerate((sids[0], sids[2])):
+        m = mgr[sid].memory
+        np.testing.assert_array_equal(np.asarray(emb[k, :m.size]),
+                                      m._emb[:m.size])
+        assert int(np.asarray(valid[k]).sum()) == m.size
+
+
+def test_stack_coverage_voided_by_new_session():
+    """A session added AFTER a covering stack was built voids coverage:
+    the old stack silently falls back to the detached view path with its
+    original member list (correct shapes, stale-free data)."""
+    mgr, sids = _manager(2, use_arena=True)
+    rng = np.random.default_rng(3)
+    for sid in sids:
+        rows = rng.normal(0, 1, (3, 64)).astype(np.float32)
+        mgr[sid].memory.insert_batch(
+            rows, scene_ids=[0] * 3, index_frames=[0, 1, 2],
+            member_lists=[[0], [1], [2]])
+    stack = mgr.memory_stack(tuple(sids))
+    assert stack.arena_view() is mgr.arena
+    mgr.create_session()                            # arena grows to 3
+    assert stack.arena_view() is None               # coverage voided
+    emb, valid = stack.device_stack()
+    assert emb.shape[0] == 2                        # original members
+    np.testing.assert_array_equal(np.asarray(valid).sum(axis=1), [3, 3])
+
+
+# ---------------------------------------------------------------------------
+# detached fallback + arena plumbing invariants
+# ---------------------------------------------------------------------------
+
+
+def test_detached_memory_unchanged_by_default():
+    """Standalone ``VenusMemory`` (no arena) keeps the PR-1 lazy-upload
+    + in-place-append behaviour."""
+    mem = VenusMemory(capacity=32, dim=8, member_cap=4)
+    assert mem.arena is None
+    rng = np.random.default_rng(0)
+    rows = rng.normal(0, 1, (4, 8)).astype(np.float32)
+    mem.insert_batch(rows, scene_ids=[0] * 4, index_frames=[0, 1, 2, 3],
+                     member_lists=[[0], [1], [2], [3]])
+    mem.search(jnp.asarray(rows[:1]), tau=0.1)
+    assert mem.io_stats["full_uploads"] == 1
+
+
+def test_arena_rejects_mismatched_memory_shapes():
+    arena = MemoryArena(capacity=16, dim=8, member_cap=4)
+    slot = arena.add_session()
+    with pytest.raises(AssertionError):
+        VenusMemory(capacity=32, dim=8, member_cap=4, arena=arena,
+                    slot=slot)
+    with pytest.raises(AssertionError):
+        VenusMemory(capacity=16, dim=8, member_cap=4, arena=arena,
+                    slot=0, incremental=False)
+
+
+def test_service_io_stats_surface():
+    """``VenusService.io_stats()`` aggregates manager + arena + memory
+    counters under stable prefixes, with the zero-restack invariant
+    visible at the service level."""
+    from repro.serving.venus_service import VenusService
+
+    worlds = _worlds(2)
+    mgr, sids = _manager(2, use_arena=True)
+    svc = VenusService(mgr, engine=None)
+    for t in range(2):
+        _tick(mgr, sids, worlds, t)
+    mgr.query_batch_cross(sids, query_embs=_round_queries(worlds, sids,
+                                                          seed0=40))
+    stats = svc.io_stats()
+    assert stats["stack_rebuilds"] == 0
+    assert stats["arena_appends"] > 0
+    assert stats["mem_appended_rows"] > 0
+    assert stats["mem_full_uploads"] == 0
+
+
+def test_arena_memory_search_matches_detached():
+    """Per-session search over an arena row view == the same memory
+    detached — the legacy single-session path is unaffected by where
+    the buffers live."""
+    rng = np.random.default_rng(5)
+    arena = MemoryArena(capacity=32, dim=8, member_cap=4)
+    m_a = VenusMemory(32, 8, 4, arena=arena, slot=arena.add_session())
+    m_d = VenusMemory(32, 8, 4)
+    rows = rng.normal(0, 1, (6, 8)).astype(np.float32)
+    for m in (m_a, m_d):
+        m.insert_batch(rows, scene_ids=[0] * 6,
+                       index_frames=list(range(6)),
+                       member_lists=[[i, i + 1] for i in range(6)])
+    q = rng.normal(0, 1, (2, 8)).astype(np.float32)
+    sa, pa = m_a.search(jnp.asarray(q), tau=0.1)
+    sd, pd = m_d.search(jnp.asarray(q), tau=0.1)
+    np.testing.assert_allclose(np.asarray(sa), np.asarray(sd),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(pa), np.asarray(pd),
+                               rtol=1e-6, atol=1e-6)
+    # device expansion rides the arena rows too
+    draws = np.asarray([0, 2, 5, -1])
+    valid = np.asarray([True, True, True, True])
+    np.testing.assert_array_equal(
+        m_a.expand_draws_device(draws, valid, seed=3),
+        m_d.expand_draws_device(draws, valid, seed=3))

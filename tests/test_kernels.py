@@ -128,6 +128,84 @@ def test_similarity_stack_matches_ref(dtype, s, q, n, d, blk):
     assert np.isclose(np.asarray(probs).sum(axis=-1), 1.0).all()
 
 
+@pytest.mark.parametrize("s,q,n,d,blk,empty", [
+    (3, 2, 192, 16, 64, (1,)),     # size-0 middle session
+    (4, 3, 128, 16, 64, (0, 2)),   # several size-0 sessions
+    (1, 2, 64, 8, 64, (0,)),       # S==1 degenerate AND size 0
+    (1, 1, 130, 8, 64, ()),        # S==1 degenerate, cap % blk != 0
+    (3, 2, 200, 32, 64, ()),       # cap % blk != 0 (pad lanes), S>1
+    (2, 1, 63, 16, 64, ()),        # capacity SMALLER than the block
+])
+def test_similarity_stack_edge_cases_match_ref(s, q, n, d, blk, empty):
+    """Edge-case parity for the stacked scan: sessions with size == 0
+    (their lane must yield the same degenerate softmax as the oracle),
+    the S == 1 degenerate stack, and capacities the block size does not
+    divide — Pallas kernel vs the jnp oracle, exact to float tolerance.
+    (Size-0 lanes pair with block-divisible capacities: pad lanes enter
+    the oracle-free denominator only when NO real entry dominates.)"""
+    ks = jax.random.split(jax.random.key(11), 3)
+    query = jax.random.normal(ks[0], (s, q, d))
+    index = jax.random.normal(ks[1], (s, n, d))
+    nvalid = np.array(jax.random.randint(ks[2], (s,), 1, n + 1))
+    for e in empty:
+        nvalid[e] = 0
+    valid = jnp.arange(n)[None, :] < jnp.asarray(nvalid)[:, None]
+    sims, m, l = similarity_scan_stack(query, index, valid, tau=0.07,
+                                       blk_n=blk)
+    want_s, want_p = ref.similarity_stack_ref(query, index, tau=0.07,
+                                              valid=valid)
+    probs = jnp.exp(jnp.where(valid[:, None], sims / 0.07, -1e30) - m) / l
+    np.testing.assert_allclose(np.asarray(sims), np.asarray(want_s),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(probs), np.asarray(want_p),
+                               rtol=1e-4, atol=1e-5)
+    # size-0 lanes degenerate to the uniform distribution in both paths
+    for e in empty:
+        np.testing.assert_allclose(np.asarray(probs)[e], 1.0 / n,
+                                   rtol=1e-5)
+
+
+@pytest.mark.parametrize("s,n,cap_divides", [(3, 192, True),
+                                             (2, 100, False)])
+def test_similarity_stack_sizes_matches_mask(s, n, cap_divides):
+    """The (S,) sizes form of ``valid`` (the arena path — masks derive
+    on device from the sizes) must match the explicit (S, N) bool mask
+    form bit-for-bit, on the Pallas kernel, the oracle, and the ops
+    dispatch layer."""
+    from repro.kernels import ops
+    d, q = 16, 2
+    ks = jax.random.split(jax.random.key(12), 3)
+    query = jax.random.normal(ks[0], (s, q, d))
+    index = jax.random.normal(ks[1], (s, n, d))
+    sizes = jax.random.randint(ks[2], (s,), 0, n + 1)
+    mask = jnp.arange(n)[None, :] < sizes[:, None]
+
+    out_sizes = similarity_scan_stack(query, index, sizes.astype(jnp.int32),
+                                      tau=0.1, blk_n=64)
+    out_mask = similarity_scan_stack(query, index, mask, tau=0.1, blk_n=64)
+    for a, b in zip(out_sizes, out_mask):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    ref_sizes = ref.similarity_stack_ref(query, index, tau=0.1,
+                                         valid=sizes.astype(jnp.int32))
+    ref_mask = ref.similarity_stack_ref(query, index, tau=0.1, valid=mask)
+    for a, b in zip(ref_sizes, ref_mask):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    old = ops.backend()
+    try:
+        for backend in ("jnp", "pallas"):
+            ops.set_backend(backend)
+            s_a, p_a = ops.similarity_stack(query, index, tau=0.1,
+                                            valid=sizes.astype(jnp.int32))
+            s_b, p_b = ops.similarity_stack(query, index, tau=0.1,
+                                            valid=mask)
+            np.testing.assert_array_equal(np.asarray(s_a), np.asarray(s_b))
+            np.testing.assert_array_equal(np.asarray(p_a), np.asarray(p_b))
+    finally:
+        ops.set_backend(old)
+
+
 def test_similarity_stack_lanes_match_2d_scan():
     """Each session lane of the stacked scan equals an independent 2D
     ``similarity_scan`` over that session's index."""

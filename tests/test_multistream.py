@@ -249,15 +249,17 @@ def test_capacity_guard_batched():
 
 
 def test_cross_session_queries_no_full_uploads_after_stack():
-    """io_stats regression: once the cross-session stack is built, N
-    post-ingest fused queries must report 0 additional full index
-    uploads — inserts extend the per-session device buffers in place and
-    the stack rebuilds device-side from them."""
+    """io_stats regression for the DETACHED (use_arena=False) fallback:
+    once the cross-session stack is built, N post-ingest fused queries
+    must report 0 additional full index uploads — inserts extend the
+    per-session device buffers in place and the stack rebuilds
+    device-side from them. (The arena default never uploads at all —
+    see tests/test_arena.py for its twin.)"""
     from repro.data.video import OracleEmbedder
     worlds = [VideoWorld(WorldConfig(n_scenes=4 + s, seed=40 + s))
               for s in range(3)]
     mgr = SessionManager(VenusConfig(), PixelEmbedder(dim=64),
-                         embed_dim=64)
+                         embed_dim=64, use_arena=False)
     sids = [mgr.create_session() for _ in worlds]
     half = min(w.total_frames for w in worlds) // 2
     for i in range(0, half, 64):

@@ -1,0 +1,204 @@
+"""Hypothesis properties for the query-plan layer.
+
+Randomised invariants over ``build_plan``/``execute_plan``:
+
+* **Equivalence** — for random mixes of sessions (including size-0
+  sessions), strategies, budgets, and seed policies, the fused plan
+  path (arena-backed by default) returns exactly what the direct
+  per-strategy ``retrieval.py`` calls return, with the per-session PRNG
+  chains consumed in the executor's canonical order.
+* **Planner shape** — ``plan.n_scans`` equals the number of distinct
+  (strategy, resolved budget, scan-param) groups, the groups partition
+  the specs, and per-session arrival order is preserved.
+
+Run with a fixed seed in CI (``--hypothesis-seed=0``) for
+reproducibility.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import retrieval as rt  # noqa: E402
+from repro.core.queryplan import (QuerySpec, build_plan,  # noqa: E402
+                                  strategies)
+from repro.core.session import SessionManager, VenusConfig  # noqa: E402
+
+DIM = 8
+CFG = VenusConfig(memory_capacity=32, member_cap=8, n_max=8)
+ALL_STRATEGIES = strategies()          # every registered retrieval rule
+BUDGETS = (None, 3, 5)                 # None ⇒ cfg.n_max
+_settings = settings(max_examples=10, deadline=None)
+_settings_fast = settings(max_examples=30, deadline=None)
+
+
+class _NoQueryEmbedder:
+    """Specs in this suite always carry embeddings — any embedder call
+    would mean the plan path diverged from the direct path."""
+
+    def embed_queries(self, texts):
+        raise AssertionError("plan unexpectedly embedded query text")
+
+
+@st.composite
+def plan_cases(draw):
+    n_sessions = draw(st.integers(1, 3))
+    sizes = draw(st.lists(st.integers(0, 12), min_size=n_sessions,
+                          max_size=n_sessions))
+    n_specs = draw(st.integers(1, 4))
+    spec_descs = [(draw(st.integers(0, n_sessions - 1)),
+                   draw(st.sampled_from(ALL_STRATEGIES)),
+                   draw(st.sampled_from(BUDGETS)),
+                   draw(st.sampled_from([None, None, 7])))  # bias: chain
+                  for _ in range(n_specs)]
+    data_seed = draw(st.integers(0, 2 ** 31 - 1))
+    return sizes, spec_descs, data_seed
+
+
+def _twin_managers(sizes, data_seed):
+    """Two managers with identical sessions/memories/PRNG chains —
+    one drives the plan path, one the direct per-strategy calls."""
+    rng = np.random.default_rng(data_seed)
+    payload = []
+    for n in sizes:
+        rows = rng.normal(0, 1, (n, DIM)).astype(np.float32)
+        members = [list(range(i * 5, i * 5 + int(rng.integers(0, CFG.member_cap + 1))))
+                   for i in range(n)]
+        payload.append((rows, members))
+    mgrs = []
+    for _ in range(2):
+        mgr = SessionManager(CFG, _NoQueryEmbedder(), embed_dim=DIM)
+        for sid, (n, (rows, members)) in enumerate(zip(sizes, payload)):
+            mgr.create_session()
+            mgr[sid].stats["frames_seen"] = 3 * n + 5
+            if n:
+                mgr[sid].memory.insert_batch(
+                    rows, scene_ids=[0] * n,
+                    index_frames=list(range(n)), member_lists=members)
+        mgrs.append(mgr)
+    return mgrs
+
+
+def _direct_one(mgr, spec, key_budget):
+    """The strategy's direct retrieval.py call for one spec — consumes
+    the session chain iff the spec is chain-policy (seed=None)."""
+    cfg = mgr.cfg
+    sess = mgr[spec.sid]
+    budget = key_budget
+    emb, valid = sess.memory.device_index()
+    sims, probs = sess.memory.search(
+        jnp.asarray(spec.embedding, jnp.float32)[None], tau=cfg.tau)
+    sims0, probs0 = sims[0], probs[0]
+    strategy = spec.strategy
+    if strategy in ("sampling", "akr"):
+        sub = (sess.next_keys(1)[0] if spec.seed is None
+               else jax.random.key(int(spec.seed)))
+        if strategy == "sampling":
+            draws, _ = rt.sampling_retrieve(probs0, sub, budget)
+            draws = np.asarray(draws)
+            fids = sess.memory.expand_draws(
+                draws, np.ones(budget, bool), seed=cfg.seed)
+        else:
+            res = rt.akr_progressive(probs0, sub, theta=cfg.theta,
+                                     beta=cfg.beta, n_max=budget)
+            draws = np.asarray(res.draws)
+            fids = sess.memory.expand_draws(
+                draws, np.asarray(res.valid), seed=cfg.seed)
+    elif strategy == "topk":
+        draws = np.asarray(rt.topk_retrieve(sims0, valid, budget))
+        fids = sess.memory.index_frames(draws)
+    elif strategy == "uniform":
+        draws = np.asarray(rt.uniform_retrieve(
+            sess.stats["frames_seen"], budget))
+        fids = draws
+    elif strategy == "bolt":
+        draws = np.asarray(rt.bolt_inverse_transform(
+            sims0, valid, budget, tau=cfg.tau))
+        fids = sess.memory.index_frames(draws)
+    elif strategy == "mdf":
+        draws = np.asarray(rt.mdf_retrieve(emb, valid, budget))
+        fids = sess.memory.index_frames(draws)
+    elif strategy == "aks":
+        draws = np.asarray(rt.aks_retrieve(sims0, valid, budget))
+        fids = sess.memory.index_frames(draws)
+    else:
+        raise AssertionError(strategy)
+    return draws, np.asarray(fids)
+
+
+@_settings
+@given(case=plan_cases())
+def test_plan_path_equals_direct_retrieval_calls(case):
+    """Random session mixes (incl. size-0), strategies, budgets, and
+    seed policies: execute_plan == the direct per-strategy call chain,
+    draw-for-draw (same index draws, same frame ids)."""
+    sizes, spec_descs, data_seed = case
+    mgr_plan, mgr_direct = _twin_managers(sizes, data_seed)
+    rng = np.random.default_rng(data_seed + 1)
+    qes = rng.normal(0, 1, (len(spec_descs), DIM)).astype(np.float32)
+    specs = [QuerySpec(sid=sid, embedding=qes[j], strategy=strategy,
+                       budget=budget, seed=seed)
+             for j, (sid, strategy, budget, seed) in enumerate(spec_descs)]
+
+    plan = mgr_plan.plan(specs)
+    got = mgr_plan.execute(plan)
+
+    # direct path: consume PRNG chains in the executor's canonical
+    # order (plan group order; ascending sid within a group; arrival
+    # order within a session)
+    want = [None] * len(specs)
+    for group in plan.groups:
+        for sid in sorted(group.order):
+            for j in group.order[sid]:
+                want[j] = _direct_one(mgr_direct, specs[j],
+                                      group.key.budget)
+
+    for res, (draws, fids) in zip(got, want):
+        np.testing.assert_array_equal(res.draws, draws)
+        np.testing.assert_array_equal(res.frame_ids, fids)
+
+
+@_settings_fast
+@given(data=st.data())
+def test_n_scans_equals_distinct_groups(data):
+    """``plan.n_scans`` == the number of distinct (strategy, resolved
+    budget, tau, theta, beta) combinations; groups partition the specs;
+    per-session arrival order is preserved."""
+    n_specs = data.draw(st.integers(1, 8))
+    e = np.zeros(DIM, np.float32)
+    specs = []
+    for _ in range(n_specs):
+        specs.append(QuerySpec(
+            sid=data.draw(st.integers(0, 3)), embedding=e,
+            strategy=data.draw(st.sampled_from(ALL_STRATEGIES)),
+            budget=data.draw(st.sampled_from(BUDGETS)),
+            tau=data.draw(st.sampled_from([None, 0.2])),
+            theta=data.draw(st.sampled_from([None, 0.5])),
+            beta=data.draw(st.sampled_from([None, 2.0]))))
+    plan = build_plan(specs, CFG)
+
+    resolved = {(s.strategy,
+                 s.budget if s.budget is not None else CFG.n_max,
+                 s.tau if s.tau is not None else CFG.tau,
+                 s.theta if s.theta is not None else CFG.theta,
+                 s.beta if s.beta is not None else CFG.beta)
+                for s in specs}
+    assert plan.n_scans == len(plan.groups) == len(resolved)
+
+    # groups partition spec positions
+    all_idx = sorted(j for g in plan.groups for j in g.indices)
+    assert all_idx == list(range(n_specs))
+    for g in plan.groups:
+        # per-session arrival order == spec arrival order
+        for sid, idxs in g.order.items():
+            assert idxs == sorted(idxs)
+            assert all(specs[j].sid == sid for j in idxs)
+        assert sorted(j for js in g.order.values() for j in js) \
+            == sorted(g.indices)
+        assert g.qmax == max(len(v) for v in g.order.values())
