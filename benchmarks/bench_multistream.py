@@ -22,6 +22,11 @@ The edge box serves N concurrent camera streams with real-time queries
   ``MemoryArena`` (zero restacks, donated appends) vs the PR-2/3
   detached path (device stack rebuilt every round), with restacks/tick
   and append bandwidth from the counters.
+* **session-lifecycle churn** (``--churn``) — rounds of create →
+  ingest ⇄ query → close → recreate with a small ``memory_capacity``
+  and sliding-window eviction: steady-state slot count (no monotonic
+  arena growth under churn), slot reuses, evictions/tick, and
+  restacks/tick (asserted 0).
 
 ``--json`` additionally writes every emitted row (plus run metadata) to
 ``BENCH_multistream.json`` so CI can upload a machine-readable perf
@@ -392,6 +397,94 @@ def _bench_arena(n_sessions: int, n_queries: int, chunk: int = 64,
           f"{out['restack']['total'] / out['arena']['total']:.2f}x"})
 
 
+def _bench_churn(n_sessions: int, n_queries: int, chunk: int = 64,
+                 rounds: int = 3, ticks: int = 4, n_scenes: int = 6):
+    """24/7 churn workload: create → ingest ⇄ query → close → recreate.
+
+    One stream churns every round (closed, then recreated — its arena
+    slot must be RECYCLED from the free-list, not grown) while the rest
+    run long enough to overflow ``memory_capacity`` and evict under the
+    sliding-window policy. Reports wall time, steady-state slot count
+    (must equal the live-stream count — no monotonic growth), slot
+    reuses, evictions per tick, and restacks per tick (must be 0): the
+    production invariants ``tests/test_lifecycle.py`` pins, measured on
+    the full workload."""
+    cfg = VenusConfig(max_partition_len=32, memory_capacity=24,
+                      eviction="sliding_window")
+    worlds = [VideoWorld(WorldConfig(n_scenes=n_scenes, seed=20 + s))
+              for s in range(n_sessions)]
+    mgr = SessionManager(cfg, PixelEmbedder(dim=64), embed_dim=64)
+    stable = [mgr.create_session() for _ in range(n_sessions - 1)]
+    churn_sid = mgr.create_session()
+    steady = mgr.arena.n_sessions
+
+    def chunk_at(w, t):
+        lo = (t * chunk) % max(w.total_frames - chunk, 1)
+        return w.frames[lo:lo + chunk]
+
+    def stream_map():
+        m = {sid: worlds[i] for i, sid in enumerate(stable)}
+        m[churn_sid] = worlds[-1]
+        return m
+
+    # per-(round, tick) query embeddings, precomputed so the timed loop
+    # measures the lifecycle paths, not the oracle embedder
+    qe_by_step = [np.concatenate([
+        OracleEmbedder(w, dim=64).embed_queries(
+            w.make_queries(n_queries, seed=31 + 13 * step))
+        for w in worlds])
+        for step in range(rounds * ticks)]
+
+    # warm-up: one tick + one query round compiles ingest/scan/expand
+    mgr.ingest_tick({sid: chunk_at(w, 0)
+                     for sid, w in stream_map().items()})
+    qsids = [s for s in range(n_sessions) for _ in range(n_queries)]
+    mgr.query_batch_cross([list(stream_map())[s] for s in qsids],
+                          query_embs=qe_by_step[0])
+    mgr.reset_io_stats()          # zeroes every memory's counters too
+
+    t0 = time.perf_counter()
+    total_ticks = 0
+    for r in range(rounds):
+        mgr.close_session(churn_sid)
+        churn_sid = mgr.create_session()        # must recycle the slot
+        for t in range(ticks):
+            step = r * ticks + t
+            smap = stream_map()
+            mgr.ingest_tick({sid: chunk_at(w, 1 + step)
+                             for sid, w in smap.items()})
+            sids_now = list(smap)
+            mgr.query_batch_cross([sids_now[s] for s in qsids],
+                                  query_embs=qe_by_step[step])
+            total_ticks += 1
+    churn_s = time.perf_counter() - t0
+
+    # closed_mem_stats keeps churned tenants' counters — summing live
+    # sessions alone would drop every closed round's evictions
+    evictions = mgr.closed_mem_stats.get("evicted_rows", 0) + sum(
+        mgr[s].memory.io_stats["evicted_rows"] for s in mgr.sessions)
+    restacks_per_tick = mgr.io_stats["stack_rebuilds"] / total_ticks
+    evictions_per_tick = evictions / total_ticks
+    # the lifecycle invariants, asserted where CI runs them: slots hold
+    # at the steady-state maximum, churned slots are reused not grown,
+    # and nothing ever restacks
+    assert mgr.arena.n_sessions == steady, mgr.arena.n_sessions
+    assert mgr.arena.io_stats["grows"] == 0, mgr.arena.io_stats
+    assert mgr.arena.io_stats["slot_reuses"] == rounds, mgr.arena.io_stats
+    assert restacks_per_tick == 0.0, restacks_per_tick
+    assert evictions > 0, "churn workload never reached capacity"
+    emit("multistream/churn", churn_s,
+         {"sessions": n_sessions, "rounds": rounds,
+          "ticks_per_round": ticks,
+          "queries_per_tick": len(qsids),
+          "steady_state_slots": steady,
+          "slot_reuses": mgr.arena.io_stats["slot_reuses"],
+          "grows_after_warmup": mgr.arena.io_stats["grows"],
+          "evictions_per_tick": f"{evictions_per_tick:.1f}",
+          "restacks_per_tick": restacks_per_tick,
+          "sessions_closed": mgr.io_stats["sessions_closed"]})
+
+
 def _bench_incremental_index(capacity: int = 16384, dim: int = 256,
                              rounds: int = 20):
     """Post-ingest query latency: incremental append vs full re-upload."""
@@ -429,7 +522,8 @@ def _bench_incremental_index(capacity: int = 16384, dim: int = 256,
          {"speedup": f"{out['seed_reupload'] / out['incremental']:.2f}x"})
 
 
-ALL_PARTS = ("ingest", "query", "cross", "plan", "arena", "incremental")
+ALL_PARTS = ("ingest", "query", "cross", "plan", "arena", "churn",
+             "incremental")
 JSON_PATH = "BENCH_multistream.json"
 
 
@@ -462,6 +556,9 @@ def run(n_sessions: int = 4, n_queries: int = 8, *,
         if "arena" in parts:
             _bench_arena(n_sessions, n_queries, ticks=ticks,
                          n_scenes=n_scenes)
+        if "churn" in parts:
+            _bench_churn(n_sessions, n_queries, ticks=ticks,
+                         n_scenes=n_scenes)
         if "incremental" in parts:
             _bench_incremental_index()
     finally:
@@ -488,14 +585,19 @@ if __name__ == "__main__":
                          "(query_batch_cross shim + mixed-strategy plan)")
     ap.add_argument("--arena", action="store_true",
                     help="the grow-in-place arena vs restack bench")
+    ap.add_argument("--churn", action="store_true",
+                    help="the session-lifecycle churn bench "
+                         "(create/ingest/query/close; slot recycling + "
+                         "sliding-window eviction)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny worlds / few ticks for CI")
     ap.add_argument("--json", action="store_true",
                     help=f"also write every emitted row to {JSON_PATH}")
     args = ap.parse_args()
     parts = None
-    if args.cross or args.arena:
+    if args.cross or args.arena or args.churn:
         parts = (("cross", "plan") if args.cross else ()) + \
-                (("arena",) if args.arena else ())
+                (("arena",) if args.arena else ()) + \
+                (("churn",) if args.churn else ())
     run(args.sessions, args.queries, smoke=args.smoke, parts=parts,
         json_path=JSON_PATH if args.json else None)

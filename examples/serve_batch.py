@@ -43,9 +43,15 @@ def main() -> None:
     args = ap.parse_args()
 
     # --- edge side: Venus ingests the stream ------------------------------
+    # a deployment-shaped config: sliding-window eviction means this
+    # stream's device index stays bounded however long it runs — past
+    # memory_capacity it keeps ingesting and answers from its newest
+    # rows (ring memory, O(1) eviction; the raw-frame archive is the
+    # paper's append-only NVMe layer)
     world = VideoWorld(WorldConfig(n_scenes=10, seed=4))
     oracle = OracleEmbedder(world, dim=64)
-    venus = VenusSystem(VenusConfig(), oracle, embed_dim=64)
+    venus = VenusSystem(VenusConfig(eviction="sliding_window"),
+                        oracle, embed_dim=64)
     for i in range(0, world.total_frames, 64):
         venus.ingest(world.frames[i:i + 64])
     venus.flush()
@@ -86,6 +92,16 @@ def main() -> None:
           f"{plan.n_scans} scans for {len(queries)} requests; "
           f"{stats['stack_rebuilds']} stack rebuilds (arena: appends "
           f"in place)")
+
+    # --- lifecycle: the stream ends; its arena slot is recycled -----------
+    final = svc.close_stream(venus.sid)
+    replacement = svc.create_stream()     # reuses the freed slot
+    stats = svc.io_stats()
+    print(f"[serve_batch] closed stream after {final['frames_seen']} "
+          f"frames; slot recycled for stream {replacement} "
+          f"(releases={stats['arena_slot_releases']}, "
+          f"reuses={stats['arena_slot_reuses']}, "
+          f"grows={stats['arena_grows']} — no growth on churn)")
 
 
 if __name__ == "__main__":

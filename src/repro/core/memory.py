@@ -41,6 +41,33 @@ memories (standalone use) fall back to the PR-2 behaviour: device-side
 ``jnp.stack`` of the per-memory buffers, cached against the members'
 insert versions and rebuilt when any version changes (each rebuild is
 counted into ``rebuild_stats["stack_rebuilds"]`` when provided).
+
+**Lifecycle for 24/7 streams** (see ARCHITECTURE.md for the full state
+machine). Two mechanisms keep memory bounded under unbounded streaming:
+
+* **Slot recycling** — a closed session's arena slot goes onto a
+  free-list (``MemoryArena.release_slot``); its lane reads window
+  ``(0, 0)`` and is masked out as padding until ``add_session``
+  recycles it after ONE donated device-side row reset. The arena grows
+  by whole slot blocks only when the free-list is empty, so a churn
+  workload (create → ingest → close → recreate) holds the slot count at
+  its steady-state maximum with zero restacks and zero reallocation.
+* **Eviction** — a session that outlives ``capacity`` consults its
+  ``EvictionPolicy``. ``none`` keeps the historical overflow-raises
+  contract. The window policies turn the memory into a device-side
+  ring: a ``head`` offset marks the oldest valid row, eviction is O(1)
+  pointer motion (``head`` advances, ``size`` shrinks) and the incoming
+  rows overwrite the evicted physical positions in place. Validity is
+  therefore a ``(head, size)`` WINDOW, not a prefix: every scan path
+  accepts ``(S, 2)`` ``[start, size)`` windows as its ``valid`` operand
+  (masks derive on device — ``kernels.ref.as_valid_mask``), and the
+  detached per-memory path derives the same ring mask, so arena and
+  detached semantics cannot diverge.
+
+What ``valid`` means, in one place: a **bool mask** is explicit
+per-row validity; a **(S,) sizes vector** means prefix ``[0, size)``;
+a **(S, 2) window** means ring ``[start, start+size) mod capacity``.
+A sizes vector is exactly a window with ``start == 0``.
 """
 
 from __future__ import annotations
@@ -55,6 +82,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kops
+from repro.kernels.ref import as_valid_mask
 
 
 class FrameStore:
@@ -81,9 +109,24 @@ class IndexEntry:
     ts: int                      # timestamp (frame index) of indexed frame
 
 
+# Both mask helpers delegate to the kernels' shared `as_valid_mask`
+# definition — the ring-window semantics live in exactly ONE place, so
+# the arena, detached, oracle, and Pallas paths cannot diverge.
+
 @functools.partial(jax.jit, static_argnames=("capacity",))
-def _valid_mask(size: jnp.ndarray, *, capacity: int) -> jnp.ndarray:
-    return jnp.arange(capacity) < size
+def _ring_valid_mask(head: jnp.ndarray, size: jnp.ndarray, *,
+                     capacity: int) -> jnp.ndarray:
+    """Physical-row validity of the ring window ``[head, head+size)``
+    (mod capacity). ``head == 0`` reduces to the plain prefix mask."""
+    return as_valid_mask(jnp.stack([head, size])[None], capacity)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def _window_valid_stack(windows: jnp.ndarray, *, capacity: int
+                        ) -> jnp.ndarray:
+    """(S, 2) int ``[head, size]`` windows -> (S, capacity) bool masks,
+    derived on device (only the tiny windows array ever transfers)."""
+    return as_valid_mask(windows, capacity)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -111,31 +154,24 @@ def _append_id_rows(buf: jnp.ndarray, rows: jnp.ndarray,
     return jax.lax.dynamic_update_slice(buf, rows, (pos,))
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _arena_append_rows(buf: jnp.ndarray, rows: jnp.ndarray,
-                       slot: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
-    """Donated row-block append into one session's arena rows: buf
-    (S, cap, d) gets rows (b, d) written at (slot, pos, 0) in place."""
-    return jax.lax.dynamic_update_slice(buf, rows[None], (slot, pos, 0))
-
-
-@functools.partial(jax.jit, donate_argnums=(0, 1))
-def _arena_append_members(members: jnp.ndarray, counts: jnp.ndarray,
-                          rows: jnp.ndarray, cnts: jnp.ndarray,
-                          slot: jnp.ndarray, pos: jnp.ndarray
-                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Donated append of member-reservoir rows + counts into the arena."""
-    members = jax.lax.dynamic_update_slice(members, rows[None],
-                                           (slot, pos, 0))
-    counts = jax.lax.dynamic_update_slice(counts, cnts[None], (slot, pos))
-    return members, counts
-
-
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _arena_append_ids(buf: jnp.ndarray, rows: jnp.ndarray,
-                      slot: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
-    """Donated append into a (S, cap) id table (index_frame)."""
-    return jax.lax.dynamic_update_slice(buf, rows[None], (slot, pos))
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+def _arena_reset_slot(emb: jnp.ndarray, members: jnp.ndarray,
+                      counts: jnp.ndarray, ifr: jnp.ndarray,
+                      slot: jnp.ndarray):
+    """Donated zero-reset of ONE slot's rows across every super-buffer —
+    the whole device-side cost of recycling a freed slot for a new
+    session is this single program (no reallocation, no restack)."""
+    emb = jax.lax.dynamic_update_slice(
+        emb, jnp.zeros((1,) + emb.shape[1:], emb.dtype), (slot, 0, 0))
+    members = jax.lax.dynamic_update_slice(
+        members, jnp.zeros((1,) + members.shape[1:], members.dtype),
+        (slot, 0, 0))
+    counts = jax.lax.dynamic_update_slice(
+        counts, jnp.zeros((1,) + counts.shape[1:], counts.dtype),
+        (slot, 0))
+    ifr = jax.lax.dynamic_update_slice(
+        ifr, jnp.zeros((1,) + ifr.shape[1:], ifr.dtype), (slot, 0))
+    return emb, members, counts, ifr
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -186,6 +222,75 @@ def expand_gather(members: jnp.ndarray, counts: jnp.ndarray,
 from repro.util import pow2_bucket
 
 
+# ---------------------------------------------------------------------------
+# Eviction policies: what happens when an insert would overflow capacity
+# ---------------------------------------------------------------------------
+
+
+class EvictionPolicy:
+    """Bounded-memory policy for sessions that outlive ``capacity``.
+
+    ``none`` preserves the historical contract: overflow raises and the
+    session simply stops ingesting. The window policies below turn the
+    memory into a device-side ring — ``evict`` advances the logical
+    window start (``head``) over the ``need`` oldest rows, O(1) pointer
+    motion; the incoming rows then overwrite the evicted physical
+    positions in place, so a 24/7 stream runs forever in constant
+    device memory.
+    """
+
+    name = "none"
+
+    def evict(self, mem: "VenusMemory", need: int) -> None:
+        raise RuntimeError("memory capacity exhausted")
+
+
+class SlidingWindowEviction(EvictionPolicy):
+    """Keep only the newest ``capacity`` index rows: evict the oldest
+    ``need`` rows by advancing the ring head (the streaming-systems
+    baseline — bounded memory + explicit eviction, cf. LiveVLM)."""
+
+    name = "sliding_window"
+
+    def evict(self, mem: "VenusMemory", need: int) -> None:
+        mem._advance_head(need)
+
+
+class ClusterMergeEviction(SlidingWindowEviction):
+    """Sliding window that first folds each evictee's member reservoir
+    into its most similar surviving index row (cosine ≥ ``threshold``),
+    so the raw frames of an evicted cluster stay reachable through the
+    merged cluster instead of cliff-dropping at the window edge."""
+
+    name = "cluster_merge"
+
+    def __init__(self, threshold: float = 0.8):
+        self.threshold = threshold
+
+    def evict(self, mem: "VenusMemory", need: int) -> None:
+        mem._merge_into_survivors(need, self.threshold)
+        mem._advance_head(need)
+
+
+_EVICTION_POLICIES = {
+    "none": EvictionPolicy,
+    "sliding_window": SlidingWindowEviction,
+    "cluster_merge": ClusterMergeEviction,
+}
+
+
+def get_eviction_policy(policy) -> EvictionPolicy:
+    """Resolve a policy by name (an ``EvictionPolicy`` instance passes
+    through, so callers can hand in a configured one)."""
+    if isinstance(policy, EvictionPolicy):
+        return policy
+    try:
+        return _EVICTION_POLICIES[policy]()
+    except KeyError:
+        raise KeyError(f"unknown eviction policy {policy!r}; known: "
+                       f"{sorted(_EVICTION_POLICIES)}") from None
+
+
 class MemoryArena:
     """Shared device-resident super-buffers for S sessions' memories.
 
@@ -200,27 +305,37 @@ class MemoryArena:
     the ``(S,)`` sizes vector (the only thing that moves host→device
     per tick besides the appended rows themselves).
 
-    Growth is per-session: ``add_session`` extends the buffers by one
-    slot (a copy, counted in ``io_stats["grows"]``) — session creation
-    is warm-up, not the steady ingest↔query loop.
+    Slot lifecycle: ``add_session`` prefers the free-list — a slot a
+    closed session released via ``release_slot`` — and recycles it after
+    ONE donated device-side row reset; the buffers grow by a whole slot
+    block (a copy, counted in ``io_stats["grows"]``) only when the
+    free-list is empty. Session churn therefore holds the slot count at
+    its steady-state maximum: creation is warm-up, not the steady
+    ingest↔query loop. Each slot carries a ``(head, size)`` ring window
+    (``heads``/``sizes`` host mirrors); free slots read ``(0, 0)`` and
+    are masked-out padding lanes until reuse.
     """
 
     def __init__(self, capacity: int, dim: int, member_cap: int = 128):
         self.capacity = capacity
         self.dim = dim
         self.member_cap = member_cap
-        self.n_sessions = 0
+        self.n_sessions = 0       # allocated slots (incl. freed ones)
         self.emb: Optional[jnp.ndarray] = None          # (S, cap, d)
         self.members: Optional[jnp.ndarray] = None      # (S, cap, K)
         self.member_count: Optional[jnp.ndarray] = None  # (S, cap)
         self.index_frame: Optional[jnp.ndarray] = None   # (S, cap)
         self.sizes = np.zeros((0,), np.int32)            # host mirror
-        self.version = 0          # bumped per append / grow
+        self.heads = np.zeros((0,), np.int32)            # ring starts
+        self.free_slots: List[int] = []    # released, awaiting reuse
+        self.version = 0          # bumped per append / grow / release
         self._sizes_dev: Optional[jnp.ndarray] = None
+        self._windows_dev: Optional[jnp.ndarray] = None
         self._valid_dev: Optional[jnp.ndarray] = None
         self._valid_version = -1
         self._deferred: Optional[list] = None   # open tick batch, or None
-        self.io_stats = {"grows": 0, "appends": 0, "appended_rows": 0}
+        self.io_stats = {"grows": 0, "appends": 0, "appended_rows": 0,
+                         "slot_releases": 0, "slot_reuses": 0}
 
     def reset_io_stats(self) -> None:
         for k in self.io_stats:
@@ -235,7 +350,20 @@ class MemoryArena:
         return jnp.pad(buf, pad)
 
     def add_session(self) -> int:
-        """Allocate the next slot, growing every super-buffer by one."""
+        """Allocate a slot: recycle a released one (device rows reset
+        via one donated program — no growth, no restack) or grow every
+        super-buffer by one whole slot block."""
+        if self.free_slots:
+            slot = self.free_slots.pop()
+            (self.emb, self.members, self.member_count,
+             self.index_frame) = _arena_reset_slot(
+                self.emb, self.members, self.member_count,
+                self.index_frame, jnp.asarray(slot, jnp.int32))
+            self.sizes[slot] = 0
+            self.heads[slot] = 0
+            self.version += 1
+            self.io_stats["slot_reuses"] += 1
+            return slot
         slot = self.n_sessions
         self.n_sessions = s = slot + 1
         cap, d, k = self.capacity, self.dim, self.member_cap
@@ -246,9 +374,23 @@ class MemoryArena:
         self.index_frame = self._grow(self.index_frame, (s, cap),
                                       jnp.int32)
         self.sizes = np.append(self.sizes, np.int32(0))
+        self.heads = np.append(self.heads, np.int32(0))
         self.version += 1
         self.io_stats["grows"] += 1
         return slot
+
+    def release_slot(self, slot: int) -> None:
+        """Free a closed session's slot into the free-list. The lane's
+        window reads ``(0, 0)`` — masked-out padding for every scan —
+        until ``add_session`` recycles it; the stale device rows are
+        reset at reuse time, so closing costs no device work at all."""
+        assert 0 <= slot < self.n_sessions, slot
+        assert slot not in self.free_slots, f"slot {slot} already free"
+        self.free_slots.append(slot)
+        self.sizes[slot] = 0
+        self.heads[slot] = 0
+        self.version += 1
+        self.io_stats["slot_releases"] += 1
 
     # ------------------------------------------------------------ ingestion
     @contextlib.contextmanager
@@ -271,46 +413,34 @@ class MemoryArena:
 
     def append(self, slot: int, pos: int, emb_rows: np.ndarray,
                member_rows: np.ndarray, member_cnts: np.ndarray,
-               if_rows: np.ndarray) -> int:
-        """Append one session's row block at ``[slot, pos:pos+n]``.
+               if_rows: np.ndarray, window: Tuple[int, int]) -> int:
+        """Append one session's contiguous row run at ``[slot,
+        pos:pos+n]`` and record its new ``(head, size)`` ring window
+        (applied when the write lands — a wrapped ring write arrives as
+        two contiguous runs, each carrying the same final window).
 
-        Inside a ``deferred_appends`` window the block is queued for the
-        tick's fused scatter; otherwise it lands immediately as donated
-        ``dynamic_update_slice`` writes (row count bucketed to bound jit
-        specialisations — padding lands past the valid region and later
-        appends overwrite it). Returns the rows moved (bucketed size for
-        immediate mode, the raw count when deferred)."""
-        n = len(emb_rows)
+        Inside a ``deferred_appends`` window the run is queued for the
+        tick's fused scatter; otherwise it lands immediately as its own
+        donated scatter. Either way the row count is bucketed with
+        padding rows that DUPLICATE row 0 (same index, same value — a
+        deterministic no-op rewrite), which is ring-safe: padding past
+        the run could overwrite live rows once a session wraps. Returns
+        the rows moved (raw count when deferred, padded when not)."""
+        block = (slot, pos, np.asarray(emb_rows), np.asarray(member_rows),
+                 np.asarray(member_cnts), np.asarray(if_rows),
+                 (int(window[0]), int(window[1])))
         if self._deferred is not None:
-            self._deferred.append((slot, pos, np.asarray(emb_rows),
-                                   np.asarray(member_rows),
-                                   np.asarray(member_cnts),
-                                   np.asarray(if_rows)))
-            return n
-        b = min(pow2_bucket(n, lo=8), self.capacity - pos)
-        pad = ((0, b - n),)
-        s = jnp.asarray(slot, jnp.int32)
-        p = jnp.asarray(pos, jnp.int32)
-        self.emb = _arena_append_rows(
-            self.emb, jnp.asarray(np.pad(emb_rows, pad + ((0, 0),))), s, p)
-        self.members, self.member_count = _arena_append_members(
-            self.members, self.member_count,
-            jnp.asarray(np.pad(member_rows, pad + ((0, 0),))),
-            jnp.asarray(np.pad(member_cnts, pad)), s, p)
-        self.index_frame = _arena_append_ids(
-            self.index_frame, jnp.asarray(np.pad(if_rows, pad)), s, p)
-        self.sizes[slot] = pos + n
-        self.version += 1
-        self.io_stats["appends"] += 1
-        self.io_stats["appended_rows"] += b
-        return b
+            self._deferred.append(block)
+            return len(emb_rows)
+        return self._flush([block])
 
-    def _flush(self, pending: list) -> None:
-        """Apply a tick's queued blocks: ONE donated scatter per
-        super-buffer, with the total row count bucketed (padding rows
-        duplicate row 0 — same index, same values, a no-op rewrite)."""
+    def _flush(self, pending: list) -> int:
+        """Apply queued blocks: ONE donated scatter per super-buffer,
+        with the total row count bucketed (padding rows duplicate row 0
+        — same index, same values, a no-op rewrite). Windows apply in
+        queue order, so the last block a session queued wins."""
         if not pending:
-            return
+            return 0
         slots = np.concatenate([np.full(len(e), s, np.int32)
                                 for s, _, e, *_ in pending])
         poss = np.concatenate([np.arange(p, p + len(e), dtype=np.int32)
@@ -319,6 +449,16 @@ class MemoryArena:
         mem_rows = np.concatenate([b[3] for b in pending])
         cnt_rows = np.concatenate([b[4] for b in pending])
         if_rows = np.concatenate([b[5] for b in pending])
+        # an evicting session can wrap within one tick and hit the same
+        # physical position twice; scatter order over duplicate indices
+        # is undefined, so keep only the LAST write per (slot, pos)
+        lin = slots.astype(np.int64) * self.capacity + poss
+        if len(np.unique(lin)) != len(lin):
+            last = {l: i for i, l in enumerate(lin)}
+            keep = np.sort(np.fromiter(last.values(), np.int64))
+            slots, poss = slots[keep], poss[keep]
+            emb_rows, mem_rows = emb_rows[keep], mem_rows[keep]
+            cnt_rows, if_rows = cnt_rows[keep], if_rows[keep]
         n = len(slots)
         b = pow2_bucket(n, lo=8)
         if b != n:                       # pad = rewrite row 0 in place
@@ -337,32 +477,44 @@ class MemoryArena:
         self.member_count, self.index_frame = _arena_scatter_meta(
             self.member_count, self.index_frame, jnp.asarray(cnt_rows),
             jnp.asarray(if_rows), sl, po)
-        for slot, pos, rows, *_ in pending:
-            self.sizes[slot] = max(self.sizes[slot], pos + len(rows))
+        for slot, _pos, _rows, _m, _c, _f, window in pending:
+            self.heads[slot], self.sizes[slot] = window
         self.version += 1
         self.io_stats["appends"] += 1
         self.io_stats["appended_rows"] += b
+        return b
 
     # ----------------------------------------------------------------- views
     def device_sizes(self) -> jnp.ndarray:
-        """Per-session sizes (S,) on device — the fused scan derives its
-        valid masks from these inside the kernel wrapper."""
+        """Per-session sizes (S,) on device (window lengths — pair with
+        ``device_windows`` for the ring starts)."""
         if self._sizes_dev is None or self._valid_version != self.version:
             self._refresh_valid()
         return self._sizes_dev
 
+    def device_windows(self) -> jnp.ndarray:
+        """(S, 2) int32 ``[head, size]`` ring windows on device — the
+        fused scan's ``valid`` operand (masks derive inside the kernel
+        wrapper; free slots read ``[0, 0]`` and scan as padding)."""
+        if (self._windows_dev is None
+                or self._valid_version != self.version):
+            self._refresh_valid()
+        return self._windows_dev
+
     def device_valid(self) -> jnp.ndarray:
-        """(S, capacity) bool valid mask, derived on device from sizes
-        and cached per version (no O(S·cap) host traffic — only the
-        (S,) sizes vector transfers)."""
+        """(S, capacity) bool valid mask, derived on device from the
+        ring windows and cached per version (no O(S·cap) host traffic —
+        only the (S, 2) windows array transfers)."""
         if self._valid_dev is None or self._valid_version != self.version:
             self._refresh_valid()
         return self._valid_dev
 
     def _refresh_valid(self) -> None:
         self._sizes_dev = jnp.asarray(self.sizes)
-        self._valid_dev = _valid_stack(self._sizes_dev,
-                                       capacity=self.capacity)
+        self._windows_dev = jnp.asarray(
+            np.stack([self.heads, self.sizes], axis=1).astype(np.int32))
+        self._valid_dev = _window_valid_stack(self._windows_dev,
+                                              capacity=self.capacity)
         self._valid_version = self.version
 
 
@@ -372,13 +524,15 @@ class VenusMemory:
     def __init__(self, capacity: int, dim: int, member_cap: int = 128,
                  seed: int = 0, *, incremental: bool = True,
                  arena: Optional[MemoryArena] = None,
-                 slot: Optional[int] = None):
+                 slot: Optional[int] = None,
+                 eviction="none"):
         # the exact integer pick (u * cnt) >> U_BITS must fit in int32
         assert member_cap <= (1 << (31 - U_BITS)), member_cap
         self.capacity = capacity
         self.dim = dim
         self.member_cap = member_cap
         self.incremental = incremental
+        self.eviction = get_eviction_policy(eviction)
         # arena-backed: this memory's device rows live inside the shared
         # super-buffers at ``slot`` (appends are donated writes into the
         # arena; nothing is ever lazily uploaded). Detached fallback
@@ -396,6 +550,7 @@ class VenusMemory:
         self._index_frame = np.zeros((capacity,), np.int32)
         self._scene_id = np.zeros((capacity,), np.int32)
         self._size = 0
+        self._head = 0          # physical position of the oldest row
         self._rng = np.random.default_rng(seed)
         self._emb_dev: Optional[jnp.ndarray] = None
         self._members_dev: Optional[jnp.ndarray] = None
@@ -412,7 +567,8 @@ class VenusMemory:
                          "index_frame_uploads": 0,
                          "appended_index_frame_rows": 0,
                          "scans": 0, "host_expand_gathers": 0,
-                         "device_expand_gathers": 0}
+                         "device_expand_gathers": 0,
+                         "evicted_rows": 0, "reservoir_merges": 0}
 
     def reset_io_stats(self) -> None:
         """Zero the transfer/scan counters in place (the dict identity is
@@ -438,19 +594,48 @@ class VenusMemory:
                      member_lists: Sequence[Sequence[int]]) -> np.ndarray:
         """Insert a batch of indexed vectors in one shot.
 
-        Host mirrors are written vectorised; if the device copy exists it
-        is extended in place with a single jit'd row-block append (no
-        cache invalidation / full re-upload).
+        Host mirrors are written vectorised; if the device copy exists
+        it is extended in place (no cache invalidation / full
+        re-upload). When the batch would overflow ``capacity`` the
+        eviction policy decides: ``none`` raises (the historical
+        contract), the window policies advance ``head`` over exactly
+        as many oldest rows as the batch needs — O(1) pointer motion —
+        and the new rows overwrite the evicted physical positions (a
+        ring write, split into at most two contiguous runs at the wrap
+        point). Returns the physical slots the rows landed in.
         """
         embeddings = np.asarray(embeddings, np.float32)
         n = embeddings.shape[0]
         assert n == len(scene_ids) == len(index_frames) == len(member_lists)
-        if self._size + n > self.capacity:
-            raise RuntimeError("memory capacity exhausted")
-        lo = self._size
-        self._emb[lo:lo + n] = embeddings
-        self._index_frame[lo:lo + n] = np.asarray(index_frames, np.int32)
-        self._scene_id[lo:lo + n] = np.asarray(scene_ids, np.int32)
+        if n > self.capacity:
+            if self.eviction.name == "none":
+                raise RuntimeError("memory capacity exhausted")
+            # window policies: the batch alone overflows — only its
+            # newest `capacity` rows can survive, so the older ones are
+            # evicted on arrival (counted like any other eviction; they
+            # never reach a reservoir, so cluster_merge cannot fold
+            # them either)
+            drop = n - self.capacity
+            embeddings = embeddings[drop:]
+            scene_ids = list(scene_ids)[drop:]
+            index_frames = list(index_frames)[drop:]
+            member_lists = list(member_lists)[drop:]
+            self.io_stats["evicted_rows"] += drop
+            n = self.capacity
+        overflow = self._size + n - self.capacity
+        if overflow > 0:
+            self.eviction.evict(self, overflow)   # raises for "none"
+        tail = (self._head + self._size) % self.capacity
+        ids = np.asarray(index_frames, np.int32)
+        scn = np.asarray(scene_ids, np.int32)
+        run1 = min(n, self.capacity - tail)
+        runs = [(tail, 0, run1)]
+        if run1 < n:                               # wrapped ring write
+            runs.append((0, run1, n - run1))
+        for pos, off, cnt in runs:
+            self._emb[pos:pos + cnt] = embeddings[off:off + cnt]
+            self._index_frame[pos:pos + cnt] = ids[off:off + cnt]
+            self._scene_id[pos:pos + cnt] = scn[off:off + cnt]
         for j, member_frames in enumerate(member_lists):
             members = np.asarray(member_frames, np.int32)
             m = len(members)
@@ -458,14 +643,86 @@ class VenusMemory:
                 keep = self._rng.choice(m, self.member_cap, replace=False)
                 members = members[np.sort(keep)]
                 m = self.member_cap
-            self._members[lo + j, :m] = members
-            self._member_count[lo + j] = m
+            pj = (tail + j) % self.capacity
+            self._members[pj, :m] = members
+            self._members[pj, m:] = 0      # no stale ids past the count
+            self._member_count[pj] = m
         self._size += n
         self.version += 1
-        self._sync_device(lo, n)
-        return np.arange(lo, lo + n)
+        self._sync_device(runs)
+        return (tail + np.arange(n)) % self.capacity
 
-    def _sync_device(self, lo: int, n: int) -> None:
+    def _advance_head(self, need: int) -> None:
+        """Sliding-window eviction: drop the ``need`` oldest rows by
+        moving the window start — the physical rows stay in place
+        (masked invalid by the new window) until the incoming write
+        overwrites them, so evicting moves zero bytes."""
+        assert 0 <= need <= self._size, (need, self._size)
+        self._head = (self._head + need) % self.capacity
+        self._size -= need
+        self.io_stats["evicted_rows"] += need
+
+    def _merge_into_survivors(self, need: int, threshold: float) -> None:
+        """Cluster-merge-aware eviction: before the ``need`` oldest rows
+        leave the window, fold each one's member reservoir into its most
+        similar SURVIVING index row (cosine ≥ threshold) with spare
+        reservoir space, so the merged cluster keeps answering for the
+        evicted frames. Host-mirror merge + one re-synced device row per
+        modified survivor (coalesced per target)."""
+        if need >= self._size:
+            return
+        cap = self.capacity
+        phys = (self._head + np.arange(self._size)) % cap
+        ev_phys, sv_phys = phys[:need], phys[need:]
+
+        def _norm(rows):
+            return rows / (np.linalg.norm(rows, axis=-1, keepdims=True)
+                           + 1e-12)
+
+        sims = _norm(self._emb[ev_phys]) @ _norm(self._emb[sv_phys]).T
+        touched = set()
+        for i, pe in enumerate(ev_phys):
+            j = int(np.argmax(sims[i]))
+            if sims[i, j] < threshold:
+                continue
+            pt = int(sv_phys[j])
+            cnt_e = int(self._member_count[pe])
+            take = min(cnt_e, self.member_cap
+                       - int(self._member_count[pt]))
+            if take <= 0:
+                continue
+            ct = int(self._member_count[pt])
+            self._members[pt, ct:ct + take] = self._members[pe, :take]
+            self._member_count[pt] = ct + take
+            self.io_stats["reservoir_merges"] += 1
+            touched.add(pt)
+        for pt in sorted(touched):
+            self._resync_row(pt)
+
+    def _resync_row(self, pos: int) -> None:
+        """Push one already-resident row (reservoir merge) back to the
+        device copy through the same append paths inserts use."""
+        if self.arena is not None:
+            self.arena.append(
+                self.slot, pos, self._emb[pos:pos + 1],
+                self._members[pos:pos + 1],
+                self._member_count[pos:pos + 1],
+                self._index_frame[pos:pos + 1], self.window)
+            return
+        if not self.incremental:
+            return              # the insert's sync drops the caches anyway
+        if self._members_dev is not None:
+            self._members_dev, self._member_count_dev = _append_member_rows(
+                self._members_dev, self._member_count_dev,
+                jnp.asarray(self._members[pos:pos + 1]),
+                jnp.asarray(self._member_count[pos:pos + 1]),
+                jnp.asarray(pos, jnp.int32))
+            self.io_stats["appended_member_rows"] += 1
+
+    def _sync_device(self, runs) -> None:
+        """Push freshly written host-mirror runs to the device copy.
+        ``runs`` is a list of contiguous ``(pos, off, cnt)`` physical
+        row runs (two when a ring write wraps)."""
         if not self.incremental:
             self._emb_dev = None         # seed behaviour: full re-upload
             self._members_dev = None
@@ -477,45 +734,83 @@ class VenusMemory:
             # lazy upload ever happens (full_uploads stays 0). Inside a
             # tick's deferred window the arena fuses every session's
             # blocks into one donated scatter per super-buffer.
-            moved = self.arena.append(
-                self.slot, lo, self._emb[lo:lo + n],
-                self._members[lo:lo + n], self._member_count[lo:lo + n],
-                self._index_frame[lo:lo + n])
-            self.io_stats["appended_rows"] += moved
-            self.io_stats["appended_member_rows"] += moved
-            self.io_stats["appended_index_frame_rows"] += moved
+            for pos, _off, cnt in runs:
+                moved = self.arena.append(
+                    self.slot, pos, self._emb[pos:pos + cnt],
+                    self._members[pos:pos + cnt],
+                    self._member_count[pos:pos + cnt],
+                    self._index_frame[pos:pos + cnt], self.window)
+                self.io_stats["appended_rows"] += moved
+                self.io_stats["appended_member_rows"] += moved
+                self.io_stats["appended_index_frame_rows"] += moved
             return
-        # bucket the row count (bounds jit specialisations); padded rows
-        # land past the valid region and are overwritten by later appends
-        b = min(pow2_bucket(n, lo=8), self.capacity - lo)
-        if self._emb_dev is not None:    # lazy: first query uploads once
-            rows = np.zeros((b, self.dim), np.float32)
-            rows[:n] = self._emb[lo:lo + n]
-            self._emb_dev = _append_rows(self._emb_dev, jnp.asarray(rows),
-                                         jnp.asarray(lo, jnp.int32))
-            self.io_stats["appended_rows"] += b
-        if self._members_dev is not None:
-            rows = np.zeros((b, self.member_cap), np.int32)
-            rows[:n] = self._members[lo:lo + n]
-            cnts = np.zeros((b,), np.int32)
-            cnts[:n] = self._member_count[lo:lo + n]
-            self._members_dev, self._member_count_dev = _append_member_rows(
-                self._members_dev, self._member_count_dev,
-                jnp.asarray(rows), jnp.asarray(cnts),
-                jnp.asarray(lo, jnp.int32))
-            self.io_stats["appended_member_rows"] += b
-        if self._index_frame_dev is not None:
-            rows = np.zeros((b,), np.int32)
-            rows[:n] = self._index_frame[lo:lo + n]
-            self._index_frame_dev = _append_id_rows(
-                self._index_frame_dev, jnp.asarray(rows),
-                jnp.asarray(lo, jnp.int32))
-            self.io_stats["appended_index_frame_rows"] += b
+        # bucketed padding past the run is only safe while the memory is
+        # a plain append-only prefix (head == 0: padded rows land past
+        # the valid window, stay masked, and later appends overwrite
+        # them before they can become valid — eviction only ever shrinks
+        # validity from the head side); once the ring has wrapped
+        # (head != 0), "past the run" can hold live rows — append
+        # exactly
+        plain = self._head == 0
+        for pos, _off, cnt in runs:
+            b = (min(pow2_bucket(cnt, lo=8), self.capacity - pos)
+                 if plain else cnt)
+            if self._emb_dev is not None:  # lazy: first query uploads once
+                rows = np.zeros((b, self.dim), np.float32)
+                rows[:cnt] = self._emb[pos:pos + cnt]
+                self._emb_dev = _append_rows(self._emb_dev,
+                                             jnp.asarray(rows),
+                                             jnp.asarray(pos, jnp.int32))
+                self.io_stats["appended_rows"] += b
+            if self._members_dev is not None:
+                rows = np.zeros((b, self.member_cap), np.int32)
+                rows[:cnt] = self._members[pos:pos + cnt]
+                cnts = np.zeros((b,), np.int32)
+                cnts[:cnt] = self._member_count[pos:pos + cnt]
+                (self._members_dev,
+                 self._member_count_dev) = _append_member_rows(
+                    self._members_dev, self._member_count_dev,
+                    jnp.asarray(rows), jnp.asarray(cnts),
+                    jnp.asarray(pos, jnp.int32))
+                self.io_stats["appended_member_rows"] += b
+            if self._index_frame_dev is not None:
+                rows = np.zeros((b,), np.int32)
+                rows[:cnt] = self._index_frame[pos:pos + cnt]
+                self._index_frame_dev = _append_id_rows(
+                    self._index_frame_dev, jnp.asarray(rows),
+                    jnp.asarray(pos, jnp.int32))
+                self.io_stats["appended_index_frame_rows"] += b
 
     # ----------------------------------------------------------------- query
     @property
     def size(self) -> int:
         return self._size
+
+    @property
+    def head(self) -> int:
+        """Physical position of the oldest (logical-0) valid row."""
+        return self._head
+
+    @property
+    def window(self) -> Tuple[int, int]:
+        """The ``(head, size)`` ring window every valid mask derives
+        from; ``(0, size)`` until the first eviction."""
+        return self._head, self._size
+
+    def detach_from_arena(self) -> None:
+        """Sever this memory from its (about to be recycled) arena
+        slot. Every previously returned device handle is stale the
+        moment the slot is released, so the cached row views are
+        dropped; the memory falls back to the detached lazy-upload
+        contract over its host mirrors (which it owns and which stay
+        correct across the detach)."""
+        self.arena = None
+        self.slot = None
+        self._emb_dev = None
+        self._members_dev = None
+        self._member_count_dev = None
+        self._index_frame_dev = None
+        self._emb_row_ver = self._members_row_ver = self._if_row_ver = -1
 
     def device_index(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """(embeddings (cap, d), valid (cap,)) as device arrays.
@@ -538,8 +833,9 @@ class VenusMemory:
         elif self._emb_dev is None:
             self._emb_dev = jnp.asarray(self._emb)
             self.io_stats["full_uploads"] += 1
-        return self._emb_dev, _valid_mask(jnp.asarray(self._size, jnp.int32),
-                                          capacity=self.capacity)
+        return self._emb_dev, _ring_valid_mask(
+            jnp.asarray(self._head, jnp.int32),
+            jnp.asarray(self._size, jnp.int32), capacity=self.capacity)
 
     def search(self, query_emb: jnp.ndarray, *, tau: float
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -672,11 +968,6 @@ class VenusMemory:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("capacity",))
-def _valid_stack(sizes: jnp.ndarray, *, capacity: int) -> jnp.ndarray:
-    return jnp.arange(capacity)[None, :] < sizes[:, None]
-
-
 class MemoryStack:
     """Padded-stack view over S same-shape ``VenusMemory`` instances.
 
@@ -757,10 +1048,11 @@ class MemoryStack:
         if self._emb_stack is None or vers != self._emb_versions:
             self._emb_stack = jnp.stack(
                 [m.device_index()[0] for m in self.memories])
-            # sizes only change with a version bump, so the valid mask is
-            # cached alongside — queries between ticks transfer nothing
-            sizes = jnp.asarray([m.size for m in self.memories], jnp.int32)
-            self._valid = _valid_stack(sizes, capacity=self.capacity)
+            # windows only change with a version bump, so the valid mask
+            # is cached alongside — queries between ticks transfer nothing
+            wins = jnp.asarray([m.window for m in self.memories],
+                               jnp.int32)
+            self._valid = _window_valid_stack(wins, capacity=self.capacity)
             self._emb_versions = vers
             self.io_stats["stack_builds"] += 1
             self._count_rebuild()
@@ -800,11 +1092,52 @@ class MemoryStack:
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """query_emb (S, Q, d) -> (sims, probs) (S, Q, cap) — every
         session scanned by ONE fused kernel launch. Arena-backed stacks
-        pass the (S,) sizes vector as ``valid`` — the mask materialises
-        on device inside the kernel wrapper."""
+        pass the (S, 2) ring windows as ``valid`` — the mask
+        materialises on device inside the kernel wrapper."""
         a = self.arena_view()
         if a is not None:
             return kops.similarity_stack(query_emb, a.emb, tau=tau,
-                                         valid=a.device_sizes())
+                                         valid=a.device_windows())
         emb, valid = self.device_stack()
         return kops.similarity_stack(query_emb, emb, tau=tau, valid=valid)
+
+
+class ArenaStackView:
+    """The arena AS the stacked-scan operand: a ``MemoryStack``-shaped
+    facade whose lanes are arena SLOTS, not live sessions.
+
+    The session manager hands this to the plan executor whenever a slot
+    is free (a closed session awaiting reuse): free slots are padding
+    lanes — their windows read ``(0, 0)``, so the device-derived masks
+    blank them, and per-lane math keeps every occupied lane
+    bit-identical to a subset scan. Nothing is ever built or copied
+    here; every view IS an arena super-buffer, so ``stack_builds`` is
+    structurally zero."""
+
+    def __init__(self, arena: MemoryArena):
+        self.arena = arena
+        self.capacity = arena.capacity
+        self.dim = arena.dim
+        self.member_cap = arena.member_cap
+        self.io_stats = {"stack_builds": 0, "member_stack_builds": 0,
+                         "index_frame_stack_builds": 0}
+
+    def __len__(self) -> int:
+        return self.arena.n_sessions
+
+    def arena_view(self) -> MemoryArena:
+        return self.arena
+
+    def device_stack(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return self.arena.emb, self.arena.device_valid()
+
+    def device_members(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return self.arena.members, self.arena.member_count
+
+    def device_index_frames(self) -> jnp.ndarray:
+        return self.arena.index_frame
+
+    def search(self, query_emb: jnp.ndarray, *, tau: float
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return kops.similarity_stack(query_emb, self.arena.emb, tau=tau,
+                                     valid=self.arena.device_windows())

@@ -21,11 +21,16 @@ module unifies all of it behind three layers:
   so every registered strategy — not just sampling/AKR — gets the "one
   scan, zero host gathers" path. With the manager's ``MemoryArena``
   (the default) the scan operand IS the arena's grow-in-place
-  super-buffers: every group scans all sessions in slot order (lanes
-  without queries are padding — per-lane math is independent, so the
-  queried lanes are bit-identical to a subset scan) and NO
-  ingest↔query interleaving ever restacks device buffers
-  (``manager.io_stats["stack_rebuilds"]`` stays 0). Detached managers
+  super-buffers: every group scans all arena SLOTS in slot order (lanes
+  without queries are padding, freed slots of closed sessions are
+  ``None`` hole lanes whose ``(0, 0)`` windows mask them out — per-lane
+  math is independent, so the queried lanes are bit-identical to a
+  subset scan) and NO ingest↔query interleaving, close, or slot reuse
+  ever restacks device buffers
+  (``manager.io_stats["stack_rebuilds"]`` stays 0). The scan's
+  ``valid`` operand is the arena's ``(S, 2)`` ``(start, size)`` window
+  array — a session under sliding-window eviction is a device-side
+  ring, so validity wraps; masks derive on device. Detached managers
   fall back to the per-group version-cached ``MemoryStack``.
 
 Strategies live in a registry (``register_strategy`` / ``get_strategy``)
@@ -45,6 +50,13 @@ query count (padding lanes consume dummy keys), so every legacy entry
 point shimmed over this module stays draw-for-draw identical to its
 pre-redesign output — see tests/test_crosssession.py and
 tests/test_queryplan.py.
+
+Ownership/staleness at this layer: the executor owns NOTHING — it
+borrows device views (arena super-buffers or cached stacks) from the
+manager per group, inside one call, and never caches them across
+calls. That is what makes it safe against the arena's donation rule
+(any ingest tick invalidates previously returned handles): each group
+re-reads its views after the point where ticks could have run.
 """
 
 from __future__ import annotations
@@ -436,8 +448,9 @@ def _group_keys(manager, group: ExecutionGroup, specs, qmax, lanes
     Chain-policy lanes consume the session PRNG chain in arrival order —
     exactly the subkeys the same queries would have drawn through the
     legacy paths; explicit-seed lanes derive detached keys; padding
-    lanes (and whole sessions the group doesn't target — arena lanes)
-    get dummy keys and leave their chains untouched."""
+    lanes (whole sessions the group doesn't target, and ``None`` hole
+    lanes over freed arena slots) get dummy keys and leave their chains
+    untouched."""
     if not group.strategy.stochastic:
         return None
     key_rows = []
@@ -465,11 +478,14 @@ def _execute_group(manager, group: ExecutionGroup, specs, embedded,
     cfg = manager.cfg
     strat = group.strategy
     sids = group.sids
-    # scan-lane order: arena mode scans EVERY session in slot order (the
-    # super-buffers are consumed as-is — zero restacks); detached mode
-    # scans exactly the group's sessions via the version-cached stack
+    # scan-lane order: arena mode scans EVERY slot in slot order (the
+    # super-buffers are consumed as-is — zero restacks; freed slots are
+    # None hole lanes, masked out by their (0, 0) windows); detached
+    # mode scans exactly the group's sessions via the version-cached
+    # stack
     lanes = manager.scan_lanes(sids)
-    lane_of = {sid: si for si, sid in enumerate(lanes)}
+    lane_of = {sid: si for si, sid in enumerate(lanes)
+               if sid is not None}
     ln, qmax = len(lanes), group.qmax
     timings: Dict[str, float] = {"embed_query": t_embed}
 
@@ -501,8 +517,8 @@ def _execute_group(manager, group: ExecutionGroup, specs, embedded,
     ctx = StrategyContext(
         sims=sims, probs=probs, valid=valid, emb=emb_stack, keys=keys,
         total_frames=np.asarray(
-            [manager.sessions[s].stats["frames_seen"] for s in lanes],
-            np.int64),
+            [manager.sessions[s].stats["frames_seen"]
+             if s is not None else 0 for s in lanes], np.int64),
         key=group.key, qcount=qcount)
 
     if strat.expand == "members":

@@ -25,6 +25,19 @@ post-processing (``repro.core.queryplan``). The legacy entry points —
 ``query``, ``query_batch``, ``query_batch_cross``, ``query_topk`` — are
 thin shims over plan/execute and stay draw-for-draw identical to their
 pre-redesign outputs (same per-session PRNG chains).
+
+Sessions have a full LIFECYCLE (ARCHITECTURE.md draws the state
+machine): ``create_session`` → ingest ⇄ query → (at capacity, with a
+window ``EvictionPolicy``) evict ⇄ ingest/query → ``close_session`` →
+slot reuse. Closing frees the session's arena slot into a free-list —
+its lane scans as masked-out padding, no restack — and the next
+``create_session`` recycles it after one donated device-side row
+reset, so 24/7 churn holds the arena at its steady-state slot count.
+Ownership here: the SessionManager owns the arena (and the embedder /
+jit caches); each ``SessionState`` owns its host mirrors, PRNG chain,
+segmenter, and raw-frame archive — which is why a closed session's
+memory handle stays readable after detach while its device rows are
+recycled under a new tenant.
 """
 
 from __future__ import annotations
@@ -41,8 +54,8 @@ import numpy as np
 
 from repro.core.aux_models import AuxModel, build_aux_prompt
 from repro.core.clustering import cluster_partition, frame_vectors
-from repro.core.memory import (FrameStore, MemoryArena, MemoryStack,
-                               VenusMemory)
+from repro.core.memory import (ArenaStackView, FrameStore, MemoryArena,
+                               MemoryStack, VenusMemory)
 from repro.core.queryplan import (QueryPlan, QueryResult, QuerySpec,
                                   build_plan, execute_plan)
 from repro.core.scene import Partition, StreamSegmenter
@@ -72,6 +85,12 @@ class VenusConfig:
     # memory
     memory_capacity: int = 8192
     member_cap: int = 128
+    # lifecycle: what a session does when it outlives memory_capacity —
+    # "none" (overflow raises; the pre-lifecycle contract),
+    # "sliding_window" (device-side ring: evict the oldest rows, O(1)
+    # head motion), or "cluster_merge" (sliding window that first folds
+    # evicted member reservoirs into similar surviving clusters)
+    eviction: str = "none"
     # querying (Eq. 5-7)
     tau: float = 0.1
     theta: float = 0.9
@@ -96,7 +115,8 @@ class SessionState:
 
     def __init__(self, sid: int, cfg: VenusConfig, embed_dim: int,
                  arena: Optional[MemoryArena] = None,
-                 slot: Optional[int] = None):
+                 slot: Optional[int] = None,
+                 eviction: Optional[str] = None):
         self.sid = sid
         self.cfg = cfg
         self.segmenter = StreamSegmenter(
@@ -104,7 +124,9 @@ class SessionState:
             max_partition_len=cfg.max_partition_len)
         self.memory = VenusMemory(cfg.memory_capacity, embed_dim,
                                   cfg.member_cap, seed=cfg.seed,
-                                  arena=arena, slot=slot)
+                                  arena=arena, slot=slot,
+                                  eviction=(cfg.eviction if eviction
+                                            is None else eviction))
         self.frames = FrameStore()
         self.pending: List[np.ndarray] = []   # frames not yet clustered
         self.pending_base = 0                 # abs index of pending[0]
@@ -181,7 +203,15 @@ def commit_jobs(sessions: Mapping[int, SessionState], embedder,
     scattered into each owning session's memory with batched appends.
     Arena-backed sessions defer their device writes into the tick's
     fused scatter (one donated program per super-buffer per tick, no
-    matter how many sessions closed clusters)."""
+    matter how many sessions closed clusters). This is also where the
+    eviction hook fires: a session at ``memory_capacity`` consults its
+    ``EvictionPolicy`` inside ``insert_batch`` — a sliding-window
+    session sheds exactly as many oldest rows as the tick closed (O(1)
+    head motion; the new rows overwrite the evicted positions within
+    the same deferred scatter), so a 24/7 stream ingests forever in
+    constant DEVICE memory. (The raw-frame ``FrameStore`` is the
+    paper's NVMe archive layer and stays append-only — bounding/
+    spilling it is a ROADMAP open item.)"""
     if not jobs:
         return 0
     frames = np.concatenate([j.frames for j in jobs])
@@ -242,7 +272,12 @@ class SessionManager:
         # (MUST stay 0 in arena mode — the zero-restack invariant)
         self.io_stats = {"scans": 0, "fused_scans": 0,
                          "device_expands": 0, "group_scans": 0,
-                         "stack_rebuilds": 0}
+                         "stack_rebuilds": 0, "sessions_closed": 0}
+        # summed io_stats of closed sessions' memories: keeps the
+        # service-level mem_* monitoring counters monotonic across
+        # stream closes (a popped session takes its live dict with it)
+        self.closed_mem_stats: Dict[str, int] = {}
+        self._arena_stack: Optional[ArenaStackView] = None
         _LIVE_MANAGERS.add(self)
 
     def reset_io_stats(self, *, include_memories: bool = True) -> None:
@@ -253,13 +288,29 @@ class SessionManager:
         for k in self.io_stats:
             self.io_stats[k] = 0
         if include_memories:
+            self.closed_mem_stats.clear()
             for st in self.sessions.values():
                 st.memory.reset_io_stats()
             if self.arena is not None:
                 self.arena.reset_io_stats()
 
     # ------------------------------------------------------------- lifecycle
-    def create_session(self, sid: Optional[int] = None) -> int:
+    #
+    # A session's memory walks one state machine (ARCHITECTURE.md):
+    #   create → ingest ⇄ query → [evict ⇄ ingest/query] → close → reuse
+    # ``create_session`` allocates — or, after a ``close_session``,
+    # RECYCLES — an arena slot; ``close_session`` frees the slot into
+    # the arena free-list (its lane scans as masked-out padding, so no
+    # restack ever happens while holes exist); eviction runs inside
+    # ``commit_jobs`` via each memory's ``EvictionPolicy``.
+
+    def create_session(self, sid: Optional[int] = None, *,
+                       eviction: Optional[str] = None) -> int:
+        """Open a stream. Arena mode allocates a slot — reusing a freed
+        one (a single donated device-side row reset, no growth) when the
+        free-list is non-empty. ``eviction`` overrides ``cfg.eviction``
+        for this session only (e.g. one 24/7 stream among bounded
+        ones)."""
         if sid is None:
             sid = self._next_sid
         assert sid not in self.sessions, sid
@@ -272,8 +323,32 @@ class SessionManager:
                                          self.cfg.member_cap)
             arena, slot = self.arena, self.arena.add_session()
         self.sessions[sid] = SessionState(sid, self.cfg, self.embed_dim,
-                                          arena=arena, slot=slot)
+                                          arena=arena, slot=slot,
+                                          eviction=eviction)
         return sid
+
+    def close_session(self, sid: int) -> Dict[str, int]:
+        """End a stream and free its memory slot for reuse.
+
+        The session's arena slot goes onto the free-list — its lane
+        reads window ``(0, 0)`` and scans as masked-out padding, so
+        closing costs no device work and triggers no restack — and the
+        NEXT ``create_session`` recycles it after one donated row
+        reset. The popped session's memory is detached from the arena
+        first, so any handle the caller still holds reads the session's
+        own host mirrors instead of rows that are about to be recycled.
+        Returns the session's final ingest stats."""
+        st = self.sessions.pop(sid)
+        for k, v in st.memory.io_stats.items():
+            self.closed_mem_stats[k] = self.closed_mem_stats.get(k, 0) + v
+        self._stacks = {k: v for k, v in self._stacks.items()
+                        if sid not in k}
+        if self.arena is not None:
+            slot = st.memory.slot
+            st.memory.detach_from_arena()
+            self.arena.release_slot(slot)
+        self.io_stats["sessions_closed"] += 1
+        return dict(st.stats)
 
     def __getitem__(self, sid: int) -> SessionState:
         return self.sessions[sid]
@@ -393,31 +468,47 @@ class SessionManager:
     # covering stacks are views, not copies — they cost nothing extra)
     MAX_CACHED_STACKS = 8
 
-    def scan_lanes(self, sids: Sequence[int]) -> Tuple[int, ...]:
-        """The sessions one fused scan covers, in scan-lane order.
+    def scan_lanes(self, sids: Sequence[int]
+                   ) -> Tuple[Optional[int], ...]:
+        """The lanes one fused scan covers, in scan-lane order.
 
-        Arena mode: ALWAYS every session, in slot order — the arena
-        super-buffers ARE the scan operand, so a group targeting any
-        subset of sessions still consumes them as-is (lanes without
-        queries are padding; per-lane math is independent, so results
-        for the queried lanes are bit-identical to a subset scan) and
-        nothing ever restacks. Detached mode: exactly the requested
-        sessions, stacked (and version-cached) on demand."""
+        Arena mode: ALWAYS one lane per arena SLOT, in slot order — the
+        arena super-buffers ARE the scan operand, so a group targeting
+        any subset of sessions still consumes them as-is. Lanes without
+        queries are padding, and a FREE slot (closed session awaiting
+        reuse) appears as ``None``: its window reads ``(0, 0)``, so the
+        device-derived mask blanks it. Per-lane math is independent, so
+        results for the queried lanes are bit-identical to a subset
+        scan, and nothing ever restacks. Detached mode: exactly the
+        requested sessions, stacked (and version-cached) on demand."""
         if self.arena is not None:
-            return tuple(sorted(
-                self.sessions,
-                key=lambda s: self.sessions[s].memory.slot))
+            by_slot = {st.memory.slot: s
+                       for s, st in self.sessions.items()}
+            return tuple(by_slot.get(k)
+                         for k in range(self.arena.n_sessions))
         return tuple(sids)
 
-    def memory_stack(self, sids: Tuple[int, ...]) -> MemoryStack:
-        """The cached ``MemoryStack`` over the given session tuple."""
-        stk = self._stacks.pop(sids, None)
+    def memory_stack(self, lanes: Tuple[Optional[int], ...]):
+        """The scan view over the given lanes.
+
+        Lanes containing holes (``None`` — freed arena slots) get the
+        zero-copy ``ArenaStackView``, whose lanes are the arena slots
+        themselves. Hole-free lane tuples keep the cached
+        ``MemoryStack`` (which detects full-arena coverage and aliases
+        the super-buffers — still zero-copy, still zero rebuilds)."""
+        if any(s is None for s in lanes):
+            assert self.arena is not None
+            if (self._arena_stack is None
+                    or self._arena_stack.arena is not self.arena):
+                self._arena_stack = ArenaStackView(self.arena)
+            return self._arena_stack
+        stk = self._stacks.pop(lanes, None)
         if stk is None:
-            stk = MemoryStack([self.sessions[s].memory for s in sids],
+            stk = MemoryStack([self.sessions[s].memory for s in lanes],
                               rebuild_stats=self.io_stats)
             while len(self._stacks) >= self.MAX_CACHED_STACKS:
                 self._stacks.pop(next(iter(self._stacks)))
-        self._stacks[sids] = stk          # re-insert = mark most recent
+        self._stacks[lanes] = stk         # re-insert = mark most recent
         return stk
 
     def query_topk(self, sid: int, text: str, k: int,

@@ -105,9 +105,10 @@ def similarity(query, index, *, tau: float, valid
 def similarity_stack(query, index, *, tau: float, valid
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Cross-session scan: query (S,Q,d) × index (S,N,d) + valid —
-    either a (S,N) bool mask or a (S,) int sizes vector (arena path:
-    per-session valid masks derive on device from the sizes) ->
-    (sims (S,Q,N), probs (S,Q,N)) in ONE kernel launch."""
+    a (S,N) bool mask, a (S,) int sizes vector, or a (S,2) int
+    ``[start,size)`` ring-window array (arena/eviction paths: the
+    per-session valid masks derive on device — ``ref.as_valid_mask``)
+    -> (sims (S,Q,N), probs (S,Q,N)) in ONE kernel launch."""
     _scan_counts["similarity_stack"] += 1
     if _BACKEND == "pallas":
         from repro.kernels import similarity as sk

@@ -69,13 +69,26 @@ def mla_decode_attention_ref(q_abs: jnp.ndarray, q_rope: jnp.ndarray,
 
 
 def as_valid_mask(valid: jnp.ndarray, n: int) -> jnp.ndarray:
-    """Canonical form of a stacked scan's ``valid`` argument: a (S, N)
-    bool mask passes through; a (S,) int per-session sizes vector (the
-    arena path) becomes the mask on device. ONE definition shared by the
-    Pallas wrapper, the oracle, and the ops dispatch layer, so the
-    sizes-form semantics cannot diverge between them."""
+    """Canonical form of a stacked scan's ``valid`` argument. Three
+    accepted forms, ONE definition shared by the Pallas wrapper, the
+    oracle, and the ops dispatch layer, so the derived-mask semantics
+    cannot diverge between them:
+
+    * (S, N) bool mask — explicit per-row validity, passes through;
+    * (S,) int sizes — per-session valid prefix ``[0, size)`` (the
+      pre-eviction arena form; a window with ``start == 0``);
+    * (S, 2) int ``[start, size]`` ring windows — valid rows are
+      ``[start, start+size) mod N`` (the eviction path: a session's
+      ``head`` advances on device-side sliding-window eviction, so the
+      valid region wraps). Masks materialise here, on device — only
+      the tiny sizes/window arrays ever cross the host boundary.
+    """
     if valid.ndim == 1:
         return jnp.arange(n)[None, :] < valid[:, None]
+    if (valid.ndim == 2 and valid.shape[-1] == 2
+            and jnp.issubdtype(valid.dtype, jnp.integer)):
+        j = jnp.arange(n)[None, :]
+        return (j - valid[:, :1]) % n < valid[:, 1:2]
     return valid
 
 
@@ -101,8 +114,9 @@ def similarity_stack_ref(query: jnp.ndarray, index: jnp.ndarray, *,
                          tau: float, valid: jnp.ndarray
                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Cross-session form: query (S,Q,d); index (S,N,d); valid (S,N)
-    bool mask OR (S,) int per-session sizes (the arena path — the mask
-    is derived on device here).
+    bool mask, (S,) int per-session sizes, OR (S,2) int ``[start,size)``
+    ring windows (the arena/eviction paths — the mask is derived on
+    device here, see ``as_valid_mask``).
 
     Returns (sims (S,Q,N), probs (S,Q,N)) — per-session Eq. 4 + Eq. 5,
     vmapped so every lane matches ``similarity_ref`` on that session.

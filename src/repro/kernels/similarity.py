@@ -18,6 +18,18 @@ per-session query block ``(S, Q, d)`` scanned by ONE program over grid
 in a single kernel launch. Capacities that do not divide the block size
 are zero-padded by the wrapper (pad lanes are masked invalid, so they
 contribute nothing to the softmax statistics).
+
+Layer invariant — what ``valid`` means here: the kernels never trust
+row CONTENT, only the mask. Callers may pass the mask in any of the
+three canonical forms (explicit ``(S, N)`` bool; ``(S,)`` prefix sizes;
+``(S, 2)`` ``[start, size)`` ring windows for sessions under
+sliding-window eviction) and it is normalised on device by ONE shared
+helper, ``ref.as_valid_mask`` — so stale rows (evicted, recycled-slot,
+or block padding) can never leak into the softmax statistics no matter
+which path produced the operand. The index/query buffers are borrowed
+for the duration of the call: the kernel neither owns nor caches them,
+so donation-invalidated handles are the CALLER's problem (re-read views
+from the arena after any ingest tick — see ``core.memory``).
 """
 
 from __future__ import annotations
@@ -156,9 +168,11 @@ def _sim_stack_kernel(q_ref, x_ref, valid_ref, sims_ref, m_ref, l_ref,
 def similarity_scan_stack(query, index, valid, *, tau: float,
                           blk_n: int = DEFAULT_BLK_N,
                           interpret: bool = True):
-    """query: (S,Q,d); index: (S,N,d); valid: (S,N) bool OR (S,) int
-    per-session sizes (the arena path passes its sizes vector and the
-    mask materialises here, inside the jit — no host-side mask build).
+    """query: (S,Q,d); index: (S,N,d); valid: (S,N) bool, (S,) int
+    per-session sizes, or (S,2) int ``[start,size)`` ring windows (the
+    arena passes windows — a sliding-window session's valid region
+    wraps around capacity — and the mask materialises here, inside the
+    jit: no host-side mask build, see ``ref.as_valid_mask``).
 
     One program over all S session indices: grid (S, N/BLK). Returns
     (sims (S,Q,N), m (S,Q,1), l (S,Q,1)); probs = exp(sims/τ − m)/l on

@@ -66,8 +66,20 @@ class VenusService:
         self.patch = patch
 
     # ------------------------------------------------------------- ingestion
-    def create_stream(self, sid: Optional[int] = None) -> int:
-        return self.manager.create_session(sid)
+    def create_stream(self, sid: Optional[int] = None, *,
+                      eviction: Optional[str] = None) -> int:
+        """Open a camera stream (recycles a freed arena slot when one
+        exists). ``eviction`` picks this stream's bounded-memory policy
+        ("none" | "sliding_window" | "cluster_merge") — 24/7 streams
+        should use a window policy so they never stop ingesting."""
+        return self.manager.create_session(sid, eviction=eviction)
+
+    def close_stream(self, sid: int) -> Dict[str, int]:
+        """End a camera stream: frees its arena slot for the next
+        ``create_stream`` (slot recycling — zero device work, zero
+        restacks; visible as ``arena_slot_releases``/``sessions_closed``
+        in ``io_stats()``). Returns the stream's final ingest stats."""
+        return self.manager.close_session(sid)
 
     def ingest_tick(self, chunks: Mapping[int, np.ndarray]
                     ) -> Dict[str, float]:
@@ -121,16 +133,26 @@ class VenusService:
     # ------------------------------------------------------------ monitoring
     def io_stats(self) -> Dict[str, int]:
         """One monitoring surface over the whole service: the manager's
-        scan/restack counters, the arena's grow/append counters
-        (``arena_*``), and the per-memory transfer counters summed over
-        sessions (``mem_*``). The production invariants to alert on:
-        ``stack_rebuilds == 0`` (arena mode) and ``mem_full_uploads``
-        flat after warm-up."""
+        scan/restack/lifecycle counters, the arena's
+        grow/append/slot-recycling counters (``arena_*``), and the
+        per-memory transfer/eviction counters summed over live AND
+        closed sessions (``mem_*`` — the manager folds a closing
+        stream's counters into ``closed_mem_stats``, so the sums stay
+        monotonic across churn). The production invariants to alert on:
+        ``stack_rebuilds == 0`` (arena mode), ``mem_full_uploads`` flat
+        after warm-up, and ``arena_grows`` flat under churn (slot
+        recycling — churned streams must reuse slots, not grow the
+        arena). For 24/7 streams, ``mem_evicted_rows`` rising at the
+        ingest rate is HEALTHY steady-state; see the counter glossary in
+        ARCHITECTURE.md."""
         out: Dict[str, int] = dict(self.manager.io_stats)
         if self.manager.arena is not None:
             for k, v in self.manager.arena.io_stats.items():
                 out[f"arena_{k}"] = v
+        mem_sums = dict(self.manager.closed_mem_stats)
         for st in self.manager.sessions.values():
             for k, v in st.memory.io_stats.items():
-                out[f"mem_{k}"] = out.get(f"mem_{k}", 0) + v
+                mem_sums[k] = mem_sums.get(k, 0) + v
+        for k, v in mem_sums.items():
+            out[f"mem_{k}"] = v
         return out

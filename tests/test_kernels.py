@@ -206,6 +206,71 @@ def test_similarity_stack_sizes_matches_mask(s, n, cap_divides):
         ops.set_backend(old)
 
 
+@pytest.mark.parametrize("s,n,windows", [
+    # wrap-around ring / empty lane / full capacity seen from mid-ring
+    (3, 192, [(180, 30), (0, 0), (5, 192)]),
+    # capacity NOT divisible by blk (pad lanes) + wrapping window
+    (2, 100, [(70, 60), (0, 40)]),
+    # S==1 degenerate, full ring whose head sits on the last row
+    (1, 64, [(63, 64)]),
+    # boundary: window ends exactly at the wrap point (no actual wrap)
+    (2, 128, [(100, 28), (127, 1)]),
+])
+def test_similarity_stack_windows_match_mask(s, n, windows):
+    """The (S, 2) ``[start, size)`` ring-window form of ``valid`` (the
+    eviction path — a sliding-window session's valid region wraps
+    around capacity) must match the explicit (S, N) bool mask form
+    bit-for-bit, on the Pallas kernel, the oracle, and the ops dispatch
+    layer — including wrap-around windows, size-0 lanes, and
+    full-capacity rings."""
+    from repro.kernels import ops
+    d, q = 16, 2
+    ks = jax.random.split(jax.random.key(13), 2)
+    query = jax.random.normal(ks[0], (s, q, d))
+    index = jax.random.normal(ks[1], (s, n, d))
+    wins = jnp.asarray(windows, jnp.int32)
+    heads = np.asarray([w[0] for w in windows])
+    sizes = np.asarray([w[1] for w in windows])
+    mask = jnp.asarray(
+        (np.arange(n)[None, :] - heads[:, None]) % n < sizes[:, None])
+
+    out_win = similarity_scan_stack(query, index, wins, tau=0.1, blk_n=64)
+    out_mask = similarity_scan_stack(query, index, mask, tau=0.1, blk_n=64)
+    for a, b in zip(out_win, out_mask):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    ref_win = ref.similarity_stack_ref(query, index, tau=0.1, valid=wins)
+    ref_mask = ref.similarity_stack_ref(query, index, tau=0.1, valid=mask)
+    for a, b in zip(ref_win, ref_mask):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    old = ops.backend()
+    try:
+        for backend in ("jnp", "pallas"):
+            ops.set_backend(backend)
+            s_a, p_a = ops.similarity_stack(query, index, tau=0.1,
+                                            valid=wins)
+            s_b, p_b = ops.similarity_stack(query, index, tau=0.1,
+                                            valid=mask)
+            np.testing.assert_array_equal(np.asarray(s_a), np.asarray(s_b))
+            np.testing.assert_array_equal(np.asarray(p_a), np.asarray(p_b))
+    finally:
+        ops.set_backend(old)
+
+
+def test_window_form_generalises_sizes_form():
+    """A ``[0, size)`` window IS the sizes form: ``as_valid_mask`` must
+    yield identical masks for both, and a bool (S, 2) array must still
+    be treated as an explicit mask (no dtype confusion at N == 2)."""
+    sizes = jnp.asarray([0, 3, 7], jnp.int32)
+    wins = jnp.stack([jnp.zeros_like(sizes), sizes], axis=1)
+    np.testing.assert_array_equal(
+        np.asarray(ref.as_valid_mask(sizes, 7)),
+        np.asarray(ref.as_valid_mask(wins, 7)))
+    bool_mask = jnp.asarray([[True, False], [False, True]])
+    assert ref.as_valid_mask(bool_mask, 2) is bool_mask
+
+
 def test_similarity_stack_lanes_match_2d_scan():
     """Each session lane of the stacked scan equals an independent 2D
     ``similarity_scan`` over that session's index."""

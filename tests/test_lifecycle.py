@@ -1,0 +1,444 @@
+"""Session lifecycle for 24/7 streams: slot recycling + eviction.
+
+Acceptance suite for the PR-5 tentpole — session memory is a full
+lifecycle (create → ingest ⇄ query → evict → close → slot reuse):
+
+* ``SessionManager.close_session`` frees the arena slot into a
+  free-list; the next ``create_session`` recycles it after ONE donated
+  device-side row reset — no arena reallocation, no restack, and the
+  slot count holds at its steady-state maximum under churn.
+* Sessions that hit ``memory_capacity`` with a window ``EvictionPolicy``
+  become device-side rings: eviction is O(1) head motion plus in-place
+  overwrite of the oldest rows, and every scan consumes a per-session
+  ``(start, size)`` window.
+
+Equivalence discipline: every close/reuse/evict interleaving must stay
+draw-for-draw identical to a fresh manager replaying only the surviving
+rows (for rings: the same rows at the same physical positions), on both
+the arena and the detached path.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.memory import (ArenaStackView, VenusMemory,
+                               get_eviction_policy)
+from repro.core.session import SessionManager, VenusConfig
+from repro.data.video import (OracleEmbedder, PixelEmbedder, VideoWorld,
+                              WorldConfig)
+
+# max_partition_len < chunk forces ≥ 1 partition close per 64-frame
+# tick, so every ingest tick grows (and, at capacity, evicts)
+CFG = VenusConfig(max_partition_len=48)
+# small capacity so a handful of ticks overflows it (~5 indexed rows
+# close per 64-frame tick at max_partition_len=32)
+EVICT_CFG = VenusConfig(max_partition_len=32, memory_capacity=16,
+                        eviction="sliding_window")
+
+
+def _worlds(n):
+    return [VideoWorld(WorldConfig(n_scenes=4 + s, seed=20 + s))
+            for s in range(n)]
+
+
+def _manager(cfg, *, use_arena=True):
+    return SessionManager(cfg, PixelEmbedder(dim=64), embed_dim=64,
+                          use_arena=use_arena)
+
+
+def _chunk(w, t, chunk=64):
+    lo = (t * chunk) % max(w.total_frames - chunk, 1)
+    return w.frames[lo:lo + chunk]
+
+
+def _tick(mgr, stream_map, t):
+    mgr.ingest_tick({sid: _chunk(w, t) for sid, w in stream_map.items()})
+
+
+def _queries(worlds, qsids, seed0):
+    return np.stack([
+        OracleEmbedder(worlds[s], dim=64).embed_queries(
+            worlds[s].make_queries(1, seed=seed0 + j))[0]
+        for j, s in enumerate(qsids)])
+
+
+def _assert_same_results(got, want):
+    assert len(got) == len(want)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a.draws, b.draws)
+        np.testing.assert_array_equal(a.frame_ids, b.frame_ids)
+        assert a.n_drawn == b.n_drawn
+
+
+# ---------------------------------------------------------------------------
+# slot recycling
+# ---------------------------------------------------------------------------
+
+
+def test_close_session_recycles_slot():
+    """close → create reuses the freed slot: free-list mechanics, zero
+    growth, and a zero-reset device row block for the newcomer."""
+    worlds = _worlds(3)
+    mgr = _manager(CFG)
+    sids = [mgr.create_session() for _ in range(3)]
+    _tick(mgr, dict(zip(sids, worlds)), 0)
+    arena = mgr.arena
+    assert arena.n_sessions == 3 and arena.io_stats["grows"] == 3
+
+    freed = mgr[sids[1]].memory.slot
+    stats = mgr.close_session(sids[1])
+    assert stats["frames_seen"] > 0
+    assert arena.free_slots == [freed]
+    assert arena.sizes[freed] == 0 and arena.heads[freed] == 0
+    assert mgr.io_stats["sessions_closed"] == 1
+    assert arena.io_stats["slot_releases"] == 1
+
+    new_sid = mgr.create_session()
+    assert new_sid not in sids
+    assert mgr[new_sid].memory.slot == freed     # recycled, not grown
+    assert arena.free_slots == []
+    assert arena.n_sessions == 3                 # steady-state slots
+    assert arena.io_stats["grows"] == 3          # NO new growth
+    assert arena.io_stats["slot_reuses"] == 1
+    # the donated reset zeroed the recycled rows
+    np.testing.assert_array_equal(np.asarray(arena.emb[freed]), 0.0)
+    np.testing.assert_array_equal(np.asarray(arena.member_count[freed]), 0)
+
+
+def test_closed_memory_detaches_and_stays_readable():
+    """A handle to a closed session's memory must not read recycled
+    arena rows: the memory detaches to its own host mirrors and keeps
+    answering identically."""
+    worlds = _worlds(2)
+    mgr = _manager(CFG)
+    sids = [mgr.create_session() for _ in range(2)]
+    _tick(mgr, dict(zip(sids, worlds)), 0)
+    mem = mgr[sids[0]].memory
+    emb_before = mem._emb.copy()
+    size_before = mem.size
+    q = _queries(worlds, [0], seed0=40)
+    want_s, want_p = mem.search(jnp.asarray(q), tau=0.1)
+    want_s, want_p = np.asarray(want_s), np.asarray(want_p)
+
+    mgr.close_session(sids[0])
+    assert mem.arena is None and mem.slot is None
+    # new tenant overwrites the old slot's device rows...
+    new_sid = mgr.create_session()
+    _tick(mgr, {new_sid: worlds[1], sids[1]: worlds[1]}, 1)
+    # ...but the detached handle still answers from its own mirrors
+    got_s, got_p = mem.search(jnp.asarray(q), tau=0.1)
+    assert mem.size == size_before
+    np.testing.assert_array_equal(mem._emb, emb_before)
+    np.testing.assert_allclose(np.asarray(got_s), want_s, rtol=1e-6,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_p), want_p, rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_queries_with_free_slot_match_fresh_manager():
+    """While a freed slot waits for reuse, the scan runs over the arena
+    with a masked-out hole lane (``ArenaStackView``) — zero restacks,
+    and results draw-for-draw equal a fresh manager that only ever had
+    the surviving sessions."""
+    worlds = _worlds(3)
+    mgr = _manager(CFG)
+    sids = [mgr.create_session() for _ in range(3)]
+    for t in range(2):
+        _tick(mgr, dict(zip(sids, worlds)), t)
+
+    fresh = _manager(CFG)
+    for sid in (sids[0], sids[2]):
+        fresh.create_session(sid)
+    for t in range(2):
+        _tick(fresh, {sids[0]: worlds[0], sids[2]: worlds[2]}, t)
+
+    mgr.close_session(sids[1])
+    lanes = mgr.scan_lanes((sids[0], sids[2]))
+    assert None in lanes                       # the hole is a real lane
+    assert isinstance(mgr.memory_stack(lanes), ArenaStackView)
+
+    qsids = [0, 2, 2]
+    qes = _queries(worlds, qsids, seed0=60)
+    mgr.reset_io_stats()
+    got = mgr.query_batch_cross([sids[s] for s in qsids], query_embs=qes)
+    want = fresh.query_batch_cross([sids[s] for s in qsids],
+                                   query_embs=qes)
+    _assert_same_results(got, want)
+    assert mgr.io_stats["stack_rebuilds"] == 0
+
+
+def test_close_reuse_matches_fresh_manager():
+    """Full churn equivalence: close + recreate (slot recycled), then
+    ingest + query — the churned manager must answer draw-for-draw like
+    a fresh manager that replays only the surviving sessions' streams."""
+    worlds = _worlds(4)
+    mgr = _manager(CFG)
+    sids = [mgr.create_session() for _ in range(3)]
+    for t in range(2):
+        _tick(mgr, dict(zip(sids, worlds[:3])), t)
+    mgr.close_session(sids[1])
+    new_sid = mgr.create_session()             # recycles slot 1
+    streams = {sids[0]: worlds[0], sids[2]: worlds[2],
+               new_sid: worlds[3]}
+    _tick(mgr, streams, 2)
+
+    fresh = _manager(CFG)
+    for sid in (sids[0], sids[2], new_sid):
+        fresh.create_session(sid)
+    for t in range(2):
+        _tick(fresh, {sids[0]: worlds[0], sids[2]: worlds[2]}, t)
+    _tick(fresh, streams, 2)
+
+    qsids = [0, 2, 3, 3]
+    qes = _queries(worlds, qsids, seed0=70)
+    tick_sids = [{0: sids[0], 2: sids[2], 3: new_sid}[s] for s in qsids]
+    _assert_same_results(
+        mgr.query_batch_cross(tick_sids, query_embs=qes),
+        fresh.query_batch_cross(tick_sids, query_embs=qes))
+
+
+# ---------------------------------------------------------------------------
+# sliding-window eviction
+# ---------------------------------------------------------------------------
+
+
+def test_eviction_none_still_raises():
+    mem = VenusMemory(capacity=8, dim=4, member_cap=2)
+    rows = np.ones((8, 4), np.float32)
+    mem.insert_batch(rows, scene_ids=[0] * 8, index_frames=list(range(8)),
+                     member_lists=[[i] for i in range(8)])
+    with pytest.raises(RuntimeError):
+        mem.insert_batch(rows[:1], scene_ids=[0], index_frames=[8],
+                         member_lists=[[8]])
+    with pytest.raises(KeyError):
+        get_eviction_policy("nonsense")
+
+
+def test_oversized_batch_evicts_on_arrival():
+    """A single batch larger than ``capacity`` must not crash an
+    evicting session (24/7 streams never stop ingesting): only its
+    newest ``capacity`` rows survive; the older ones count as evicted
+    on arrival. The ``none`` policy keeps the historical raise."""
+    rng = np.random.default_rng(7)
+    cap, dim = 8, 4
+    mem = VenusMemory(cap, dim, member_cap=2, eviction="sliding_window")
+    n = cap + 5
+    rows = rng.normal(0, 1, (n, dim)).astype(np.float32)
+    mem.insert_batch(rows, scene_ids=[0] * n,
+                     index_frames=list(range(n)),
+                     member_lists=[[i] for i in range(n)])
+    assert mem.size == cap
+    assert mem.io_stats["evicted_rows"] == 5
+    logical = (mem.head + np.arange(cap)) % cap
+    np.testing.assert_array_equal(mem._index_frame[logical],
+                                  np.arange(5, n))
+    np.testing.assert_array_equal(
+        mem._emb[logical], rows[5:])
+
+    mem_none = VenusMemory(cap, dim, member_cap=2)
+    with pytest.raises(RuntimeError):
+        mem_none.insert_batch(rows, scene_ids=[0] * n,
+                              index_frames=list(range(n)),
+                              member_lists=[[i] for i in range(n)])
+
+
+def test_ring_matches_fresh_physical_replay():
+    """A ring past capacity == a fresh memory holding the same surviving
+    rows at the same physical positions: scans, probs, and device
+    expansion are draw-for-draw identical, and exactly the newest
+    ``capacity`` rows survive."""
+    rng = np.random.default_rng(0)
+    cap, dim = 16, 8
+    mem = VenusMemory(cap, dim, member_cap=4, eviction="sliding_window")
+    fid = 0
+    for n in (10, 7, 9, 5):                    # wraps twice
+        rows = rng.normal(0, 1, (n, dim)).astype(np.float32)
+        mem.insert_batch(rows, scene_ids=[0] * n,
+                         index_frames=list(range(fid, fid + n)),
+                         member_lists=[[i] for i in range(fid, fid + n)])
+        fid += n
+    assert mem.size == cap and mem.head != 0
+    assert mem.io_stats["evicted_rows"] == fid - cap
+    # survivors are exactly the newest `capacity` index frames, in
+    # logical (window) order
+    logical = (mem.head + np.arange(cap)) % cap
+    np.testing.assert_array_equal(mem._index_frame[logical],
+                                  np.arange(fid - cap, fid))
+
+    twin = VenusMemory(cap, dim, member_cap=4)
+    twin.insert_batch(
+        mem._emb.copy(), scene_ids=mem._scene_id.tolist(),
+        index_frames=mem._index_frame.tolist(),
+        member_lists=[mem._members[i, :mem._member_count[i]].tolist()
+                      for i in range(cap)])
+    q = rng.normal(0, 1, (3, dim)).astype(np.float32)
+    got = mem.search(jnp.asarray(q), tau=0.1)
+    want = twin.search(jnp.asarray(q), tau=0.1)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    draws = np.asarray([0, 3, 15, 7])
+    valid = np.ones(4, bool)
+    np.testing.assert_array_equal(
+        mem.expand_draws_device(draws, valid, seed=5),
+        twin.expand_draws_device(draws, valid, seed=5))
+
+
+def test_sliding_window_answers_from_last_capacity_frames():
+    """ACCEPTANCE: a sliding-window session that outlives
+    ``memory_capacity`` keeps ingesting forever and answers queries
+    using only its last ``memory_capacity`` index frames."""
+    worlds = _worlds(2)
+    mgr = _manager(EVICT_CFG)
+    sids = [mgr.create_session() for _ in range(2)]
+    for t in range(8):                         # far past capacity
+        _tick(mgr, dict(zip(sids, worlds)), t)
+    for sid in sids:
+        mem = mgr[sid].memory
+        assert mem.size == EVICT_CFG.memory_capacity
+        assert mem.io_stats["evicted_rows"] > 0
+    surviving = {sid: set(
+        int(f) for f in mgr[sid].memory._index_frame[
+            (mgr[sid].memory.head
+             + np.arange(mgr[sid].memory.size))
+            % mgr[sid].memory.capacity])
+        for sid in sids}
+    qes = _queries(worlds, [0, 1], seed0=90)
+    for j, sid in enumerate(sids):
+        got = mgr.query_topk(sid, "", k=8, query_emb=qes[j])
+        centroids = set(int(f) for f in got)
+        assert centroids <= surviving[sid], \
+            "top-k returned an evicted index frame"
+
+
+def test_evicting_arena_matches_detached():
+    """The detached path gets the same window semantics: an arena
+    manager and a ``use_arena=False`` twin evict identically and stay
+    draw-for-draw equal across post-eviction ingest/query rounds."""
+    worlds = _worlds(3)
+    mgr_a = _manager(EVICT_CFG, use_arena=True)
+    mgr_d = _manager(EVICT_CFG, use_arena=False)
+    sids = [mgr_a.create_session() for _ in range(3)]
+    for _ in range(3):
+        mgr_d.create_session()
+    for t in range(8):
+        _tick(mgr_a, dict(zip(sids, worlds)), t)
+        _tick(mgr_d, dict(zip(sids, worlds)), t)
+        qsids = [0, 1, 2, 1]
+        qes = _queries(worlds, qsids, seed0=100 + 11 * t)
+        _assert_same_results(
+            mgr_a.query_batch_cross(qsids, query_embs=qes),
+            mgr_d.query_batch_cross(qsids, query_embs=qes))
+    for sid in sids:
+        assert mgr_a[sid].memory.io_stats["evicted_rows"] > 0
+        assert (mgr_a[sid].memory.window
+                == mgr_d[sid].memory.window)
+    assert mgr_a.io_stats["stack_rebuilds"] == 0
+
+
+def test_cluster_merge_folds_reservoirs():
+    """cluster_merge eviction: an evictee similar to a survivor donates
+    its member reservoir before leaving the window; a dissimilar one is
+    dropped like plain sliding-window."""
+    rng = np.random.default_rng(3)
+    cap, dim = 4, 8
+    mem = VenusMemory(cap, dim, member_cap=8, eviction="cluster_merge")
+    base = rng.normal(0, 1, (dim,)).astype(np.float32)
+    other = rng.normal(0, 1, (dim,)).astype(np.float32)
+    # row 0: evictee; row 2: near-duplicate survivor; rows 1/3: far away
+    rows = np.stack([base, other, base + 1e-3, -other]).astype(np.float32)
+    mem.insert_batch(rows, scene_ids=[0] * 4,
+                     index_frames=[10, 11, 12, 13],
+                     member_lists=[[10, 100], [11], [12], [13]])
+    mem.insert_batch(rng.normal(0, 1, (1, dim)).astype(np.float32),
+                     scene_ids=[1], index_frames=[14],
+                     member_lists=[[14]])
+    assert mem.io_stats["evicted_rows"] == 1
+    assert mem.io_stats["reservoir_merges"] == 1
+    # survivor at physical position 2 inherited the evictee's members
+    assert int(mem._member_count[2]) == 3
+    assert set(mem._members[2, :3].tolist()) == {12, 10, 100}
+    # expansion through the merged cluster reaches the evicted frames
+    fids = mem.expand_draws_device(np.asarray([2] * 8),
+                                   np.ones(8, bool), seed=1)
+    assert {10, 100} <= set(int(f) for f in fids) | {12}
+
+    # dissimilar evictee (row at physical 1, "other"): no merge
+    mem2 = VenusMemory(cap, dim, member_cap=8,
+                       eviction=get_eviction_policy("cluster_merge"))
+    mem2.insert_batch(rows, scene_ids=[0] * 4,
+                      index_frames=[10, 11, 12, 13],
+                      member_lists=[[10], [11], [12], [13]])
+    merges0 = mem2.io_stats["reservoir_merges"]
+    mem2.insert_batch(rows[:1] * 0.5, scene_ids=[1], index_frames=[14],
+                      member_lists=[[14]])   # evicts row 0 (merges)
+    mem2.insert_batch(rng.normal(0, 1, (1, dim)).astype(np.float32),
+                      scene_ids=[1], index_frames=[15],
+                      member_lists=[[15]])   # evicts "other": no match
+    assert mem2.io_stats["evicted_rows"] == 2
+    assert mem2.io_stats["reservoir_merges"] <= merges0 + 1
+
+
+# ---------------------------------------------------------------------------
+# ACCEPTANCE: churn workload — steady-state slots, zero restacks
+# ---------------------------------------------------------------------------
+
+
+def test_churn_steady_state_slots_zero_restacks():
+    """≥ 3 rounds of create → fill past capacity → close → recreate:
+    ``stack_rebuilds`` stays 0, the arena slot count holds at its
+    steady-state maximum (no monotonic growth), every round past the
+    first recycles a slot, and live sessions keep answering."""
+    worlds = _worlds(4)
+    mgr = _manager(EVICT_CFG)
+    stable = [mgr.create_session() for _ in range(2)]   # long-lived
+    churn_sid = mgr.create_session()                    # round 0 tenant
+    steady = mgr.arena.n_sessions
+    assert steady == 3
+    grows0 = mgr.arena.io_stats["grows"]
+    # warm-up round so jit compiles don't sit inside the assertions
+    for t in range(2):
+        _tick(mgr, {stable[0]: worlds[0], stable[1]: worlds[1],
+                    churn_sid: worlds[2]}, t)
+    mgr.query_batch_cross([stable[0], churn_sid],
+                          query_embs=_queries(worlds, [0, 2], seed0=7))
+    mgr.reset_io_stats()
+
+    rounds = 3
+    for r in range(1, rounds + 1):
+        mgr.close_session(churn_sid)
+        churn_sid = mgr.create_session()               # reuses the slot
+        streams = {stable[0]: worlds[0], stable[1]: worlds[1],
+                   churn_sid: worlds[2 + r % 2]}
+        for t in range(6):                 # fill the churn session past
+            _tick(mgr, streams, 2 + 6 * r + t)         # capacity
+        qsids = [stable[0], stable[1], churn_sid, churn_sid]
+        qes = _queries(worlds, [0, 1, 2 + r % 2, 2 + r % 2],
+                       seed0=200 + 17 * r)
+        results = mgr.query_batch_cross(qsids, query_embs=qes)
+        assert all(r_ is not None for r_ in results)
+        # the churned session filled past capacity and evicted
+        assert mgr[churn_sid].memory.io_stats["evicted_rows"] > 0
+        # slot count NEVER grows past the steady-state maximum
+        assert mgr.arena.n_sessions == steady
+        assert mgr.arena.io_stats["grows"] == 0        # (reset) no grow
+
+    assert mgr.io_stats["stack_rebuilds"] == 0
+    assert mgr.arena.io_stats["slot_reuses"] == rounds
+    assert mgr.io_stats["sessions_closed"] == rounds
+    assert mgr.arena.io_stats["grows"] == 0
+    assert grows0 == 3
+    # monitoring stays monotonic across closes: the churned tenants'
+    # eviction history is folded into closed_mem_stats, not dropped
+    assert mgr.closed_mem_stats["evicted_rows"] > 0
+
+
+def test_create_session_eviction_override():
+    """Per-session eviction override: one 24/7 stream among bounded
+    ones."""
+    mgr = _manager(CFG)
+    s_default = mgr.create_session()
+    s_window = mgr.create_session(eviction="sliding_window")
+    assert mgr[s_default].memory.eviction.name == "none"
+    assert mgr[s_window].memory.eviction.name == "sliding_window"
