@@ -485,6 +485,99 @@ def _bench_churn(n_sessions: int, n_queries: int, chunk: int = 64,
           "sessions_closed": mgr.io_stats["sessions_closed"]})
 
 
+def _bench_fused(n_sessions: int, n_queries: int, chunk: int = 64,
+                 ticks: int = 5, n_scenes: int = 6,
+                 index_dtype: str = "int8"):
+    """One-launch fused retrieval + quantised index vs the dense path.
+
+    Three arms over identical worlds and identical query plans (all
+    strategies fused-eligible):
+
+    * ``dense_fp32``  — ``execute(plan, fused=False)``: every group
+      materialises the (S, Q, cap) score/probability tensors, then
+      draws/top-ks in separate launches (the PR-3..5 path).
+    * ``fused_fp32``  — the fused epilogue: draws + drawn probabilities
+      + top-k leave the scan launch directly; nothing O(cap) per query
+      crosses the launch boundary.
+    * ``fused_<dt>``  — fused epilogue over the quantised arena
+      (``VenusConfig(index_dtype=...)``): the scan streams 1-byte index
+      rows (per-row scales cancel under the kernel's row
+      normalisation), cutting scanned bytes 4× on top.
+
+    Reports per-tick wall time, scanned index bytes per tick
+    (``kops_scan_bytes`` deltas), fused vs dense launch counts, and the
+    peak live index bytes (arena super-buffer + scales). The reduction
+    row asserts the headline ≥ 2× scanned-bytes cut."""
+    from repro.core.queryplan import QuerySpec
+    from repro.kernels import ops as kops
+
+    mix = ("akr", "topk", "sampling")
+    worlds = [VideoWorld(WorldConfig(n_scenes=n_scenes, seed=20 + s))
+              for s in range(n_sessions)]
+    n_frames = min(w.total_frames for w in worlds)
+
+    # per-(tick, session, query) embeddings precomputed; sids are fresh
+    # 0..S-1 for every build() so specs transfer across managers
+    qe_by_tick = [[OracleEmbedder(w, dim=64).embed_queries(
+        w.make_queries(n_queries, seed=31 + 7 * t)) for w in worlds]
+        for t in range(ticks)]
+
+    def tick_specs(t):
+        return [QuerySpec(sid=s, embedding=qe_by_tick[t][s][qi],
+                          strategy=mix[(s + qi) % len(mix)], budget=8)
+                for s in range(n_sessions) for qi in range(n_queries)]
+
+    def build(dtype):
+        mgr = SessionManager(VenusConfig(index_dtype=dtype),
+                             PixelEmbedder(dim=64), embed_dim=64)
+        sids = [mgr.create_session() for _ in range(n_sessions)]
+        assert sids == list(range(n_sessions))
+        for i in range(0, n_frames, chunk):
+            mgr.ingest_tick({sid: w.frames[i:i + chunk]
+                             for sid, w in zip(sids, worlds)})
+        mgr.flush()
+        return mgr
+
+    def peak_index_bytes(mgr):
+        a = mgr.arena
+        b = a.emb.size * a.emb.dtype.itemsize
+        if a.emb_scale is not None:
+            b += a.emb_scale.size * a.emb_scale.dtype.itemsize
+        return int(b)
+
+    out = {}
+    arms = (("dense_fp32", "float32", False),
+            ("fused_fp32", "float32", True),
+            (f"fused_{index_dtype}", index_dtype, True))
+    for name, dtype, fused in arms:
+        mgr = build(dtype)
+        plans = [mgr.plan(tick_specs(t)) for t in range(ticks)]
+        mgr.execute(plans[0], fused=fused)                  # warm
+        kops.reset_scan_counts()
+        t0 = time.perf_counter()
+        for plan in plans:
+            mgr.execute(plan, fused=fused)
+        dt = time.perf_counter() - t0
+        c = kops.scan_counts()
+        out[name] = c["scan_bytes"] / ticks
+        emit(f"multistream/fused_retrieval_{name}", dt,
+             {"sessions": n_sessions, "ticks": ticks,
+              "queries_per_tick": n_sessions * n_queries,
+              "index_dtype": dtype,
+              "scan_bytes_per_tick": int(out[name]),
+              "fused_launches": c["fused_draw_launches"],
+              "dense_launches": c["dense_score_launches"],
+              "peak_index_bytes": peak_index_bytes(mgr)})
+
+    # the headline: dense fp32 scan traffic vs fused + quantised
+    reduction = out["dense_fp32"] / max(out[f"fused_{index_dtype}"], 1)
+    assert reduction >= 2.0, out
+    emit("multistream/fused_scan_bytes_reduction", 0.0,
+         {"scan_bytes_reduction": f"{reduction:.2f}x",
+          "fused_fp32_vs_dense":
+          f"{out['dense_fp32'] / max(out['fused_fp32'], 1):.2f}x"})
+
+
 def _bench_incremental_index(capacity: int = 16384, dim: int = 256,
                              rounds: int = 20):
     """Post-ingest query latency: incremental append vs full re-upload."""
@@ -523,13 +616,14 @@ def _bench_incremental_index(capacity: int = 16384, dim: int = 256,
 
 
 ALL_PARTS = ("ingest", "query", "cross", "plan", "arena", "churn",
-             "incremental")
+             "fused", "incremental")
 JSON_PATH = "BENCH_multistream.json"
 
 
 def run(n_sessions: int = 4, n_queries: int = 8, *,
         cross_only: bool = False, smoke: bool = False,
-        parts=None, json_path: str | None = None) -> None:
+        parts=None, json_path: str | None = None,
+        index_dtype: str = "int8") -> None:
     assert n_sessions >= 4, "multi-tenant scenario needs ≥4 sessions"
     if parts is None:
         parts = ("cross", "plan", "arena") if cross_only else ALL_PARTS
@@ -559,21 +653,27 @@ def run(n_sessions: int = 4, n_queries: int = 8, *,
         if "churn" in parts:
             _bench_churn(n_sessions, n_queries, ticks=ticks,
                          n_scenes=n_scenes)
+        if "fused" in parts:
+            _bench_fused(n_sessions, n_queries, ticks=ticks,
+                         n_scenes=n_scenes, index_dtype=index_dtype)
         if "incremental" in parts:
             _bench_incremental_index()
     finally:
+        # the JSON artifact is written in the finally so a crashed part
+        # still leaves every completed row on disk for CI to compare
         common.set_sink(None)
-    if json_path:
-        payload = {"meta": {"bench": "multistream",
-                            "sessions": n_sessions,
-                            "queries": n_queries, "smoke": smoke,
-                            "parts": list(parts),
-                            "timestamp": time.time()},
-                   "benchmarks": rows}
-        with open(json_path, "w") as f:
-            json.dump(payload, f, indent=2)
-        print(f"[bench_multistream] wrote {json_path} "
-              f"({len(rows)} rows)")
+        if json_path:
+            payload = {"meta": {"bench": "multistream",
+                                "sessions": n_sessions,
+                                "queries": n_queries, "smoke": smoke,
+                                "parts": list(parts),
+                                "index_dtype": index_dtype,
+                                "timestamp": time.time()},
+                       "benchmarks": rows}
+            with open(json_path, "w") as f:
+                json.dump(payload, f, indent=2)
+            print(f"[bench_multistream] wrote {json_path} "
+                  f"({len(rows)} rows)")
 
 
 if __name__ == "__main__":
@@ -589,15 +689,25 @@ if __name__ == "__main__":
                     help="the session-lifecycle churn bench "
                          "(create/ingest/query/close; slot recycling + "
                          "sliding-window eviction)")
+    ap.add_argument("--fused", action="store_true",
+                    help="the one-launch fused retrieval bench "
+                         "(fused epilogue + quantised index vs the "
+                         "dense score path)")
+    ap.add_argument("--index-dtype", choices=("float32", "int8"),
+                    default="int8",
+                    help="index dtype for the fused bench's quantised "
+                         "arm (default int8)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny worlds / few ticks for CI")
     ap.add_argument("--json", action="store_true",
                     help=f"also write every emitted row to {JSON_PATH}")
     args = ap.parse_args()
     parts = None
-    if args.cross or args.arena or args.churn:
+    if args.cross or args.arena or args.churn or args.fused:
         parts = (("cross", "plan") if args.cross else ()) + \
                 (("arena",) if args.arena else ()) + \
-                (("churn",) if args.churn else ())
+                (("churn",) if args.churn else ()) + \
+                (("fused",) if args.fused else ())
     run(args.sessions, args.queries, smoke=args.smoke, parts=parts,
-        json_path=JSON_PATH if args.json else None)
+        json_path=JSON_PATH if args.json else None,
+        index_dtype=args.index_dtype)

@@ -154,6 +154,29 @@ def _append_id_rows(buf: jnp.ndarray, rows: jnp.ndarray,
     return jax.lax.dynamic_update_slice(buf, rows, (pos,))
 
 
+# Symmetric per-row int8 quantisation for the index super-buffers. The
+# similarity kernels L2-normalise every index row in-register, so a
+# per-row scale CANCELS out of the cosine scores — the kernels consume
+# the int8 rows directly (one astype, no scales operand) and stream 4×
+# fewer bytes per scan. The scales are still stored (one f32 per row,
+# written by the same donated scatter as the rows) so anything that
+# needs faithful magnitudes can dequantise: dequant = q * scale.
+def quantise_rows(rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """rows (..., d) f32 -> (int8 rows, (...,) f32 per-row scales) with
+    scale = max|row|/127 (all-zero rows get scale 1.0 so dequant is
+    exact there too)."""
+    rows = np.asarray(rows, np.float32)
+    scale = np.max(np.abs(rows), axis=-1) / 127.0
+    scale = np.where(scale > 0, scale, 1.0).astype(np.float32)
+    q = np.clip(np.rint(rows / scale[..., None]), -127, 127)
+    return q.astype(np.int8), scale
+
+
+def _index_buf_dtype(index_dtype: str):
+    assert index_dtype in ("float32", "int8"), index_dtype
+    return jnp.int8 if index_dtype == "int8" else jnp.float32
+
+
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
 def _arena_reset_slot(emb: jnp.ndarray, members: jnp.ndarray,
                       counts: jnp.ndarray, ifr: jnp.ndarray,
@@ -172,6 +195,14 @@ def _arena_reset_slot(emb: jnp.ndarray, members: jnp.ndarray,
     ifr = jax.lax.dynamic_update_slice(
         ifr, jnp.zeros((1,) + ifr.shape[1:], ifr.dtype), (slot, 0))
     return emb, members, counts, ifr
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _arena_reset_row(buf: jnp.ndarray, slot: jnp.ndarray) -> jnp.ndarray:
+    """Donated zero-reset of one slot's row in a (S, cap) table — the
+    int8 arena's per-row scale buffer at slot-recycle time."""
+    return jax.lax.dynamic_update_slice(
+        buf, jnp.zeros((1,) + buf.shape[1:], buf.dtype), (slot, 0))
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -314,12 +345,23 @@ class MemoryArena:
     ingest↔query loop. Each slot carries a ``(head, size)`` ring window
     (``heads``/``sizes`` host mirrors); free slots read ``(0, 0)`` and
     are masked-out padding lanes until reuse.
+
+    ``index_dtype="int8"`` stores the index super-buffer quantised
+    (symmetric per-row int8, scales in ``emb_scale``): every append
+    quantises once at the donated scatter, every scan streams 4× fewer
+    bytes, and the scan math is unchanged because the kernels
+    L2-normalise rows — the per-row scale cancels, so no dequant pass
+    and no scales operand exist anywhere in the kernel contract.
     """
 
-    def __init__(self, capacity: int, dim: int, member_cap: int = 128):
+    def __init__(self, capacity: int, dim: int, member_cap: int = 128,
+                 index_dtype: str = "float32"):
         self.capacity = capacity
         self.dim = dim
         self.member_cap = member_cap
+        self.index_dtype = index_dtype
+        self._emb_dtype = _index_buf_dtype(index_dtype)
+        self.emb_scale: Optional[jnp.ndarray] = None    # (S, cap) f32
         self.n_sessions = 0       # allocated slots (incl. freed ones)
         self.emb: Optional[jnp.ndarray] = None          # (S, cap, d)
         self.members: Optional[jnp.ndarray] = None      # (S, cap, K)
@@ -359,6 +401,9 @@ class MemoryArena:
              self.index_frame) = _arena_reset_slot(
                 self.emb, self.members, self.member_count,
                 self.index_frame, jnp.asarray(slot, jnp.int32))
+            if self.emb_scale is not None:
+                self.emb_scale = _arena_reset_row(
+                    self.emb_scale, jnp.asarray(slot, jnp.int32))
             self.sizes[slot] = 0
             self.heads[slot] = 0
             self.version += 1
@@ -367,7 +412,10 @@ class MemoryArena:
         slot = self.n_sessions
         self.n_sessions = s = slot + 1
         cap, d, k = self.capacity, self.dim, self.member_cap
-        self.emb = self._grow(self.emb, (s, cap, d), jnp.float32)
+        self.emb = self._grow(self.emb, (s, cap, d), self._emb_dtype)
+        if self.index_dtype == "int8":
+            self.emb_scale = self._grow(self.emb_scale, (s, cap),
+                                        jnp.float32)
         self.members = self._grow(self.members, (s, cap, k), jnp.int32)
         self.member_count = self._grow(self.member_count, (s, cap),
                                        jnp.int32)
@@ -470,6 +518,13 @@ class MemoryArena:
             cnt_rows = np.concatenate([cnt_rows, cnt_rows[reps]])
             if_rows = np.concatenate([if_rows, if_rows[reps]])
         sl, po = jnp.asarray(slots), jnp.asarray(poss)
+        if self.index_dtype == "int8":
+            # quantise ONCE, at the append scatter — scans stream the
+            # int8 rows as-is from here on (scale cancels under the
+            # kernels' row normalisation; kept for faithful dequant)
+            emb_rows, scale_rows = quantise_rows(emb_rows)
+            self.emb_scale = _arena_scatter_rows(
+                self.emb_scale, jnp.asarray(scale_rows), sl, po)
         self.emb = _arena_scatter_rows(self.emb, jnp.asarray(emb_rows),
                                        sl, po)
         self.members = _arena_scatter_rows(self.members,
@@ -525,7 +580,7 @@ class VenusMemory:
                  seed: int = 0, *, incremental: bool = True,
                  arena: Optional[MemoryArena] = None,
                  slot: Optional[int] = None,
-                 eviction="none"):
+                 eviction="none", index_dtype: str = "float32"):
         # the exact integer pick (u * cnt) >> U_BITS must fit in int32
         assert member_cap <= (1 << (31 - U_BITS)), member_cap
         self.capacity = capacity
@@ -533,6 +588,17 @@ class VenusMemory:
         self.member_cap = member_cap
         self.incremental = incremental
         self.eviction = get_eviction_policy(eviction)
+        # int8 option: host mirrors stay f32 (exact math for merges and
+        # host expansion); the DEVICE copy is quantised — arena-backed
+        # memories quantise inside the arena's append scatter, detached
+        # ones at lazy upload / in-place append. Quantisation is a pure
+        # per-row function of the host mirror, so arena and detached
+        # device rows are bit-identical for the same contents.
+        self.index_dtype = index_dtype
+        _index_buf_dtype(index_dtype)          # validate early
+        if arena is not None:
+            assert arena.index_dtype == index_dtype, \
+                (arena.index_dtype, index_dtype)
         # arena-backed: this memory's device rows live inside the shared
         # super-buffers at ``slot`` (appends are donated writes into the
         # arena; nothing is ever lazily uploaded). Detached fallback
@@ -758,6 +824,8 @@ class VenusMemory:
             if self._emb_dev is not None:  # lazy: first query uploads once
                 rows = np.zeros((b, self.dim), np.float32)
                 rows[:cnt] = self._emb[pos:pos + cnt]
+                if self.index_dtype == "int8":
+                    rows = quantise_rows(rows)[0]
                 self._emb_dev = _append_rows(self._emb_dev,
                                              jnp.asarray(rows),
                                              jnp.asarray(pos, jnp.int32))
@@ -831,7 +899,9 @@ class VenusMemory:
                 self._emb_dev = self.arena.emb[self.slot]
                 self._emb_row_ver = self.arena.version
         elif self._emb_dev is None:
-            self._emb_dev = jnp.asarray(self._emb)
+            self._emb_dev = jnp.asarray(
+                quantise_rows(self._emb)[0]
+                if self.index_dtype == "int8" else self._emb)
             self.io_stats["full_uploads"] += 1
         return self._emb_dev, _ring_valid_mask(
             jnp.asarray(self._head, jnp.int32),
@@ -998,6 +1068,8 @@ class MemoryStack:
         for m in memories:
             assert (m.capacity, m.dim, m.member_cap) == (cap, dim, mcap), \
                 "stacked memories must share capacity/dim/member_cap"
+            assert m.index_dtype == memories[0].index_dtype, \
+                "stacked memories must share index_dtype"
         self.memories = memories
         self.capacity, self.dim, self.member_cap = cap, dim, mcap
         self.rebuild_stats = rebuild_stats
@@ -1101,6 +1173,22 @@ class MemoryStack:
         emb, valid = self.device_stack()
         return kops.similarity_stack(query_emb, emb, tau=tau, valid=valid)
 
+    def fused_retrieve(self, query_emb: jnp.ndarray, targets: jnp.ndarray,
+                       *, tau: float, n_topk: int) -> "kops.FusedRetrieval":
+        """``search``'s one-launch sibling: the same scan operand (arena
+        super-buffers or the cached stack) but the draws/top-k resolve
+        inside the launch — no (S, Q, cap) score tensor is returned (or,
+        on the Pallas backend, ever materialised)."""
+        a = self.arena_view()
+        if a is not None:
+            return kops.fused_retrieve_stack(
+                query_emb, a.emb, tau=tau, valid=a.device_windows(),
+                targets=targets, n_topk=n_topk)
+        emb, valid = self.device_stack()
+        return kops.fused_retrieve_stack(query_emb, emb, tau=tau,
+                                         valid=valid, targets=targets,
+                                         n_topk=n_topk)
+
 
 class ArenaStackView:
     """The arena AS the stacked-scan operand: a ``MemoryStack``-shaped
@@ -1141,3 +1229,10 @@ class ArenaStackView:
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         return kops.similarity_stack(query_emb, self.arena.emb, tau=tau,
                                      valid=self.arena.device_windows())
+
+    def fused_retrieve(self, query_emb: jnp.ndarray, targets: jnp.ndarray,
+                       *, tau: float, n_topk: int) -> "kops.FusedRetrieval":
+        return kops.fused_retrieve_stack(
+            query_emb, self.arena.emb, tau=tau,
+            valid=self.arena.device_windows(), targets=targets,
+            n_topk=n_topk)

@@ -16,10 +16,20 @@ module unifies all of it behind three layers:
   ``ExecutionGroup``s (same strategy + resolved budget + scan/sampling
   parameters → one padded block) and emits an explicit ``QueryPlan``
   the caller can inspect before running anything.
-* **Executor** (``execute_plan``) — runs ONE ``similarity_scan_stack``
-  launch per group and dispatches vmapped per-strategy post-processing,
-  so every registered strategy — not just sampling/AKR — gets the "one
-  scan, zero host gathers" path. With the manager's ``MemoryArena``
+* **Executor** (``execute_plan``) — runs ONE scan launch per group and
+  dispatches vmapped per-strategy post-processing, so every registered
+  strategy — not just sampling/AKR — gets the "one scan, zero host
+  gathers" path. For sampling/AKR/top-k groups that one launch is the
+  FUSED retrieval scan (``kops.fused_retrieve_stack``): the inverse-CDF
+  draws, drawn probabilities, and top-k resolve inside the kernel
+  epilogue, so no (S, Q, cap) score tensor crosses the launch boundary
+  (AKR's stop rule then runs over the already-computed draw state — no
+  re-scoring). BOLT/MDF/AKS (and uniform) genuinely consume dense
+  scores/embeddings, so their groups keep the materialising
+  ``stack.search`` launch; ``execute_plan(..., fused=False)`` forces
+  that dense path for every strategy (results are draw-for-draw
+  identical — the fused epilogue computes the same canonical chunked
+  CDF over the same probabilities). With the manager's ``MemoryArena``
   (the default) the scan operand IS the arena's grow-in-place
   super-buffers: every group scans all arena SLOTS in slot order (lanes
   without queries are padding, freed slots of closed sessions are
@@ -417,10 +427,59 @@ def _gather_index_frames(table: jnp.ndarray, draws: jnp.ndarray
     return jax.vmap(lambda t, d: t[jnp.clip(d, 0, cap - 1)])(table, draws)
 
 
-def execute_plan(manager, plan: QueryPlan) -> List[QueryResult]:
-    """Run every group of the plan: ONE ``similarity_scan_stack`` launch
-    per group, vmapped strategy post-processing, device-side expansion.
-    Returns results in the plan's spec order."""
+# --- fused-epilogue routing -------------------------------------------------
+#
+# Strategies whose selection rule the fused kernel epilogue computes
+# in-launch: sampling and AKR consume the inverse-CDF draws (+ drawn
+# probabilities for AKR's stop rule), top-k consumes the running top-k.
+# Everything else (BOLT's CDF over ALL lanes, MDF's embedding scan, AKS's
+# host-driven region split, uniform's no-scan rule) takes the dense path.
+_FUSED_STRATEGIES = ("sampling", "akr", "topk")
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _targets_from_keys(keys: jnp.ndarray, *, n: int) -> jnp.ndarray:
+    """keys (S, Q) → inverse-CDF draw targets (S, Q, n). Each lane is
+    exactly ``draw_targets(key, n)`` — the one variate block the direct
+    ``sampling_retrieve``/``akr_progressive`` call consumes per key, so
+    fused and direct draws see identical targets."""
+    return jax.vmap(jax.vmap(lambda k: rt.draw_targets(k, n)))(keys)
+
+
+@jax.jit
+def _expand_stack(members, counts, draws, valid, u):
+    """Stacked reservoir expansion of already-computed draws (the fused
+    path's counterpart of ``_fused_sample_expand`` — sampling happened
+    in the kernel, only the gather remains)."""
+    fids, ok = jax.vmap(lambda m, c, d, v: expand_gather(m, c, d, v, u))(
+        members, counts, draws, valid)
+    return fids, ok
+
+
+@functools.partial(jax.jit, static_argnames=("theta", "beta", "n_max"))
+def _fused_akr_post(draws, drawn_p, p_max, members, counts, u, *, theta,
+                    beta, n_max):
+    """AKR over the fused kernel's outputs: the Eq. 6/7 stop rule runs
+    on the in-launch draw state (draws + crossing-lane probabilities +
+    p_max = 1/l) — no re-scoring, no (S, Q, cap) tensor — then the
+    reservoir gather expands the surviving draws, all in one program.
+    Each (s, q) lane stops bit-identically to ``akr_progressive`` over
+    that lane's materialised probabilities."""
+    akr = jax.vmap(jax.vmap(lambda d, p, pm: rt.akr_from_draws(
+        d, p, pm, theta=theta, beta=beta, n_max=n_max)))(
+            draws, drawn_p, p_max)
+    fids, ok = jax.vmap(lambda m, c, d, v: expand_gather(m, c, d, v, u))(
+        members, counts, akr.draws, akr.valid)
+    return akr, fids, ok
+
+
+def execute_plan(manager, plan: QueryPlan, *, fused: bool = True
+                 ) -> List[QueryResult]:
+    """Run every group of the plan: ONE scan launch per group (the fused
+    retrieval scan for sampling/AKR/top-k groups when ``fused``, the
+    dense ``similarity_scan_stack`` otherwise), vmapped strategy
+    post-processing, device-side expansion. Returns results in the
+    plan's spec order."""
     specs = plan.specs
     results: List[Optional[QueryResult]] = [None] * len(specs)
     t0 = time.perf_counter()
@@ -433,7 +492,8 @@ def execute_plan(manager, plan: QueryPlan) -> List[QueryResult]:
                     for i, j in enumerate(missing)}
     t_embed = time.perf_counter() - t0
     for group in plan.groups:
-        _execute_group(manager, group, specs, embedded, results, t_embed)
+        _execute_group(manager, group, specs, embedded, results, t_embed,
+                       fused=fused)
     return results
 
 
@@ -474,9 +534,10 @@ def _group_keys(manager, group: ExecutionGroup, specs, qmax, lanes
 
 
 def _execute_group(manager, group: ExecutionGroup, specs, embedded,
-                   results, t_embed: float) -> None:
+                   results, t_embed: float, *, fused: bool = True) -> None:
     cfg = manager.cfg
     strat = group.strategy
+    use_fused = fused and strat.name in _FUSED_STRATEGIES
     sids = group.sids
     # scan-lane order: arena mode scans EVERY slot in slot order (the
     # super-buffers are consumed as-is — zero restacks; freed slots are
@@ -499,10 +560,22 @@ def _execute_group(manager, group: ExecutionGroup, specs, embedded,
             q_stack[si, qi] = _spec_embedding(specs[j], j, embedded)
     keys = _group_keys(manager, group, specs, qmax, lanes)
 
-    # --- the ONE fused scan for this group -------------------------------
+    # --- the ONE scan launch for this group ------------------------------
     t0 = time.perf_counter()
     stack = manager.memory_stack(lanes)
-    sims, probs = stack.search(jnp.asarray(q_stack), tau=group.key.tau)
+    k = group.key
+    if use_fused:
+        # fused path: draws/top-k resolve inside the launch; dense
+        # (S, Q, cap) scores never cross the kernel boundary
+        if strat.stochastic:
+            targets = _targets_from_keys(keys, n=k.budget)
+        else:           # top-k ignores the draw epilogue: dummy targets
+            targets = jnp.zeros((ln, qmax, 1), jnp.float32)
+        fr = stack.fused_retrieve(
+            jnp.asarray(q_stack), targets, tau=k.tau,
+            n_topk=k.budget if strat.name == "topk" else 1)
+    else:
+        sims, probs = stack.search(jnp.asarray(q_stack), tau=k.tau)
     if len(sids) == 1:   # single-session group: legacy per-session accounting
         manager.io_stats["scans"] += 1
         manager.sessions[sids[0]].memory.io_stats["scans"] += 1
@@ -513,29 +586,62 @@ def _execute_group(manager, group: ExecutionGroup, specs, embedded,
 
     # --- strategy post-processing + expansion ----------------------------
     t0 = time.perf_counter()
-    emb_stack, valid = stack.device_stack()
-    ctx = StrategyContext(
-        sims=sims, probs=probs, valid=valid, emb=emb_stack, keys=keys,
-        total_frames=np.asarray(
-            [manager.sessions[s].stats["frames_seen"]
-             if s is not None else 0 for s in lanes], np.int64),
-        key=group.key, qcount=qcount)
-
-    if strat.expand == "members":
-        members, counts = stack.device_members()
-        u = jnp.asarray(VenusMemory.expand_u(cfg.seed, group.key.budget),
-                        jnp.int32)
-        out, fids, ok = strat.run_expand(ctx, members, counts, u)
-        manager.io_stats["device_expands"] += 1
-        fids_np, ok_np = np.asarray(fids), np.asarray(ok)
-    else:
-        out = strat.run(ctx)
-        ok_np = np.asarray(out.valid)
-        if strat.expand == "index":
+    if use_fused:
+        if strat.name == "topk":
+            draws = fr.topk_i
+            sq = draws.shape[:2]
+            out = StrategyOutput(draws, jnp.ones(draws.shape, bool),
+                                 np.full(sq, k.budget),
+                                 np.full(sq, np.nan))
             fids_np = np.asarray(_gather_index_frames(
                 stack.device_index_frames(), out.draws))
-        else:                                   # raw: draws ARE frame ids
-            fids_np = np.asarray(out.draws)
+            ok_np = np.asarray(out.valid)
+        else:
+            members, counts = stack.device_members()
+            u = jnp.asarray(VenusMemory.expand_u(cfg.seed, k.budget),
+                            jnp.int32)
+            if strat.name == "sampling":
+                valid_d = jnp.ones(fr.draws.shape, bool)
+                fids, ok = _expand_stack(members, counts, fr.draws,
+                                         valid_d, u)
+                sq = fr.draws.shape[:2]
+                out = StrategyOutput(fr.draws, valid_d,
+                                     np.full(sq, k.budget),
+                                     np.full(sq, np.nan))
+            else:                                               # akr
+                akr, fids, ok = _fused_akr_post(
+                    fr.draws, fr.drawn_p, fr.p_max[..., 0], members,
+                    counts, u, theta=k.theta, beta=k.beta,
+                    n_max=k.budget)
+                out = StrategyOutput(akr.draws, akr.valid,
+                                     np.asarray(akr.n_drawn),
+                                     np.asarray(akr.mass))
+            manager.io_stats["device_expands"] += 1
+            fids_np, ok_np = np.asarray(fids), np.asarray(ok)
+    else:
+        emb_stack, valid = stack.device_stack()
+        ctx = StrategyContext(
+            sims=sims, probs=probs, valid=valid, emb=emb_stack, keys=keys,
+            total_frames=np.asarray(
+                [manager.sessions[s].stats["frames_seen"]
+                 if s is not None else 0 for s in lanes], np.int64),
+            key=group.key, qcount=qcount)
+
+        if strat.expand == "members":
+            members, counts = stack.device_members()
+            u = jnp.asarray(VenusMemory.expand_u(cfg.seed, k.budget),
+                            jnp.int32)
+            out, fids, ok = strat.run_expand(ctx, members, counts, u)
+            manager.io_stats["device_expands"] += 1
+            fids_np, ok_np = np.asarray(fids), np.asarray(ok)
+        else:
+            out = strat.run(ctx)
+            ok_np = np.asarray(out.valid)
+            if strat.expand == "index":
+                fids_np = np.asarray(_gather_index_frames(
+                    stack.device_index_frames(), out.draws))
+            else:                               # raw: draws ARE frame ids
+                fids_np = np.asarray(out.draws)
     draws_np = np.asarray(out.draws)
     n_drawn, mass = np.asarray(out.n_drawn), np.asarray(out.mass)
     timings["sample_expand"] = time.perf_counter() - t0

@@ -21,6 +21,18 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+# Canonical inverse-CDF draw primitives — defined once in
+# ``kernels.draws`` (a leaf module) and shared verbatim with the fused
+# kernel epilogue so fused draws are bit-identical to this module's
+# materialised path. Re-exported here as the public retrieval API.
+from repro.kernels.draws import (  # noqa: F401
+    DRAW_BLK,
+    DRAW_U_BITS,
+    blockwise_cdf,
+    categorical_from_targets,
+    draw_targets,
+)
+
 NEG_INF = -1e30
 
 
@@ -33,10 +45,9 @@ NEG_INF = -1e30
 def sampling_retrieve(probs: jnp.ndarray, key, n: int
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """probs: (cap,) — returns (draws (n,) int32, counts (cap,) int32)."""
-    logits = jnp.where(probs > 0, jnp.log(probs), NEG_INF)
-    draws = jax.random.categorical(key, logits, shape=(n,))
-    counts = jnp.zeros_like(probs, jnp.int32).at[draws].add(1)
-    return draws.astype(jnp.int32), counts
+    draws = categorical_from_targets(probs, draw_targets(key, n))
+    counts = jnp.zeros(probs.shape, jnp.int32).at[draws].add(1)
+    return draws, counts
 
 
 @functools.partial(jax.jit, static_argnames=("n",))
@@ -61,6 +72,39 @@ class AKRResult(NamedTuple):
 
 
 @functools.partial(jax.jit, static_argnames=("n_max",))
+def akr_from_draws(draws: jnp.ndarray, drawn_p: jnp.ndarray,
+                   p_max: jnp.ndarray, *, theta: float = 0.9,
+                   beta: float = 1.0, n_max: int = 32) -> AKRResult:
+    """Eq. 6/7 stopping rule over a precomputed draw sequence.
+
+    ``draws``/``drawn_p`` are the n_max inverse-CDF draws and their
+    probabilities (the full variate budget drawn up front); ``p_max`` is
+    max pⱼ. The progressive loop is then pure arithmetic: distinct-ness
+    of draw i is a pairwise compare against draws[:i], the running mass
+    a sequential cumsum of the distinct-masked drawn probabilities, and
+    the stop step the first n with mass/β ≥ θ and n ≥ N_min. Shared by
+    the materialised path (gathered drawn_p) and the fused kernel path
+    (crossing-accumulated drawn_p, p_max = 1/l) so both stop on
+    bit-identical state.
+    """
+    n_min = (beta * jnp.ceil(theta / jnp.maximum(
+        p_max, 1e-9))).astype(jnp.int32)
+    n_min = jnp.minimum(jnp.maximum(n_min, 1), n_max)
+    eq = draws[:, None] == draws[None, :]
+    seen_before = jnp.any(jnp.tril(eq, k=-1), axis=-1)
+    inc = jnp.where(seen_before, 0.0, drawn_p.astype(jnp.float32))
+    cum = jnp.cumsum(inc)
+    steps = jnp.arange(1, n_max + 1)
+    done = (cum / beta >= theta) & (steps >= n_min)
+    n_drawn = jnp.where(jnp.any(done), jnp.argmax(done) + 1,
+                        n_max).astype(jnp.int32)
+    valid = jnp.arange(n_max) < n_drawn
+    mass = cum[n_drawn - 1]
+    return AKRResult(jnp.where(valid, draws, -1).astype(jnp.int32),
+                     valid, n_drawn, mass, n_min)
+
+
+@functools.partial(jax.jit, static_argnames=("n_max",))
 def akr_progressive(probs: jnp.ndarray, key, *, theta: float = 0.9,
                     beta: float = 1.0, n_max: int = 32) -> AKRResult:
     """Threshold-driven progressive sampling.
@@ -69,35 +113,15 @@ def akr_progressive(probs: jnp.ndarray, key, *, theta: float = 0.9,
     selected indices satisfies mass/β ≥ θ (Eq. 6), with at least
     N_min = β·⌈θ / max pⱼ⌉ draws (Eq. 7) and at most n_max (bandwidth
     bound). Narrow queries (peaked P) stop after a few draws; dispersed
-    queries keep sampling for coverage.
+    queries keep sampling for coverage. The full n_max variate budget is
+    drawn up front (one key consumption) and the stopping rule applied
+    by ``akr_from_draws`` — identical draw-for-draw to the fused
+    in-kernel path.
     """
-    cap = probs.shape[0]
-    logits = jnp.where(probs > 0, jnp.log(probs), NEG_INF)
-    n_min = (beta * jnp.ceil(theta / jnp.maximum(
-        jnp.max(probs), 1e-9))).astype(jnp.int32)
-    n_min = jnp.minimum(jnp.maximum(n_min, 1), n_max)
-
-    def cond(state):
-        _, _, selected_mask, n, mass = state
-        done = (mass / beta >= theta) & (n >= n_min)
-        return (~done) & (n < n_max)
-
-    def body(state):
-        key, draws, selected_mask, n, mass = state
-        key, sub = jax.random.split(key)
-        idx = jax.random.categorical(sub, logits).astype(jnp.int32)
-        new = ~selected_mask[idx]
-        mass = mass + jnp.where(new, probs[idx], 0.0)
-        selected_mask = selected_mask.at[idx].set(True)
-        draws = draws.at[n].set(idx)
-        return key, draws, selected_mask, n + 1, mass
-
-    state = (key, jnp.full((n_max,), -1, jnp.int32),
-             jnp.zeros((cap,), bool), jnp.zeros((), jnp.int32),
-             jnp.zeros((), jnp.float32))
-    _, draws, _, n, mass = jax.lax.while_loop(cond, body, state)
-    valid = jnp.arange(n_max) < n
-    return AKRResult(draws, valid, n, mass, n_min)
+    draws = categorical_from_targets(probs, draw_targets(key, n_max))
+    drawn_p = probs[draws].astype(jnp.float32)
+    return akr_from_draws(draws, drawn_p, jnp.max(probs), theta=theta,
+                          beta=beta, n_max=n_max)
 
 
 @functools.partial(jax.jit, static_argnames=("n_max",))

@@ -85,6 +85,10 @@ class VenusConfig:
     # memory
     memory_capacity: int = 8192
     member_cap: int = 128
+    # index storage dtype: "float32", or "int8" for the quantised index
+    # (symmetric per-row int8 + f32 scales, quantised once at the append
+    # scatter; scans stream 4× fewer bytes — see ARCHITECTURE.md)
+    index_dtype: str = "float32"
     # lifecycle: what a session does when it outlives memory_capacity —
     # "none" (overflow raises; the pre-lifecycle contract),
     # "sliding_window" (device-side ring: evict the oldest rows, O(1)
@@ -126,7 +130,8 @@ class SessionState:
                                   cfg.member_cap, seed=cfg.seed,
                                   arena=arena, slot=slot,
                                   eviction=(cfg.eviction if eviction
-                                            is None else eviction))
+                                            is None else eviction),
+                                  index_dtype=cfg.index_dtype)
         self.frames = FrameStore()
         self.pending: List[np.ndarray] = []   # frames not yet clustered
         self.pending_base = 0                 # abs index of pending[0]
@@ -320,7 +325,8 @@ class SessionManager:
             if self.arena is None:
                 self.arena = MemoryArena(self.cfg.memory_capacity,
                                          self.embed_dim,
-                                         self.cfg.member_cap)
+                                         self.cfg.member_cap,
+                                         index_dtype=self.cfg.index_dtype)
             arena, slot = self.arena, self.arena.add_session()
         self.sessions[sid] = SessionState(sid, self.cfg, self.embed_dim,
                                           arena=arena, slot=slot,
@@ -402,9 +408,17 @@ class SessionManager:
         """Group specs into execution groups (one fused scan each)."""
         return build_plan(specs, self.cfg)
 
-    def execute(self, plan: QueryPlan) -> List[QueryResult]:
-        """Run a plan: one ``similarity_scan_stack`` launch per group."""
-        return execute_plan(self, plan)
+    def execute(self, plan: QueryPlan, *, fused: bool = True
+                ) -> List[QueryResult]:
+        """Run a plan: ONE scan launch per group. ``fused=True`` (the
+        default) resolves sampling/AKR/top-k groups inside the launch —
+        draws and top-k come back instead of dense scores; strategies
+        that genuinely need the (S, Q, cap) score tensor (BOLT/MDF/AKS,
+        plus uniform) fall back to the dense scan per group regardless.
+        ``fused=False`` forces the dense path for everything (debugging /
+        A-B measurement escape hatch; results are draw-for-draw
+        identical either way)."""
+        return execute_plan(self, plan, fused=fused)
 
     def query_specs(self, specs: Sequence[QuerySpec]) -> List[QueryResult]:
         """Convenience: ``execute(plan(specs))``."""

@@ -1,0 +1,74 @@
+"""Canonical inverse-CDF draw primitives — the ONE definition of a
+stochastic retrieval draw, shared verbatim by the materialised reference
+path (``core.retrieval``), the jnp fused oracle (``kernels.ref``) and
+the fused Pallas epilogue (``kernels.similarity``).
+
+Why chunked: the fused kernel only ever holds one scan block of
+probabilities in VMEM, so the draw must be defined over a *chunked*
+left-fold CDF (DRAW_BLK lanes per chunk, sequential fp32 carry between
+chunks). A flat ``jnp.cumsum`` over the whole probability vector would
+not decompose into per-block work bit-for-bit (float associativity), so
+it is NOT the definition — the chunked fold is. Both the materialised
+and fused paths compute this exact fold, which is what makes fused
+draws draw-for-draw bit-identical to the materialised path.
+
+Variates: one ``jax.random.randint`` in [0, 2^DRAW_U_BITS) per draw —
+the same 20-bit integer-variate contract as the member-pick variates in
+``core.memory`` (``(u * cnt) >> U_BITS``). The target of draw i is
+t_i = (u_i + 0.5) / 2^DRAW_U_BITS ∈ (0, 1); the draw is the first lane
+whose CDF exceeds t_i (== the count of lanes with cdf ≤ t_i), clipped
+to cap-1 when t_i falls beyond the accumulated total mass (fp32
+summation of a softmax can land marginally below 1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DRAW_U_BITS = 20
+DRAW_U_CARD = 1 << DRAW_U_BITS
+DRAW_BLK = 256
+
+
+def draw_targets(key, n: int) -> jnp.ndarray:
+    """n inverse-CDF targets in (0, 1). One key consumption."""
+    u = jax.random.randint(key, (n,), 0, DRAW_U_CARD)
+    return (u.astype(jnp.float32) + 0.5) * jnp.float32(1.0 / DRAW_U_CARD)
+
+
+def chunk_cdf(chunks: jnp.ndarray, carry: jnp.ndarray) -> jnp.ndarray:
+    """The canonical fold step over (..., K, DRAW_BLK) chunk-major
+    probabilities with an incoming (..., 1) carry: per-chunk cumsum plus
+    the left-fold chain of chunk totals. Returns the (..., K, DRAW_BLK)
+    CDF; the outgoing carry is its last element. The fused kernel calls
+    this per scan block (carry in scratch); ``blockwise_cdf`` calls it
+    once over the whole vector (carry 0) — identical folds, so the
+    per-lane CDF bits agree no matter how the lanes are blocked.
+    """
+    cc = jnp.cumsum(chunks, axis=-1)
+    totals = cc[..., -1]                               # (..., K)
+    ext = jnp.concatenate([carry, totals[..., :-1]], axis=-1)
+    off = jnp.cumsum(ext, axis=-1)                     # left fold of totals
+    return cc + off[..., None]
+
+
+def blockwise_cdf(probs: jnp.ndarray) -> jnp.ndarray:
+    """The canonical chunked CDF of a (cap,) probability vector.
+    Zero-pads to a DRAW_BLK multiple (flat CDF over pad lanes — exactly
+    how the fused kernel's padded scan lanes behave)."""
+    cap = probs.shape[0]
+    pad = (-cap) % DRAW_BLK
+    p = jnp.pad(probs.astype(jnp.float32), (0, pad))
+    cdf = chunk_cdf(p.reshape(-1, DRAW_BLK), jnp.zeros((1,), jnp.float32))
+    return cdf.reshape(-1)[:cap]
+
+
+def categorical_from_targets(probs: jnp.ndarray, t: jnp.ndarray
+                             ) -> jnp.ndarray:
+    """Inverse-CDF categorical draws over a (cap,) probability vector
+    for (n,) targets: count of lanes with cdf ≤ t, clipped to cap-1."""
+    cap = probs.shape[0]
+    cdf = blockwise_cdf(probs)
+    cnt = jnp.sum((cdf[None, :] <= t[:, None]).astype(jnp.int32), axis=-1)
+    return jnp.clip(cnt, 0, cap - 1).astype(jnp.int32)

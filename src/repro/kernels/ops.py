@@ -11,7 +11,7 @@ interpret mode, on TPU they compile natively.
 from __future__ import annotations
 
 import os
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +40,21 @@ def _interpret() -> bool:
 # executor's "ONE similarity_scan_stack launch per execution group"
 # invariant is assertable at the layer that actually launches the scan
 # (manager/memory io_stats only see their own call sites).
-_scan_counts = {"similarity": 0, "similarity_stack": 0}
+#
+# The fusion/quantisation savings are measurable, not anecdotal:
+# ``scan_bytes`` accumulates the index bytes streamed by every scan
+# (int8 indices count 1 byte/element — the 4× bandwidth lever);
+# ``fused_draw_launches`` counts scans whose draws/top-k were resolved
+# in the fused epilogue (no (S,Q,N) score tensor materialised);
+# ``dense_score_launches`` counts scans that DID materialise dense
+# scores (the BOLT/MDF/AKS fallback and every legacy ``search`` call).
+_scan_counts = {"similarity": 0, "similarity_stack": 0,
+                "scan_bytes": 0, "fused_draw_launches": 0,
+                "dense_score_launches": 0}
+
+
+def _count_scan_bytes(index) -> None:
+    _scan_counts["scan_bytes"] += index.size * index.dtype.itemsize
 
 
 def scan_counts() -> dict:
@@ -89,6 +103,8 @@ def similarity(query, index, *, tau: float, valid
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """query (Q,d) × index (N,d) -> (sims (Q,N), probs (Q,N))."""
     _scan_counts["similarity"] += 1
+    _scan_counts["dense_score_launches"] += 1
+    _count_scan_bytes(index)
     if _BACKEND == "pallas":
         from repro.kernels import similarity as sk
         n = index.shape[0]
@@ -110,6 +126,8 @@ def similarity_stack(query, index, *, tau: float, valid
     per-session valid masks derive on device — ``ref.as_valid_mask``)
     -> (sims (S,Q,N), probs (S,Q,N)) in ONE kernel launch."""
     _scan_counts["similarity_stack"] += 1
+    _scan_counts["dense_score_launches"] += 1
+    _count_scan_bytes(index)
     if _BACKEND == "pallas":
         from repro.kernels import similarity as sk
         sims, m, l = sk.similarity_scan_stack(query, index, valid, tau=tau,
@@ -119,6 +137,52 @@ def similarity_stack(query, index, *, tau: float, valid
         probs = jnp.exp(logits - m) / jnp.maximum(l, 1e-30)
         return sims.astype(query.dtype), probs
     return ref.similarity_stack_ref(query, index, tau=tau, valid=valid)
+
+
+class FusedRetrieval(NamedTuple):
+    """Finalised fused-retrieval result — what the query-plan executor
+    consumes. No (S, Q, N) tensor anywhere in the contract."""
+    draws: jnp.ndarray          # (S, Q, T) int32 lane draws (clipped)
+    drawn_p: jnp.ndarray        # (S, Q, T) f32 probability of each draw
+    topk_v: jnp.ndarray         # (S, Q, K) f32 top-k scores (desc)
+    topk_i: jnp.ndarray         # (S, Q, K) int32 top-k lane indices
+    m: jnp.ndarray              # (S, Q, 1) f32 online-softmax max
+    l: jnp.ndarray              # (S, Q, 1) f32 online-softmax sum-exp
+    p_max: jnp.ndarray          # (S, Q, 1) f32 max probability
+
+
+def fused_retrieve_stack(query, index, *, tau: float, valid, targets,
+                         n_topk: int) -> FusedRetrieval:
+    """One-launch fused retrieval: query (S,Q,d) × index (S,N,d) fp32 or
+    int8 + valid (any canonical mask form) + targets (S,Q,T) inverse-CDF
+    draw targets -> draws, drawn probabilities, top-k, softmax stats.
+
+    Draws are bit-identical to running the canonical chunked inverse-CDF
+    (``draws.categorical_from_targets``) over this backend's materialised
+    probabilities, and topk_i to ``lax.top_k`` over its masked scores —
+    without ever materialising them on the fused (pallas) backend. The
+    clip-to-cap-1 / p_last substitution for targets beyond the
+    accumulated total mass happens here, identically for both backends.
+    """
+    _scan_counts["similarity_stack"] += 1
+    _scan_counts["fused_draw_launches"] += 1
+    _count_scan_bytes(index)
+    n = index.shape[1]
+    if _BACKEND == "pallas":
+        from repro.kernels import similarity as sk
+        cnt, dp, p_last, tv, ti, m, l = sk.fused_retrieve_scan_stack(
+            query, index, valid, targets, tau=tau, n_topk=n_topk,
+            interpret=_interpret())
+        # the max-probability lane is exp(m − m)/l == 1/l, bitwise the
+        # value a max over this backend's materialised probs would find
+        p_max = 1.0 / jnp.maximum(l, 1e-30)
+    else:
+        r = ref.fused_retrieve_stack_ref(query, index, valid, targets,
+                                         tau=tau, n_topk=n_topk)
+        cnt, dp, p_last, tv, ti, m, l, p_max = r
+    draws = jnp.clip(cnt, 0, n - 1).astype(jnp.int32)
+    drawn_p = jnp.where(cnt >= n, p_last, dp)
+    return FusedRetrieval(draws, drawn_p, tv, ti, m, l, p_max)
 
 
 def scene_score(frames, weights) -> jnp.ndarray:

@@ -8,10 +8,12 @@ whole system runs without Pallas in the loop.
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.draws import blockwise_cdf
 
 NEG_INF = -1e30
 
@@ -124,6 +126,74 @@ def similarity_stack_ref(query: jnp.ndarray, index: jnp.ndarray, *,
     valid = as_valid_mask(valid, index.shape[1])
     fn = lambda q, x, v: similarity_ref(q, x, tau=tau, valid=v)
     return jax.vmap(fn)(query, index, valid)
+
+
+# ---------------------------------------------------------------------------
+# fused retrieval: scan + inverse-CDF draws + running top-k, one pass
+# ---------------------------------------------------------------------------
+
+
+class FusedRetrieveResult(NamedTuple):
+    """Everything the retrieval strategies need, with NO (S, Q, N) score
+    tensor in the contract: per-target inverse-CDF draw counts and drawn
+    probabilities, the running top-k, and the online-softmax stats.
+
+    ``counts`` are RAW lane counts (#{cdf ≤ t}, possibly == the padded
+    lane total when t falls beyond the accumulated mass) — the dispatch
+    layer clips them to cap-1 and substitutes ``p_last`` (the cap-1
+    lane's probability) for the drawn probability in that edge, exactly
+    what the materialised path's clipped gather produces."""
+    counts: jnp.ndarray         # (S, Q, T) int32 raw cdf≤t lane counts
+    drawn_p: jnp.ndarray        # (S, Q, T) f32 prob at the crossing lane
+    p_last: jnp.ndarray         # (S, Q, 1) f32 prob of lane cap-1
+    topk_v: jnp.ndarray         # (S, Q, K) f32 top-k sims (desc)
+    topk_i: jnp.ndarray         # (S, Q, K) int32 top-k lane indices
+    m: jnp.ndarray              # (S, Q, 1) f32 online-softmax max
+    l: jnp.ndarray              # (S, Q, 1) f32 online-softmax sum-exp
+    p_max: jnp.ndarray          # (S, Q, 1) f32 max probability
+
+
+def fused_retrieve_stack_ref(query: jnp.ndarray, index: jnp.ndarray,
+                             valid: jnp.ndarray, targets: jnp.ndarray, *,
+                             tau: float, n_topk: int
+                             ) -> FusedRetrieveResult:
+    """Oracle for the fused retrieval scan: query (S,Q,d), index
+    (S,N,d) fp32 or int8, valid in any canonical form, targets (S,Q,T)
+    inverse-CDF draw targets.
+
+    The oracle MAY materialise the (S,Q,N) scores internally (it is the
+    correctness reference, not the bandwidth path); what it returns is
+    exactly the fused kernel's contract. Draws use the canonical chunked
+    CDF from ``kernels.draws`` — the same fold the kernel epilogue
+    computes blockwise — and top-k matches ``lax.top_k`` over the masked
+    scores (value-descending, ties to the lowest lane index).
+    """
+    n = index.shape[1]
+    valid = as_valid_mask(valid, n)
+    sims, probs = similarity_stack_ref(query, index, tau=tau, valid=valid)
+    counts = jax.vmap(jax.vmap(
+        lambda p, t: _raw_counts(p, t)))(probs, targets)
+    clipped = jnp.clip(counts, 0, n - 1)
+    drawn_p = jnp.take_along_axis(probs, clipped, axis=-1)
+    p_last = probs[:, :, n - 1:n]
+    masked = jnp.where(valid[:, None, :], sims.astype(jnp.float32),
+                       NEG_INF)
+    topk_v, topk_sel = jax.lax.top_k(masked, n_topk)
+    logits = jnp.where(valid[:, None, :], sims.astype(jnp.float32) / tau,
+                       NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    l = jnp.sum(jnp.exp(logits - m), axis=-1, keepdims=True)
+    return FusedRetrieveResult(counts, drawn_p, p_last, topk_v,
+                               topk_sel.astype(jnp.int32), m, l,
+                               jnp.max(probs, axis=-1, keepdims=True))
+
+
+def _raw_counts(probs: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """Raw (unclipped) inverse-CDF lane counts — ``#{cdf ≤ t}`` over the
+    canonical chunked CDF, the quantity the kernel accumulates."""
+    cdf = blockwise_cdf(probs)
+    return jnp.sum((cdf[None, :] <= t[:, None]).astype(jnp.int32),
+                   axis=-1)
 
 
 # ---------------------------------------------------------------------------

@@ -42,10 +42,24 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.draws import DRAW_BLK, chunk_cdf
 from repro.kernels.ref import as_valid_mask
 
 NEG_INF = -1e30
 DEFAULT_BLK_N = 1024
+
+
+def _aligned_blk(n: int, blk_n: int) -> int:
+    """Scan block size for an index of n rows. When blk_n is a DRAW_BLK
+    multiple (the default path), the block is kept a DRAW_BLK multiple
+    too, so the fused epilogue's draw-CDF chunks tile every scan block
+    exactly — a requirement for the chunked CDF fold (and therefore the
+    draws) to be bit-identical between the fused kernel and the
+    materialised path, whatever the capacity. Other block sizes (test
+    sweeps) fall back to the legacy min(blk_n, n)."""
+    if blk_n % DRAW_BLK == 0:
+        return min(blk_n, DRAW_BLK * (-(-n // DRAW_BLK)))
+    return min(blk_n, n)
 
 
 def _sim_kernel(q_ref, x_ref, valid_ref, sims_ref, m_ref, l_ref,
@@ -87,12 +101,19 @@ def similarity_scan(query, index, valid, *, tau: float,
 
     Returns (sims (Q,N), m (Q,1), l (Q,1)) — cosine scores plus the online
     softmax statistics. probs = exp(sims/τ − m) / l on valid entries.
+    N is zero-padded (invalid lanes) up to a block multiple, the same
+    treatment as the stacked wrapper — any index length works with any
+    block size.
     """
     qn, d = query.shape
     n = index.shape[0]
-    blk = min(blk_n, n)
-    assert n % blk == 0, (n, blk)
-    blocks = n // blk
+    blk = _aligned_blk(n, blk_n)
+    pad = (-n) % blk
+    if pad:
+        index = jnp.pad(index, ((0, pad), (0, 0)))
+        valid = jnp.pad(valid, (0, pad))
+    npad = n + pad
+    blocks = npad // blk
 
     q32 = query.astype(jnp.float32)
     qnorm = q32 * jax.lax.rsqrt(
@@ -113,7 +134,7 @@ def similarity_scan(query, index, valid, *, tau: float,
             pl.BlockSpec((qn, 1), lambda i: (0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((qn, n), jnp.float32),
+            jax.ShapeDtypeStruct((qn, npad), jnp.float32),
             jax.ShapeDtypeStruct((qn, 1), jnp.float32),
             jax.ShapeDtypeStruct((qn, 1), jnp.float32),
         ],
@@ -124,7 +145,7 @@ def similarity_scan(query, index, valid, *, tau: float,
         compiler_params=tpu_compiler_params(("arbitrary",)),
         interpret=interpret,
     )(qnorm, index, valid[None, :])
-    return sims, m, l
+    return sims[:, :n], m, l
 
 
 # ---------------------------------------------------------------------------
@@ -182,7 +203,7 @@ def similarity_scan_stack(query, index, valid, *, tau: float,
     sn, qn, d = query.shape
     n = index.shape[1]
     valid = as_valid_mask(valid, n)
-    blk = min(blk_n, n)
+    blk = _aligned_blk(n, blk_n)
     pad = (-n) % blk
     if pad:
         index = jnp.pad(index, ((0, 0), (0, pad), (0, 0)))
@@ -221,3 +242,195 @@ def similarity_scan_stack(query, index, valid, *, tau: float,
         interpret=interpret,
     )(qnorm, index, valid)
     return sims[:, :, :n], m, l
+
+
+# ---------------------------------------------------------------------------
+# Fused retrieval scan: draws + top-k inside the launch, no (S,Q,N) output
+# ---------------------------------------------------------------------------
+
+
+def _fused_stack_kernel(q_ref, x_ref, valid_ref, t_ref,
+                        cnt_ref, dp_ref, plast_ref, tv_ref, ti_ref,
+                        m_ref, l_ref,
+                        m_acc, l_acc, carry_acc, cnt_acc, dp_acc,
+                        tv_acc, ti_acc,
+                        *, tau, blocks, blk, last_blk, last_lane):
+    """Two passes over a session's blocks in ONE grid walk (2·blocks
+    steps; the index map re-fetches block ``i % blocks``).
+
+    Pass 1 (i < blocks) is the standard online max/sum-exp scan. Pass 2
+    revisits the same normalised blocks with the finalised (m, l): each
+    block's probabilities ``exp(s/τ − m)/l`` are folded into the
+    canonical chunked draw-CDF (``draws.chunk_cdf``, carry in scratch),
+    every target accumulates its ``#{cdf ≤ t}`` lane count and its
+    crossing-lane probability, and a running top-k merges the block's
+    masked scores. Only O(Q·(T+K)) state ever leaves the kernel — the
+    (Q, BLK) score tile dies in VMEM.
+    """
+    i = pl.program_id(1)                          # 0 .. 2*blocks-1
+    qn = q_ref.shape[1]
+
+    q = q_ref[0].astype(jnp.float32)              # (Q, d) pre-normalised
+    x = x_ref[0].astype(jnp.float32)              # (BLK, d) int8 rows
+    valid = valid_ref[0]                          # (BLK,)  dequantise here
+
+    xn = x * jax.lax.rsqrt(jnp.sum(x * x, -1, keepdims=True) + 1e-12)
+    s = jax.lax.dot_general(q, xn, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, BLK)
+    logit = jnp.where(valid[None, :], s / tau, NEG_INF)
+
+    @pl.when(i == 0)
+    def _init():                                  # fresh stats per session
+        m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+        l_acc[...] = jnp.zeros_like(l_acc)
+
+    @pl.when(i < blocks)
+    def _pass1():
+        m_prev = m_acc[...]                       # (Q, 1)
+        m_new = jnp.maximum(m_prev[:, 0], jnp.max(logit, -1))[:, None]
+        corr = jnp.exp(m_prev - m_new)
+        l_acc[...] = l_acc[...] * corr + jnp.sum(
+            jnp.exp(logit - m_new), -1, keepdims=True)
+        m_acc[...] = m_new
+
+    @pl.when(i == blocks - 1)
+    def _stats_out():
+        m_ref[0] = m_acc[...]
+        l_ref[0] = l_acc[...]
+
+    @pl.when(i == blocks)
+    def _init_epilogue():
+        carry_acc[...] = jnp.zeros_like(carry_acc)
+        cnt_acc[...] = jnp.zeros_like(cnt_acc)
+        dp_acc[...] = jnp.zeros_like(dp_acc)
+        tv_acc[...] = jnp.full_like(tv_acc, NEG_INF)
+        # NEG_INF ties resolve to the lowest lane index, as in a global
+        # top_k — seed the accumulator with indices 0..K-1
+        ti_acc[...] = jax.lax.broadcasted_iota(jnp.int32, ti_acc.shape, 1)
+
+    @pl.when(i >= blocks)
+    def _pass2():
+        m = m_acc[...]                            # finalised stats
+        l = jnp.maximum(l_acc[...], 1e-30)
+        p = jnp.exp(logit - m) / l                # (Q, BLK) — bit-equal
+                                                  # to the materialised
+                                                  # probs epilogue
+        carry = carry_acc[...]                    # (Q, 1)
+        cdf = chunk_cdf(p.reshape(qn, blk // DRAW_BLK, DRAW_BLK),
+                        carry).reshape(qn, blk)
+        carry_acc[...] = cdf[:, -1:]
+        t = t_ref[0]                              # (Q, T)
+        le = cdf[:, None, :] <= t[:, :, None]     # (Q, T, BLK)
+        cnt_acc[...] += jnp.sum(le.astype(jnp.int32), -1)
+        # drawn probability: p at the unique crossing lane
+        # (cdf > t and the previous lane's cdf ≤ t)
+        prev = jnp.concatenate([carry, cdf[:, :-1]], -1)
+        cross = (~le) & (prev[:, None, :] <= t[:, :, None])
+        dp_acc[...] += jnp.sum(jnp.where(cross, p[:, None, :], 0.0), -1)
+
+        j = i - blocks
+        sv = jnp.where(valid[None, :], s, NEG_INF)
+        gi = j * blk + jax.lax.broadcasted_iota(jnp.int32, sv.shape, 1)
+        cand_v = jnp.concatenate([tv_acc[...], sv], -1)
+        cand_i = jnp.concatenate([ti_acc[...], gi], -1)
+        nv, sel = jax.lax.top_k(cand_v, tv_acc.shape[-1])
+        tv_acc[...] = nv
+        ti_acc[...] = jnp.take_along_axis(cand_i, sel, -1)
+
+    @pl.when(i == blocks + last_blk)
+    def _plast():
+        m = m_acc[...]
+        l = jnp.maximum(l_acc[...], 1e-30)
+        p = jnp.exp(logit - m) / l
+        plast_ref[0] = p[:, last_lane:last_lane + 1]
+
+    @pl.when(i == 2 * blocks - 1)
+    def _final():
+        cnt_ref[0] = cnt_acc[...]
+        dp_ref[0] = dp_acc[...]
+        tv_ref[0] = tv_acc[...]
+        ti_ref[0] = ti_acc[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tau", "n_topk", "blk_n", "interpret"))
+def fused_retrieve_scan_stack(query, index, valid, targets, *, tau: float,
+                              n_topk: int, blk_n: int = DEFAULT_BLK_N,
+                              interpret: bool = True):
+    """One-launch fused retrieval over the session stack.
+
+    query: (S,Q,d); index: (S,N,d) fp32 or int8 rows; valid in any
+    canonical ``as_valid_mask`` form; targets: (S,Q,T) inverse-CDF draw
+    targets in (0,1) (``draws.draw_targets``).
+
+    Returns raw kernel outputs, the fused contract of
+    ``ref.fused_retrieve_stack_ref`` — counts (S,Q,T) i32 UNCLIPPED
+    ``#{cdf ≤ t}`` lane counts, drawn_p (S,Q,T) f32 crossing-lane
+    probabilities (0 where the target overshot the total mass — the
+    dispatch substitutes p_last there), p_last (S,Q,1), topk values and
+    lane indices (S,Q,K), and the online-softmax stats m, l (S,Q,1).
+    No (S,Q,N) tensor exists in HBM at any point.
+    """
+    sn, qn, d = query.shape
+    n = index.shape[1]
+    tn = targets.shape[2]
+    assert blk_n % DRAW_BLK == 0, (blk_n, DRAW_BLK)
+    assert 1 <= n_topk <= n, (n_topk, n)
+    valid = as_valid_mask(valid, n)
+    blk = _aligned_blk(n, blk_n)
+    pad = (-n) % blk
+    if pad:
+        index = jnp.pad(index, ((0, 0), (0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    npad = n + pad
+    blocks = npad // blk
+
+    q32 = query.astype(jnp.float32)
+    qnorm = q32 * jax.lax.rsqrt(
+        jnp.sum(q32 * q32, -1, keepdims=True) + 1e-12)
+
+    kernel = functools.partial(
+        _fused_stack_kernel, tau=tau, blocks=blocks, blk=blk,
+        last_blk=(n - 1) // blk, last_lane=(n - 1) % blk)
+    xmap = lambda s, i: (s, i % blocks, 0)
+    vmap_ = lambda s, i: (s, i % blocks)
+    out = pl.pallas_call(
+        kernel,
+        grid=(sn, 2 * blocks),
+        in_specs=[
+            pl.BlockSpec((1, qn, d), lambda s, i: (s, 0, 0)),
+            pl.BlockSpec((1, blk, d), xmap),
+            pl.BlockSpec((1, blk), vmap_),
+            pl.BlockSpec((1, qn, tn), lambda s, i: (s, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, qn, tn), lambda s, i: (s, 0, 0)),
+            pl.BlockSpec((1, qn, tn), lambda s, i: (s, 0, 0)),
+            pl.BlockSpec((1, qn, 1), lambda s, i: (s, 0, 0)),
+            pl.BlockSpec((1, qn, n_topk), lambda s, i: (s, 0, 0)),
+            pl.BlockSpec((1, qn, n_topk), lambda s, i: (s, 0, 0)),
+            pl.BlockSpec((1, qn, 1), lambda s, i: (s, 0, 0)),
+            pl.BlockSpec((1, qn, 1), lambda s, i: (s, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((sn, qn, tn), jnp.int32),
+            jax.ShapeDtypeStruct((sn, qn, tn), jnp.float32),
+            jax.ShapeDtypeStruct((sn, qn, 1), jnp.float32),
+            jax.ShapeDtypeStruct((sn, qn, n_topk), jnp.float32),
+            jax.ShapeDtypeStruct((sn, qn, n_topk), jnp.int32),
+            jax.ShapeDtypeStruct((sn, qn, 1), jnp.float32),
+            jax.ShapeDtypeStruct((sn, qn, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((qn, 1), jnp.float32),
+            pltpu.VMEM((qn, 1), jnp.float32),
+            pltpu.VMEM((qn, 1), jnp.float32),
+            pltpu.VMEM((qn, tn), jnp.int32),
+            pltpu.VMEM((qn, tn), jnp.float32),
+            pltpu.VMEM((qn, n_topk), jnp.float32),
+            pltpu.VMEM((qn, n_topk), jnp.int32),
+        ],
+        compiler_params=tpu_compiler_params(("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(qnorm, index, valid, targets)
+    return out

@@ -32,6 +32,7 @@ import numpy as np
 from repro.core.pipeline import patchify
 from repro.core.queryplan import QueryPlan, QuerySpec
 from repro.core.session import SessionManager
+from repro.kernels import ops as kops
 from repro.serving.engine import Request, ServingEngine
 
 
@@ -144,8 +145,20 @@ class VenusService:
         recycling — churned streams must reuse slots, not grow the
         arena). For 24/7 streams, ``mem_evicted_rows`` rising at the
         ingest rate is HEALTHY steady-state; see the counter glossary in
-        ARCHITECTURE.md."""
+        ARCHITECTURE.md.
+
+        The ``kops_*`` counters come from the kernel dispatch layer
+        (``repro.kernels.ops.scan_counts`` — process-global, shared by
+        every manager in the process): ``kops_scan_bytes`` is the index
+        bytes streamed by all similarity scans (int8 indices count 1
+        byte/element — the quantisation lever),
+        ``kops_fused_draw_launches`` counts scans resolved in the fused
+        epilogue (no dense score tensor), ``kops_dense_score_launches``
+        counts scans that DID materialise (S, Q, cap) scores (the
+        BOLT/MDF/AKS fallback and legacy ``search`` calls)."""
         out: Dict[str, int] = dict(self.manager.io_stats)
+        for k, v in kops.scan_counts().items():
+            out[f"kops_{k}"] = v
         if self.manager.arena is not None:
             for k, v in self.manager.arena.io_stats.items():
                 out[f"arena_{k}"] = v
