@@ -28,9 +28,16 @@ The edge box serves N concurrent camera streams with real-time queries
   arena growth under churn), slot reuses, evictions/tick, and
   restacks/tick (asserted 0).
 
+* **sharded arena** (``--shards``) — identical tick/query workloads on
+  a 1-shard vs K-shard (``model`` axis) arena mesh: scans/tick,
+  per-shard fused launches, candidate-gather bytes vs the dense leak
+  bound, and the double-buffered ingest/query overlap. The K>1 arms
+  need ``XLA_FLAGS=--xla_force_host_platform_device_count``.
+
 ``--json`` additionally writes every emitted row (plus run metadata) to
 ``BENCH_multistream.json`` so CI can upload a machine-readable perf
-artifact per commit.
+artifact per commit; the ``trajectory`` key accumulates a compact
+summary of every past run (the artifact is re-read before rewriting).
 
 Usage:  PYTHONPATH=src python -m benchmarks.run --only multistream
    (or  PYTHONPATH=src python benchmarks/bench_multistream.py)
@@ -578,6 +585,93 @@ def _bench_fused(n_sessions: int, n_queries: int, chunk: int = 64,
           f"{out['dense_fp32'] / max(out['fused_fp32'], 1):.2f}x"})
 
 
+def _bench_shards(n_sessions: int, n_queries: int, chunk: int = 64,
+                  ticks: int = 4, n_scenes: int = 6):
+    """Sharded-arena fan-out: a 1-shard vs a K-shard (K ≤ 4) mesh.
+
+    Same worlds, same ticks, same queries through managers whose arena
+    super-buffers live on a ``model=1`` vs ``model=K`` mesh
+    (``make_memory_mesh``). Reports wall time per tick, group scans per
+    tick, per-shard fused launches, and the bytes the candidate
+    all_gather moves across shard boundaries
+    (``kops_shard_gather_bytes``) against the dense O(S·Q·capacity)
+    leak bound — the gather is O(S·Q·(T+K)) outputs only, so the
+    counter must come in far below one (S, Q, cap) f32 tensor. Both
+    arms assert ``stack_rebuilds == 0``. The K-shard arm additionally
+    runs with double buffering off to price the ingest/query overlap
+    (the donated append scatter lands on the trailing buffer set while
+    the front set serves the fused scan).
+
+    With one visible device (no
+    ``XLA_FLAGS=--xla_force_host_platform_device_count``) only the
+    1-shard arm runs; the row still lands so CI diffs stay aligned."""
+    import jax
+    from repro.kernels import ops as kops
+    from repro.launch.mesh import make_memory_mesh
+
+    k = min(4, len(jax.devices()))
+    worlds = [VideoWorld(WorldConfig(n_scenes=n_scenes, seed=20 + s))
+              for s in range(n_sessions)]
+    qsids = [s for s in range(n_sessions) for _ in range(n_queries)]
+    qe_by_tick = [np.concatenate([
+        OracleEmbedder(w, dim=64).embed_queries(
+            w.make_queries(n_queries, seed=31 + 13 * t))
+        for w in worlds]) for t in range(ticks)]
+
+    def chunk_at(w, t):
+        lo = (t * chunk) % max(w.total_frames - chunk, 1)
+        return w.frames[lo:lo + chunk]
+
+    def drive(shards, double_buffer):
+        mgr = SessionManager(VenusConfig(), PixelEmbedder(dim=64),
+                             embed_dim=64,
+                             mesh=make_memory_mesh(shards=shards),
+                             double_buffer=double_buffer)
+        sids = [mgr.create_session() for _ in range(n_sessions)]
+        # warm: compile ingest + the (sharded) fused scan once
+        mgr.ingest_tick({sid: chunk_at(w, 0)
+                         for sid, w in zip(sids, worlds)})
+        mgr.query_batch_cross([sids[s] for s in qsids],
+                              query_embs=qe_by_tick[0])
+        mgr.reset_io_stats()
+        kops.reset_scan_counts()
+        t0 = time.perf_counter()
+        for t in range(ticks):
+            mgr.ingest_tick({sid: chunk_at(w, 1 + t)
+                             for sid, w in zip(sids, worlds)})
+            mgr.query_batch_cross([sids[s] for s in qsids],
+                                  query_embs=qe_by_tick[t])
+        return mgr, time.perf_counter() - t0, kops.scan_counts()
+
+    overlap = {}
+    for shards in (1,) + ((k,) if k > 1 else ()):
+        mgr, dt, c = drive(shards, double_buffer=True)
+        a = mgr.arena
+        assert a.n_shards == shards, a.n_shards
+        assert mgr.io_stats["stack_rebuilds"] == 0, mgr.io_stats
+        if shards > 1:
+            # the sharded lane actually ran, and its cross-shard
+            # traffic stayed candidate-sized (no dense-score leak)
+            assert c["sharded_stack_launches"] > 0, c
+            dense = a.n_sessions * len(qsids) * a.capacity * 4
+            assert 0 < c["shard_gather_bytes"] < dense * ticks, c
+            _, dt_nodb, _ = drive(shards, double_buffer=False)
+            overlap["ingest_query_overlap"] = \
+                f"{dt_nodb / max(dt, 1e-9):.2f}x"
+        emit(f"multistream/sharded_{shards}shard", dt,
+             {"sessions": n_sessions, "ticks": ticks,
+              "queries_per_tick": len(qsids),
+              "arena_shards": a.n_shards,
+              "scans_per_tick": mgr.io_stats["group_scans"] / ticks,
+              "sharded_group_scans": mgr.io_stats["sharded_group_scans"],
+              "sharded_stack_launches": c["sharded_stack_launches"],
+              "shard_gather_bytes_per_tick":
+                  c["shard_gather_bytes"] // ticks,
+              "stack_rebuilds": mgr.io_stats["stack_rebuilds"],
+              "double_flushes": a.io_stats["double_flushes"],
+              **overlap})
+
+
 def _bench_incremental_index(capacity: int = 16384, dim: int = 256,
                              rounds: int = 20):
     """Post-ingest query latency: incremental append vs full re-upload."""
@@ -616,7 +710,7 @@ def _bench_incremental_index(capacity: int = 16384, dim: int = 256,
 
 
 ALL_PARTS = ("ingest", "query", "cross", "plan", "arena", "churn",
-             "fused", "incremental")
+             "fused", "shards", "incremental")
 JSON_PATH = "BENCH_multistream.json"
 
 
@@ -656,6 +750,9 @@ def run(n_sessions: int = 4, n_queries: int = 8, *,
         if "fused" in parts:
             _bench_fused(n_sessions, n_queries, ticks=ticks,
                          n_scenes=n_scenes, index_dtype=index_dtype)
+        if "shards" in parts:
+            _bench_shards(n_sessions, n_queries, ticks=ticks,
+                          n_scenes=n_scenes)
         if "incremental" in parts:
             _bench_incremental_index()
     finally:
@@ -663,17 +760,33 @@ def run(n_sessions: int = 4, n_queries: int = 8, *,
         # still leaves every completed row on disk for CI to compare
         common.set_sink(None)
         if json_path:
+            # trajectory accumulates ACROSS runs: re-read the previous
+            # artifact and append this run's compact summary — a bare
+            # mode-"w" json.dump would wipe the history every run and
+            # leave the trajectory perpetually empty
+            try:
+                with open(json_path) as f:
+                    trajectory = json.load(f).get("trajectory", [])
+            except (OSError, ValueError):
+                trajectory = []
+            now = time.time()
+            trajectory.append(
+                {"timestamp": now, "parts": list(parts), "smoke": smoke,
+                 "rows": {r["name"]: round(r["seconds"], 6)
+                          for r in rows}})
             payload = {"meta": {"bench": "multistream",
                                 "sessions": n_sessions,
                                 "queries": n_queries, "smoke": smoke,
                                 "parts": list(parts),
                                 "index_dtype": index_dtype,
-                                "timestamp": time.time()},
-                       "benchmarks": rows}
+                                "timestamp": now},
+                       "benchmarks": rows,
+                       "trajectory": trajectory}
             with open(json_path, "w") as f:
                 json.dump(payload, f, indent=2)
             print(f"[bench_multistream] wrote {json_path} "
-                  f"({len(rows)} rows)")
+                  f"({len(rows)} rows, {len(trajectory)} runs in "
+                  f"trajectory)")
 
 
 if __name__ == "__main__":
@@ -693,6 +806,12 @@ if __name__ == "__main__":
                     help="the one-launch fused retrieval bench "
                          "(fused epilogue + quantised index vs the "
                          "dense score path)")
+    ap.add_argument("--shards", action="store_true",
+                    help="the sharded-arena fan-out bench (1 vs K "
+                         "host devices: scans/tick, candidate-gather "
+                         "bytes, ingest/query overlap; K>1 arms need "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count)")
     ap.add_argument("--index-dtype", choices=("float32", "int8"),
                     default="int8",
                     help="index dtype for the fused bench's quantised "
@@ -703,11 +822,13 @@ if __name__ == "__main__":
                     help=f"also write every emitted row to {JSON_PATH}")
     args = ap.parse_args()
     parts = None
-    if args.cross or args.arena or args.churn or args.fused:
+    if args.cross or args.arena or args.churn or args.fused or \
+            args.shards:
         parts = (("cross", "plan") if args.cross else ()) + \
                 (("arena",) if args.arena else ()) + \
                 (("churn",) if args.churn else ()) + \
-                (("fused",) if args.fused else ())
+                (("fused",) if args.fused else ()) + \
+                (("shards",) if args.shards else ())
     run(args.sessions, args.queries, smoke=args.smoke, parts=parts,
         json_path=JSON_PATH if args.json else None,
         index_dtype=args.index_dtype)

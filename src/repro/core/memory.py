@@ -83,23 +83,67 @@ import numpy as np
 
 from repro.kernels import ops as kops
 from repro.kernels.ref import as_valid_mask
+from repro.launch.sharding import memory_sharding, mesh_axis_size
 
 
 class FrameStore:
-    """Raw data layer: append-only archive of frames by absolute index."""
+    """Raw data layer: archive of frames by absolute index.
+
+    Append-only at the front, BOUNDED at the back: ``trim(keep_from)``
+    drops every frame below an absolute id, closing the unbounded
+    host-RSS leak a 24/7 stream would otherwise accumulate (the paper's
+    NVMe archive; here the bound is the eviction window). Frames keep
+    their ABSOLUTE ids across trims — ``_base`` offsets the retained
+    list — so every id recorded in index/member tables stays stable;
+    reading a trimmed frame raises ``IndexError`` with the trim
+    horizon, never silently returns the wrong frame. The session layer
+    only trims below every live reference (ring windows + member
+    reservoirs + un-clustered pending frames), so a correctly-driven
+    store never hits that error."""
 
     def __init__(self):
         self._frames: List[np.ndarray] = []
+        self._base = 0            # absolute id of _frames[0]
+        self.trimmed = 0          # total frames dropped so far
 
     def append(self, frames: np.ndarray) -> None:
         for f in np.asarray(frames):
             self._frames.append(f)
 
     def __len__(self) -> int:
+        """Total frames ever archived (absolute id space, incl. trimmed)."""
+        return self._base + len(self._frames)
+
+    @property
+    def base(self) -> int:
+        """Smallest absolute frame id still retained."""
+        return self._base
+
+    @property
+    def retained(self) -> int:
+        """Frames currently held on host (the actual RSS footprint)."""
         return len(self._frames)
 
     def get(self, idx: Sequence[int]) -> np.ndarray:
-        return np.stack([self._frames[int(i)] for i in idx])
+        out = []
+        for i in idx:
+            i = int(i)
+            if i < self._base:
+                raise IndexError(
+                    f"frame {i} was trimmed from the archive "
+                    f"(retained ids start at {self._base})")
+            out.append(self._frames[i - self._base])
+        return np.stack(out)
+
+    def trim(self, keep_from: int) -> int:
+        """Drop every frame with absolute id < ``keep_from``; returns
+        how many were dropped. Trimming past the end is clamped."""
+        drop = max(0, min(int(keep_from), len(self)) - self._base)
+        if drop:
+            del self._frames[:drop]
+            self._base += drop
+            self.trimmed += drop
+        return drop
 
 
 @dataclass
@@ -352,15 +396,46 @@ class MemoryArena:
     bytes, and the scan math is unchanged because the kernels
     L2-normalise rows — the per-row scale cancels, so no dequant pass
     and no scales operand exist anywhere in the kernel contract.
+
+    **Sharding** (``mesh=`` + the mesh's ``model`` axis size K > 1):
+    every super-buffer is placed with ``memory_sharding`` — the leading
+    slot axis split into K contiguous slabs, trailing dims replicated —
+    and the fused scan entries in ``kernels.ops`` fan the SAME kernels
+    out per-slab under ``shard_map`` (the stack kernels are pure
+    per-lane programs, so a slab scan is bitwise the single-device scan
+    restricted to that slab). To keep slabs rectangular the arena then
+    grows in blocks of K slots: the block's first slot is handed out,
+    the rest wait in ``virgin_slots`` (already zeroed — claiming one
+    costs nothing and is not a ``slot_reuse``); allocation picks the
+    free/virgin slot on the least-loaded shard so sessions stay
+    balanced across devices. With K == 1 (or no mesh) every code path
+    below is byte-for-byte the unsharded PR-6 behaviour — single-slot
+    growth, exact LIFO free-list reuse, no placement.
+
+    **Double buffering** (``double_buffer=True``): the arena keeps a
+    second, back set of super-buffers one tick behind the front.
+    A tick's flush replays last tick's blocks (the ``carry``) plus this
+    tick's pending into the BACK set, then swaps front↔back — so the
+    donated append scatter never writes the buffers queries are
+    scanning, and XLA's async dispatch overlaps ingest with the fused
+    query launches instead of serialising on the donation hazard.
+    Because scatters compose last-write-wins per (slot, pos), the front
+    after every flush is bitwise identical to the single-buffer state;
+    slot resets and growth apply to both sets, and the carry is
+    filtered when its slot is recycled.
     """
 
     def __init__(self, capacity: int, dim: int, member_cap: int = 128,
-                 index_dtype: str = "float32"):
+                 index_dtype: str = "float32", *, mesh=None,
+                 mesh_axis: str = "model", double_buffer: bool = False):
         self.capacity = capacity
         self.dim = dim
         self.member_cap = member_cap
         self.index_dtype = index_dtype
         self._emb_dtype = _index_buf_dtype(index_dtype)
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self.n_shards = mesh_axis_size(mesh, mesh_axis)
         self.emb_scale: Optional[jnp.ndarray] = None    # (S, cap) f32
         self.n_sessions = 0       # allocated slots (incl. freed ones)
         self.emb: Optional[jnp.ndarray] = None          # (S, cap, d)
@@ -370,47 +445,88 @@ class MemoryArena:
         self.sizes = np.zeros((0,), np.int32)            # host mirror
         self.heads = np.zeros((0,), np.int32)            # ring starts
         self.free_slots: List[int] = []    # released, awaiting reuse
+        self.virgin_slots: List[int] = []  # grown, never yet allocated
         self.version = 0          # bumped per append / grow / release
         self._sizes_dev: Optional[jnp.ndarray] = None
         self._windows_dev: Optional[jnp.ndarray] = None
         self._valid_dev: Optional[jnp.ndarray] = None
         self._valid_version = -1
         self._deferred: Optional[list] = None   # open tick batch, or None
+        # back buffer set (double_buffer) + last tick's blocks to replay
+        self._back: Optional[dict] = (
+            {"emb": None, "members": None, "member_count": None,
+             "index_frame": None, "emb_scale": None}
+            if double_buffer else None)
+        self._carry: list = []
         self.io_stats = {"grows": 0, "appends": 0, "appended_rows": 0,
-                         "slot_releases": 0, "slot_reuses": 0}
+                         "slot_releases": 0, "slot_reuses": 0,
+                         "double_flushes": 0, "carry_rows": 0}
+
+    @property
+    def double_buffer(self) -> bool:
+        return self._back is not None
 
     def reset_io_stats(self) -> None:
         for k in self.io_stats:
             self.io_stats[k] = 0
 
     # ------------------------------------------------------------- lifecycle
+    def _place(self, buf: jnp.ndarray) -> jnp.ndarray:
+        """Pin a super-buffer to its mesh placement: leading slot axis in
+        contiguous per-device slabs, trailing dims replicated (the same
+        spec the shard_map scan entries consume). No-op unsharded."""
+        if self.mesh is not None and self.n_shards > 1:
+            return jax.device_put(
+                buf, memory_sharding(self.mesh, buf.ndim, self.mesh_axis))
+        return buf
+
     def _grow(self, buf: Optional[jnp.ndarray], shape: Tuple[int, ...],
               dtype) -> jnp.ndarray:
         if buf is None:
-            return jnp.zeros(shape, dtype)
+            return self._place(jnp.zeros(shape, dtype))
         pad = [(0, shape[0] - buf.shape[0])] + [(0, 0)] * (buf.ndim - 1)
-        return jnp.pad(buf, pad)
+        # growth moves slab boundaries, so the pad includes a reshard
+        # copy — acceptable: growth is warm-up, never the steady loop
+        return self._place(jnp.pad(buf, pad))
 
-    def add_session(self) -> int:
-        """Allocate a slot: recycle a released one (device rows reset
-        via one donated program — no growth, no restack) or grow every
-        super-buffer by one whole slot block."""
-        if self.free_slots:
-            slot = self.free_slots.pop()
-            (self.emb, self.members, self.member_count,
-             self.index_frame) = _arena_reset_slot(
-                self.emb, self.members, self.member_count,
-                self.index_frame, jnp.asarray(slot, jnp.int32))
-            if self.emb_scale is not None:
-                self.emb_scale = _arena_reset_row(
-                    self.emb_scale, jnp.asarray(slot, jnp.int32))
-            self.sizes[slot] = 0
-            self.heads[slot] = 0
-            self.version += 1
-            self.io_stats["slot_reuses"] += 1
-            return slot
+    def _shard_of(self, slot: int) -> int:
+        """Which contiguous slab (device) a slot currently lives on."""
+        slab = max(1, self.n_sessions // self.n_shards)
+        return min(slot // slab, self.n_shards - 1)
+
+    def _recycle(self, slot: int) -> int:
+        """Reset a released slot's device rows (one donated program per
+        buffer set) and hand it out again."""
+        js = jnp.asarray(slot, jnp.int32)
+        (self.emb, self.members, self.member_count,
+         self.index_frame) = _arena_reset_slot(
+            self.emb, self.members, self.member_count,
+            self.index_frame, js)
+        if self.emb_scale is not None:
+            self.emb_scale = _arena_reset_row(self.emb_scale, js)
+        if self._back is not None:
+            bk = self._back
+            (bk["emb"], bk["members"], bk["member_count"],
+             bk["index_frame"]) = _arena_reset_slot(
+                bk["emb"], bk["members"], bk["member_count"],
+                bk["index_frame"], js)
+            if bk["emb_scale"] is not None:
+                bk["emb_scale"] = _arena_reset_row(bk["emb_scale"], js)
+            # drop the reset slot from the replay queue — last tick's
+            # rows must not resurrect inside a recycled slot
+            self._carry = [b for b in self._carry if b[0] != slot]
+        self.sizes[slot] = 0
+        self.heads[slot] = 0
+        self.version += 1
+        self.io_stats["slot_reuses"] += 1
+        return slot
+
+    def _grow_block(self) -> int:
+        """Grow every super-buffer by one slot block (``n_shards`` slots,
+        so S always divides the mesh axis); returns the first new slot,
+        parking the rest in ``virgin_slots``."""
         slot = self.n_sessions
-        self.n_sessions = s = slot + 1
+        self.n_sessions = s = slot + self.n_shards
         cap, d, k = self.capacity, self.dim, self.member_cap
         self.emb = self._grow(self.emb, (s, cap, d), self._emb_dtype)
         if self.index_dtype == "int8":
@@ -421,11 +537,55 @@ class MemoryArena:
                                        jnp.int32)
         self.index_frame = self._grow(self.index_frame, (s, cap),
                                       jnp.int32)
-        self.sizes = np.append(self.sizes, np.int32(0))
-        self.heads = np.append(self.heads, np.int32(0))
+        if self._back is not None:
+            bk = self._back
+            bk["emb"] = self._grow(bk["emb"], (s, cap, d), self._emb_dtype)
+            if self.index_dtype == "int8":
+                bk["emb_scale"] = self._grow(bk["emb_scale"], (s, cap),
+                                             jnp.float32)
+            bk["members"] = self._grow(bk["members"], (s, cap, k),
+                                       jnp.int32)
+            bk["member_count"] = self._grow(bk["member_count"], (s, cap),
+                                            jnp.int32)
+            bk["index_frame"] = self._grow(bk["index_frame"], (s, cap),
+                                           jnp.int32)
+        self.sizes = np.append(self.sizes,
+                               np.zeros((self.n_shards,), np.int32))
+        self.heads = np.append(self.heads,
+                               np.zeros((self.n_shards,), np.int32))
+        self.virgin_slots.extend(range(slot + 1, s))
         self.version += 1
         self.io_stats["grows"] += 1
         return slot
+
+    def add_session(self) -> int:
+        """Allocate a slot: recycle a released one (device rows reset
+        via one donated program — no growth, no restack), claim a
+        still-virgin slot from an earlier growth block, or grow every
+        super-buffer by one whole slot block."""
+        if self.n_shards == 1:
+            # unsharded: exact PR-6 behaviour — LIFO reuse, 1-slot blocks
+            if self.free_slots:
+                return self._recycle(self.free_slots.pop())
+            return self._grow_block()
+        cand = sorted(set(self.free_slots) | set(self.virgin_slots))
+        if not cand:
+            return self._grow_block()
+        # balance live sessions across slabs: pick the candidate on the
+        # least-loaded shard (tie → lowest slot id)
+        dead = set(self.free_slots) | set(self.virgin_slots)
+        load = [0] * self.n_shards
+        for s in range(self.n_sessions):
+            if s not in dead:
+                load[self._shard_of(s)] += 1
+        slot = min(cand, key=lambda s: (load[self._shard_of(s)], s))
+        if slot in self.virgin_slots:
+            # never written: its rows are the zeros growth placed there,
+            # so claiming costs no device work at all
+            self.virgin_slots.remove(slot)
+            return slot
+        self.free_slots.remove(slot)
+        return self._recycle(slot)
 
     def release_slot(self, slot: int) -> None:
         """Free a closed session's slot into the free-list. The lane's
@@ -434,6 +594,7 @@ class MemoryArena:
         reset at reuse time, so closing costs no device work at all."""
         assert 0 <= slot < self.n_sessions, slot
         assert slot not in self.free_slots, f"slot {slot} already free"
+        assert slot not in self.virgin_slots, f"slot {slot} never allocated"
         self.free_slots.append(slot)
         self.sizes[slot] = 0
         self.heads[slot] = 0
@@ -482,24 +643,24 @@ class MemoryArena:
             return len(emb_rows)
         return self._flush([block])
 
-    def _flush(self, pending: list) -> int:
-        """Apply queued blocks: ONE donated scatter per super-buffer,
-        with the total row count bucketed (padding rows duplicate row 0
-        — same index, same values, a no-op rewrite). Windows apply in
-        queue order, so the last block a session queued wins."""
-        if not pending:
-            return 0
+    def _scatter_into(self, bufs: dict, blocks: list) -> Tuple[dict, int]:
+        """Apply ``blocks`` to the buffer set ``bufs``: ONE donated
+        scatter per super-buffer, with the total row count bucketed
+        (padding rows duplicate row 0 — same index, same values, a
+        no-op rewrite). An evicting session can wrap within one tick
+        and hit the same physical position twice, and the double-buffer
+        replay re-applies last tick's blocks before this tick's;
+        scatter order over duplicate indices is undefined, so only the
+        LAST write per (slot, pos) is kept — which is exactly what
+        makes carry+pending composition equal to sequential flushes."""
         slots = np.concatenate([np.full(len(e), s, np.int32)
-                                for s, _, e, *_ in pending])
+                                for s, _, e, *_ in blocks])
         poss = np.concatenate([np.arange(p, p + len(e), dtype=np.int32)
-                               for _, p, e, *_ in pending])
-        emb_rows = np.concatenate([b[2] for b in pending])
-        mem_rows = np.concatenate([b[3] for b in pending])
-        cnt_rows = np.concatenate([b[4] for b in pending])
-        if_rows = np.concatenate([b[5] for b in pending])
-        # an evicting session can wrap within one tick and hit the same
-        # physical position twice; scatter order over duplicate indices
-        # is undefined, so keep only the LAST write per (slot, pos)
+                               for _, p, e, *_ in blocks])
+        emb_rows = np.concatenate([b[2] for b in blocks])
+        mem_rows = np.concatenate([b[3] for b in blocks])
+        cnt_rows = np.concatenate([b[4] for b in blocks])
+        if_rows = np.concatenate([b[5] for b in blocks])
         lin = slots.astype(np.int64) * self.capacity + poss
         if len(np.unique(lin)) != len(lin):
             last = {l: i for i, l in enumerate(lin)}
@@ -518,20 +679,67 @@ class MemoryArena:
             cnt_rows = np.concatenate([cnt_rows, cnt_rows[reps]])
             if_rows = np.concatenate([if_rows, if_rows[reps]])
         sl, po = jnp.asarray(slots), jnp.asarray(poss)
+        out = dict(bufs)
         if self.index_dtype == "int8":
             # quantise ONCE, at the append scatter — scans stream the
             # int8 rows as-is from here on (scale cancels under the
-            # kernels' row normalisation; kept for faithful dequant)
+            # kernels' row normalisation; kept for faithful dequant).
+            # Pure per-row, so a carry replay re-quantises identically.
             emb_rows, scale_rows = quantise_rows(emb_rows)
-            self.emb_scale = _arena_scatter_rows(
-                self.emb_scale, jnp.asarray(scale_rows), sl, po)
-        self.emb = _arena_scatter_rows(self.emb, jnp.asarray(emb_rows),
-                                       sl, po)
-        self.members = _arena_scatter_rows(self.members,
-                                           jnp.asarray(mem_rows), sl, po)
-        self.member_count, self.index_frame = _arena_scatter_meta(
-            self.member_count, self.index_frame, jnp.asarray(cnt_rows),
-            jnp.asarray(if_rows), sl, po)
+            out["emb_scale"] = _arena_scatter_rows(
+                bufs["emb_scale"], jnp.asarray(scale_rows), sl, po)
+        out["emb"] = _arena_scatter_rows(bufs["emb"],
+                                         jnp.asarray(emb_rows), sl, po)
+        out["members"] = _arena_scatter_rows(bufs["members"],
+                                             jnp.asarray(mem_rows), sl, po)
+        out["member_count"], out["index_frame"] = _arena_scatter_meta(
+            bufs["member_count"], bufs["index_frame"],
+            jnp.asarray(cnt_rows), jnp.asarray(if_rows), sl, po)
+        return out, b
+
+    @staticmethod
+    def _copy_block(block):
+        """Deep-copy a queued block for the carry: ``append`` stores
+        VIEWS of the session's host mirrors, which a later ring wrap
+        would mutate before the replay lands."""
+        s, p, e, m, c, f, w = block
+        return (s, p, e.copy(), m.copy(), c.copy(), f.copy(), w)
+
+    def _flush(self, pending: list) -> int:
+        """Apply queued blocks; windows apply in queue order, so the
+        last block a session queued wins.
+
+        Single-buffer: one donated scatter per super-buffer, straight
+        into the live (query-visible) set. Double-buffer: the scatter
+        targets the BACK set — last tick's carry replayed first, then
+        this tick's pending — and the sets swap, so ingest never
+        donates the buffers a concurrent query launch is scanning and
+        XLA dispatch overlaps the two instead of serialising. The
+        swapped-in front is bitwise the single-buffer result (carry ∘
+        pending composes last-write-wins)."""
+        if not pending:
+            return 0
+        if self._back is None:
+            bufs = {"emb": self.emb, "members": self.members,
+                    "member_count": self.member_count,
+                    "index_frame": self.index_frame,
+                    "emb_scale": self.emb_scale}
+            bufs, b = self._scatter_into(bufs, pending)
+        else:
+            carry = self._carry
+            bufs, b = self._scatter_into(self._back, carry + pending)
+            self._back = {"emb": self.emb, "members": self.members,
+                          "member_count": self.member_count,
+                          "index_frame": self.index_frame,
+                          "emb_scale": self.emb_scale}
+            self._carry = [self._copy_block(bl) for bl in pending]
+            self.io_stats["double_flushes"] += 1
+            self.io_stats["carry_rows"] += sum(len(bl[2]) for bl in carry)
+        self.emb = bufs["emb"]
+        self.members = bufs["members"]
+        self.member_count = bufs["member_count"]
+        self.index_frame = bufs["index_frame"]
+        self.emb_scale = bufs["emb_scale"]
         for slot, _pos, _rows, _m, _c, _f, window in pending:
             self.heads[slot], self.sizes[slot] = window
         self.version += 1
@@ -865,6 +1073,24 @@ class VenusMemory:
         from; ``(0, size)`` until the first eviction."""
         return self._head, self._size
 
+    def min_live_frame(self) -> int:
+        """Smallest absolute frame id any LIVE row still references —
+        the archive-trim horizon for this memory: index_frame ids and
+        the count-masked member reservoirs of every row inside the
+        current ring window. Reservoirs are consulted FIRST-CLASS, so
+        cluster_merge's folded members keep their raw frames reachable
+        (and untrimmed) long after their own index row left the window.
+        An empty memory returns int64-max: it constrains nothing."""
+        if self._size == 0:
+            return int(np.iinfo(np.int64).max)
+        phys = (self._head + np.arange(self._size)) % self.capacity
+        lo = int(self._index_frame[phys].min())
+        cnt = self._member_count[phys]
+        live = np.arange(self.member_cap)[None, :] < cnt[:, None]
+        if live.any():
+            lo = min(lo, int(self._members[phys][live].min()))
+        return lo
+
     def detach_from_arena(self) -> None:
         """Sever this memory from its (about to be recycled) arena
         slot. Every previously returned device handle is stale the
@@ -1169,7 +1395,8 @@ class MemoryStack:
         a = self.arena_view()
         if a is not None:
             return kops.similarity_stack(query_emb, a.emb, tau=tau,
-                                         valid=a.device_windows())
+                                         valid=a.device_windows(),
+                                         mesh=a.mesh, mesh_axis=a.mesh_axis)
         emb, valid = self.device_stack()
         return kops.similarity_stack(query_emb, emb, tau=tau, valid=valid)
 
@@ -1183,7 +1410,8 @@ class MemoryStack:
         if a is not None:
             return kops.fused_retrieve_stack(
                 query_emb, a.emb, tau=tau, valid=a.device_windows(),
-                targets=targets, n_topk=n_topk)
+                targets=targets, n_topk=n_topk,
+                mesh=a.mesh, mesh_axis=a.mesh_axis)
         emb, valid = self.device_stack()
         return kops.fused_retrieve_stack(query_emb, emb, tau=tau,
                                          valid=valid, targets=targets,
@@ -1227,12 +1455,15 @@ class ArenaStackView:
 
     def search(self, query_emb: jnp.ndarray, *, tau: float
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        return kops.similarity_stack(query_emb, self.arena.emb, tau=tau,
-                                     valid=self.arena.device_windows())
+        a = self.arena
+        return kops.similarity_stack(query_emb, a.emb, tau=tau,
+                                     valid=a.device_windows(),
+                                     mesh=a.mesh, mesh_axis=a.mesh_axis)
 
     def fused_retrieve(self, query_emb: jnp.ndarray, targets: jnp.ndarray,
                        *, tau: float, n_topk: int) -> "kops.FusedRetrieval":
+        a = self.arena
         return kops.fused_retrieve_stack(
-            query_emb, self.arena.emb, tau=tau,
-            valid=self.arena.device_windows(), targets=targets,
-            n_topk=n_topk)
+            query_emb, a.emb, tau=tau, valid=a.device_windows(),
+            targets=targets, n_topk=n_topk,
+            mesh=a.mesh, mesh_axis=a.mesh_axis)

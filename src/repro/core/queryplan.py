@@ -582,6 +582,11 @@ def _execute_group(manager, group: ExecutionGroup, specs, embedded,
     else:
         manager.io_stats["fused_scans"] += 1
     manager.io_stats["group_scans"] += 1
+    a = stack.arena_view()
+    if a is not None and a.n_shards > 1:
+        # this launch fanned out per shard under shard_map (the kernel
+        # entries count bytes; this counts launches at the plan level)
+        manager.io_stats["sharded_group_scans"] += 1
     timings["similarity"] = time.perf_counter() - t0
 
     # --- strategy post-processing + expansion ----------------------------

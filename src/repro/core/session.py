@@ -137,7 +137,8 @@ class SessionState:
         self.pending_base = 0                 # abs index of pending[0]
         self.key = jax.random.key(cfg.seed)
         self.stats = {"frames_seen": 0, "frames_embedded": 0,
-                      "partitions": 0, "clusters": 0}
+                      "partitions": 0, "clusters": 0,
+                      "frames_trimmed": 0}
 
     def next_keys(self, n: int) -> jnp.ndarray:
         """Advance the session PRNG chain n steps — the same chain a
@@ -214,9 +215,10 @@ def commit_jobs(sessions: Mapping[int, SessionState], embedder,
     session sheds exactly as many oldest rows as the tick closed (O(1)
     head motion; the new rows overwrite the evicted positions within
     the same deferred scatter), so a 24/7 stream ingests forever in
-    constant DEVICE memory. (The raw-frame ``FrameStore`` is the
-    paper's NVMe archive layer and stays append-only — bounding/
-    spilling it is a ROADMAP open item.)"""
+    constant DEVICE memory. The raw-frame ``FrameStore`` (the paper's
+    NVMe archive layer) is bounded separately: after the tick's commits
+    the manager trims every host frame below the session's live
+    references — see ``SessionManager._trim_archives``."""
     if not jobs:
         return 0
     frames = np.concatenate([j.frames for j in jobs])
@@ -255,7 +257,8 @@ class SessionManager:
 
     def __init__(self, cfg: VenusConfig, embedder, embed_dim: int,
                  aux_models: Sequence[AuxModel] = (), annotation_fn=None,
-                 *, use_arena: bool = True):
+                 *, use_arena: bool = True, mesh=None,
+                 double_buffer: Optional[bool] = None):
         self.cfg = cfg
         self.embedder = embedder
         self.embed_dim = embed_dim
@@ -268,7 +271,16 @@ class SessionManager:
         # rows inside shared (S, capacity, …) super-buffers, so queries
         # never restack grown sessions. use_arena=False restores the
         # PR-2 detached memories + version-cached MemoryStack path.
+        # mesh= shards the arena's slot axis over the mesh's "model"
+        # axis (slabs of contiguous slots per device; the fused scans
+        # fan out per shard under shard_map). double_buffer defaults on
+        # whenever a mesh is given — ingest scatters target the back
+        # buffer set so they overlap the fused query launches — and can
+        # be forced either way explicitly.
         self.use_arena = use_arena
+        self.mesh = mesh
+        self.double_buffer = ((mesh is not None) if double_buffer is None
+                              else double_buffer)
         self.arena: Optional[MemoryArena] = None
         # per-session scans vs fused cross-session scans, for the "one
         # scan per query tick" invariant (tests/benches assert on these);
@@ -277,7 +289,9 @@ class SessionManager:
         # (MUST stay 0 in arena mode — the zero-restack invariant)
         self.io_stats = {"scans": 0, "fused_scans": 0,
                          "device_expands": 0, "group_scans": 0,
-                         "stack_rebuilds": 0, "sessions_closed": 0}
+                         "stack_rebuilds": 0, "sessions_closed": 0,
+                         "sharded_group_scans": 0,
+                         "archive_trimmed_frames": 0}
         # summed io_stats of closed sessions' memories: keeps the
         # service-level mem_* monitoring counters monotonic across
         # stream closes (a popped session takes its live dict with it)
@@ -326,7 +340,9 @@ class SessionManager:
                 self.arena = MemoryArena(self.cfg.memory_capacity,
                                          self.embed_dim,
                                          self.cfg.member_cap,
-                                         index_dtype=self.cfg.index_dtype)
+                                         index_dtype=self.cfg.index_dtype,
+                                         mesh=self.mesh,
+                                         double_buffer=self.double_buffer)
             arena, slot = self.arena, self.arena.add_session()
         self.sessions[sid] = SessionState(sid, self.cfg, self.embed_dim,
                                           arena=arena, slot=slot,
@@ -381,14 +397,17 @@ class SessionManager:
             release_pending(st, closed)
         t_clu = time.perf_counter()
         n_emb = commit_jobs(self.sessions, self.embedder, jobs)
+        n_trim = self._trim_archives(chunks.keys())
         t_emb = time.perf_counter()
         return {"segment": t_seg - t0, "cluster": t_clu - t_seg,
-                "embed_insert": t_emb - t_clu, "embedded": float(n_emb)}
+                "embed_insert": t_emb - t_clu, "embedded": float(n_emb),
+                "trimmed": float(n_trim)}
 
     def flush(self, sids: Optional[Sequence[int]] = None) -> None:
         """Close every open partition and embed the remainder batched."""
         jobs: List[EmbedJob] = []
-        for sid in (sids if sids is not None else list(self.sessions)):
+        sids = list(sids if sids is not None else self.sessions)
+        for sid in sids:
             st = self.sessions[sid]
             for part in st.segmenter.flush():
                 jobs.append(cluster_stage(st, part, self.aux_models,
@@ -396,6 +415,35 @@ class SessionManager:
             st.pending = []
             st.pending_base = st.stats["frames_seen"]
         commit_jobs(self.sessions, self.embedder, jobs)
+        self._trim_archives(sids)
+
+    def _trim_archives(self, sids) -> int:
+        """Bound the raw-frame archive: after a tick's commits, drop
+        every host frame BELOW all of a session's live references —
+        the min over (a) index_frame ids and count-masked member
+        reservoirs of the rows inside the current ring window (so
+        ``cluster_merge``'s folded members keep their evicted frames
+        reachable and retained) and (b) ``pending_base`` (frames not
+        yet clustered). Only sessions with a window eviction policy
+        trim — under ``eviction="none"`` nothing ever leaves the
+        window, so the historical keep-everything archive contract is
+        untouched. NOTE the ``uniform`` query strategy draws arbitrary
+        archive ids and is therefore incompatible with window-evicting
+        sessions (it always was — their index no longer spans the
+        stream); trimmed ids now fail fast in ``FrameStore.get`` rather
+        than silently aliasing."""
+        trimmed = 0
+        for sid in sids:
+            st = self.sessions[sid]
+            if st.memory.eviction.name == "none":
+                continue
+            keep = min(st.memory.min_live_frame(), st.pending_base)
+            n = st.frames.trim(keep)
+            if n:
+                st.stats["frames_trimmed"] += n
+                trimmed += n
+        self.io_stats["archive_trimmed_frames"] += trimmed
+        return trimmed
 
     # -------------------------------------------------------------- querying
     #

@@ -10,13 +10,16 @@ interpret mode, on TPU they compile natively.
 
 from __future__ import annotations
 
+import functools
 import os
 from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ref
+from repro.launch.sharding import mesh_axis_size, shard_map
 
 _BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "jnp")
 
@@ -48,9 +51,20 @@ def _interpret() -> bool:
 # in the fused epilogue (no (S,Q,N) score tensor materialised);
 # ``dense_score_launches`` counts scans that DID materialise dense
 # scores (the BOLT/MDF/AKS fallback and every legacy ``search`` call).
+#
+# Sharded-arena accounting: ``sharded_stack_launches`` counts stack
+# scans fanned out per shard via shard_map (K > 1 — the K == 1 mesh
+# short-circuits to the single-device path, bit-identically);
+# ``shard_gather_bytes`` accumulates the bytes the sharded launches'
+# OUTPUTS move across shard boundaries — O(S·Q·(T+K)) for the fused
+# scan, O(S·Q·N) for a dense sharded scan — computed from the actual
+# output arrays, so the "only the epilogue crosses" contract is a
+# counter assertion, not a claim. (Counters are host-side: they bump at
+# the dispatch call site, never inside a traced shard_map body.)
 _scan_counts = {"similarity": 0, "similarity_stack": 0,
                 "scan_bytes": 0, "fused_draw_launches": 0,
-                "dense_score_launches": 0}
+                "dense_score_launches": 0,
+                "sharded_stack_launches": 0, "shard_gather_bytes": 0}
 
 
 def _count_scan_bytes(index) -> None:
@@ -118,25 +132,75 @@ def similarity(query, index, *, tau: float, valid
     return ref.similarity_ref(query, index, tau=tau, valid=valid)
 
 
-def similarity_stack(query, index, *, tau: float, valid
+def _similarity_stack_local(query, index, valid, *, tau: float,
+                            backend: str):
+    """The per-(shard-local) stack-scan body — every lane's math is
+    per-session, so running it on an (S/K, …) slab inside shard_map is
+    exactly the single-device computation restricted to that slab."""
+    if backend == "pallas":
+        from repro.kernels import similarity as sk
+        sims, m, l = sk.similarity_scan_stack(query, index, valid, tau=tau,
+                                              interpret=_interpret())
+        vmask = ref.as_valid_mask(valid, index.shape[1])
+        logits = jnp.where(vmask[:, None, :], sims / tau, ref.NEG_INF)
+        probs = jnp.exp(logits - m) / jnp.maximum(l, 1e-30)
+        return sims.astype(query.dtype), probs
+    return ref.similarity_stack_ref(query, index, tau=tau, valid=valid)
+
+
+def _valid_spec(valid, mesh_axis: str) -> P:
+    """Partition spec of the canonical ``valid`` operand: the leading
+    axis is always the session/slot axis, whatever the form (mask,
+    sizes vector, or (S, 2) windows)."""
+    return P(mesh_axis) if valid.ndim == 1 else P(mesh_axis, None)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tau", "backend", "mesh", "mesh_axis"))
+def _similarity_stack_sharded(query, index, valid, *, tau: float,
+                              backend: str, mesh, mesh_axis: str):
+    """Fan the stack scan out per shard: each device scans its
+    contiguous slot slab with the identical kernel/oracle body; the
+    out_specs stitch the per-shard (S/K, Q, N) outputs back together."""
+    local = functools.partial(_similarity_stack_local, tau=tau,
+                              backend=backend)
+    sp = P(mesh_axis, None, None)
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(sp, sp, _valid_spec(valid, mesh_axis)),
+        out_specs=(sp, sp))(query, index, valid)
+
+
+def similarity_stack(query, index, *, tau: float, valid, mesh=None,
+                     mesh_axis: str = "model"
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Cross-session scan: query (S,Q,d) × index (S,N,d) + valid —
     a (S,N) bool mask, a (S,) int sizes vector, or a (S,2) int
     ``[start,size)`` ring-window array (arena/eviction paths: the
     per-session valid masks derive on device — ``ref.as_valid_mask``)
-    -> (sims (S,Q,N), probs (S,Q,N)) in ONE kernel launch."""
+    -> (sims (S,Q,N), probs (S,Q,N)) in ONE kernel launch.
+
+    With ``mesh`` carrying K > 1 shards on ``mesh_axis`` the launch runs
+    as a shard_map over contiguous slot slabs (the sharded arena's
+    placement); per-lane math makes the result bit-identical to the
+    single-device scan. K == 1 (or mesh None) short-circuits to the
+    plain path."""
     _scan_counts["similarity_stack"] += 1
     _scan_counts["dense_score_launches"] += 1
     _count_scan_bytes(index)
-    if _BACKEND == "pallas":
-        from repro.kernels import similarity as sk
-        sims, m, l = sk.similarity_scan_stack(query, index, valid, tau=tau,
-                                              interpret=_interpret())
-        valid = ref.as_valid_mask(valid, index.shape[1])
-        logits = jnp.where(valid[:, None, :], sims / tau, ref.NEG_INF)
-        probs = jnp.exp(logits - m) / jnp.maximum(l, 1e-30)
-        return sims.astype(query.dtype), probs
-    return ref.similarity_stack_ref(query, index, tau=tau, valid=valid)
+    if mesh is not None and mesh_axis_size(mesh, mesh_axis) > 1:
+        assert query.shape[0] % mesh_axis_size(mesh, mesh_axis) == 0, \
+            (query.shape, dict(mesh.shape))
+        sims, probs = _similarity_stack_sharded(
+            query, index, valid, tau=tau, backend=_BACKEND, mesh=mesh,
+            mesh_axis=mesh_axis)
+        _scan_counts["sharded_stack_launches"] += 1
+        _scan_counts["shard_gather_bytes"] += int(
+            sims.size * sims.dtype.itemsize
+            + probs.size * probs.dtype.itemsize)
+        return sims, probs
+    return _similarity_stack_local(query, index, valid, tau=tau,
+                                   backend=_BACKEND)
 
 
 class FusedRetrieval(NamedTuple):
@@ -151,8 +215,50 @@ class FusedRetrieval(NamedTuple):
     p_max: jnp.ndarray          # (S, Q, 1) f32 max probability
 
 
+def _fused_retrieve_local(query, index, valid, targets, *, tau: float,
+                          n_topk: int, backend: str):
+    """Per-(shard-local) fused-retrieval body: the raw 8-tuple
+    ``(cnt, dp, p_last, tv, ti, m, l, p_max)``, every output with a
+    leading session axis. All draw counts and top-k indices are
+    SESSION-LOCAL lane indices, so a shard computes them for its slab
+    without any global-id offset — the gather is a pure concatenation."""
+    if backend == "pallas":
+        from repro.kernels import similarity as sk
+        cnt, dp, p_last, tv, ti, m, l = sk.fused_retrieve_scan_stack(
+            query, index, valid, targets, tau=tau, n_topk=n_topk,
+            interpret=_interpret())
+        # the max-probability lane is exp(m − m)/l == 1/l, bitwise the
+        # value a max over this backend's materialised probs would find
+        p_max = 1.0 / jnp.maximum(l, 1e-30)
+        return cnt, dp, p_last, tv, ti, m, l, p_max
+    # plain tuple (not the NamedTuple): shard_map matches out_specs
+    # against the pytree STRUCTURE, which must be backend-independent
+    return tuple(ref.fused_retrieve_stack_ref(query, index, valid,
+                                              targets, tau=tau,
+                                              n_topk=n_topk))
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "n_topk", "backend",
+                                             "mesh", "mesh_axis"))
+def _fused_retrieve_sharded(query, index, valid, targets, *, tau: float,
+                            n_topk: int, backend: str, mesh,
+                            mesh_axis: str):
+    """Per-shard fused launches: each device runs the full fused scan on
+    its contiguous slot slab; only the O(S·Q·(T+K)) epilogue outputs are
+    stitched across shards (the top-M candidate gather — no recall loss
+    because draws/top-k are per-lane and lanes never span shards)."""
+    local = functools.partial(_fused_retrieve_local, tau=tau,
+                              n_topk=n_topk, backend=backend)
+    sp = P(mesh_axis, None, None)
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(sp, sp, _valid_spec(valid, mesh_axis), sp),
+        out_specs=(sp,) * 8)(query, index, valid, targets)
+
+
 def fused_retrieve_stack(query, index, *, tau: float, valid, targets,
-                         n_topk: int) -> FusedRetrieval:
+                         n_topk: int, mesh=None,
+                         mesh_axis: str = "model") -> FusedRetrieval:
     """One-launch fused retrieval: query (S,Q,d) × index (S,N,d) fp32 or
     int8 + valid (any canonical mask form) + targets (S,Q,T) inverse-CDF
     draw targets -> draws, drawn probabilities, top-k, softmax stats.
@@ -163,23 +269,30 @@ def fused_retrieve_stack(query, index, *, tau: float, valid, targets,
     without ever materialising them on the fused (pallas) backend. The
     clip-to-cap-1 / p_last substitution for targets beyond the
     accumulated total mass happens here, identically for both backends.
+
+    With ``mesh`` carrying K > 1 shards on ``mesh_axis``, the launch
+    fans out per shard over contiguous slot slabs and only the epilogue
+    outputs — O(S·Q·(T+K)) bytes, counted into ``shard_gather_bytes`` —
+    cross shard boundaries; K == 1 (or mesh None) short-circuits to the
+    single-device launch, bit-identically.
     """
     _scan_counts["similarity_stack"] += 1
     _scan_counts["fused_draw_launches"] += 1
     _count_scan_bytes(index)
     n = index.shape[1]
-    if _BACKEND == "pallas":
-        from repro.kernels import similarity as sk
-        cnt, dp, p_last, tv, ti, m, l = sk.fused_retrieve_scan_stack(
-            query, index, valid, targets, tau=tau, n_topk=n_topk,
-            interpret=_interpret())
-        # the max-probability lane is exp(m − m)/l == 1/l, bitwise the
-        # value a max over this backend's materialised probs would find
-        p_max = 1.0 / jnp.maximum(l, 1e-30)
+    if mesh is not None and mesh_axis_size(mesh, mesh_axis) > 1:
+        assert query.shape[0] % mesh_axis_size(mesh, mesh_axis) == 0, \
+            (query.shape, dict(mesh.shape))
+        r = _fused_retrieve_sharded(query, index, valid, targets, tau=tau,
+                                    n_topk=n_topk, backend=_BACKEND,
+                                    mesh=mesh, mesh_axis=mesh_axis)
+        _scan_counts["sharded_stack_launches"] += 1
+        _scan_counts["shard_gather_bytes"] += int(
+            sum(a.size * a.dtype.itemsize for a in r))
     else:
-        r = ref.fused_retrieve_stack_ref(query, index, valid, targets,
-                                         tau=tau, n_topk=n_topk)
-        cnt, dp, p_last, tv, ti, m, l, p_max = r
+        r = _fused_retrieve_local(query, index, valid, targets, tau=tau,
+                                  n_topk=n_topk, backend=_BACKEND)
+    cnt, dp, p_last, tv, ti, m, l, p_max = r
     draws = jnp.clip(cnt, 0, n - 1).astype(jnp.int32)
     drawn_p = jnp.where(cnt >= n, p_last, dp)
     return FusedRetrieval(draws, drawn_p, tv, ti, m, l, p_max)

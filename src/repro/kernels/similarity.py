@@ -19,6 +19,18 @@ in a single kernel launch. Capacities that do not divide the block size
 are zero-padded by the wrapper (pad lanes are masked invalid, so they
 contribute nothing to the softmax statistics).
 
+Shard-local entry contract (the sharded arena rides on this): every
+stack kernel in this module is a pure per-lane program — softmax
+statistics, inverse-CDF draw counts, and top-k selections are all
+computed within one session lane, and the lane indices they emit are
+SESSION-LOCAL. ``kernels.ops`` therefore fans a stack launch out over
+mesh shards by calling these very kernels on each shard's contiguous
+``(S/K, capacity, ·)`` slot slab inside shard_map, with NO kernel
+changes and no global-id rebasing: the sharded result is the
+single-device result restricted to the slab, concatenated. Anything
+added here must preserve that property (no cross-lane reductions, no
+absolute-S-dependent constants) or the arena's shard fan-out breaks.
+
 Layer invariant — what ``valid`` means here: the kernels never trust
 row CONTENT, only the mask. Callers may pass the mask in any of the
 three canonical forms (explicit ``(S, N)`` bool; ``(S,)`` prefix sizes;

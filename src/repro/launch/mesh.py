@@ -43,6 +43,17 @@ def make_host_mesh(model: int = 1):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def make_memory_mesh(shards: int = 0):
+    """The mesh a sharded ``MemoryArena`` / ``DistributedVenusMemory``
+    wants: all ``shards`` devices on the ``model`` axis (the slot/row
+    slab axis), data=1. ``shards=0`` means every visible device. Under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=K`` (set BEFORE
+    jax initialises — the multi-device CI lane exports it as a job env
+    var) this gives K host-platform shards for equivalence testing."""
+    n = len(jax.devices())
+    return make_host_mesh(model=n if shards <= 0 else min(shards, n))
+
+
 def data_axes(mesh) -> Tuple[str, ...]:
     names = mesh.axis_names
     return tuple(a for a in names if a in ("pod", "data"))

@@ -29,9 +29,35 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+# One shard_map resolution for the whole repo: the memory-arena scan
+# fan-out (kernels/ops.py) and the pod-level DistributedVenusMemory
+# (core/distributed_memory.py) import THIS symbol, so the two sharded
+# retrieval paths cannot drift across jax versions.
+try:                                   # jax ≥0.5 re-exports at top level
+    shard_map = jax.shard_map
+except AttributeError:                 # jax ≤0.4.x
+    from jax.experimental.shard_map import shard_map
+
 # sentinel for "the FSDP axis" — resolved per mode/mesh
 FSDP = "__fsdp__"
 MODEL = "model"
+
+
+def mesh_axis_size(mesh, axis: str = MODEL) -> int:
+    """Shard count of ``axis`` on ``mesh`` (1 when mesh is None or the
+    axis is absent) — the K every sharded-memory path branches on."""
+    if mesh is None:
+        return 1
+    return dict(mesh.shape).get(axis, 1)
+
+
+def memory_sharding(mesh, ndim: int, axis: str = MODEL) -> NamedSharding:
+    """Placement of a ``(S, …)`` memory super-buffer: the leading slot
+    axis is split into contiguous per-device slabs over ``axis``, every
+    trailing dim replicated. The arena places its ``(S, capacity, ·)``
+    buffers with this, and the shard_map scan entries consume the same
+    spec — slot slabs never move between placement and scan."""
+    return NamedSharding(mesh, P(axis, *([None] * (ndim - 1))))
 
 # (path regex, right-aligned logical spec)
 _PARAM_RULES: Sequence[Tuple[str, Tuple]] = (

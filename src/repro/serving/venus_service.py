@@ -155,13 +155,25 @@ class VenusService:
         ``kops_fused_draw_launches`` counts scans resolved in the fused
         epilogue (no dense score tensor), ``kops_dense_score_launches``
         counts scans that DID materialise (S, Q, cap) scores (the
-        BOLT/MDF/AKS fallback and legacy ``search`` calls)."""
+        BOLT/MDF/AKS fallback and legacy ``search`` calls).
+
+        Sharded deployments additionally surface ``arena_shards`` (the
+        mesh ``model``-axis size the arena slot axis is slabbed over),
+        ``sharded_group_scans`` (plan-level launches that fanned out
+        under shard_map), ``kops_sharded_stack_launches`` (kernel-level
+        count of the same), and ``kops_shard_gather_bytes`` — the bytes
+        of per-shard scan OUTPUTS crossing shard boundaries at the
+        candidate gather: O(S·Q·(T+K)) fused, no O(S·Q·capacity) term,
+        which is the whole point of scanning shard-locally.
+        ``archive_trimmed_frames`` counts host frames the bounded
+        ``FrameStore`` dropped below the live eviction windows."""
         out: Dict[str, int] = dict(self.manager.io_stats)
         for k, v in kops.scan_counts().items():
             out[f"kops_{k}"] = v
         if self.manager.arena is not None:
             for k, v in self.manager.arena.io_stats.items():
                 out[f"arena_{k}"] = v
+            out["arena_shards"] = self.manager.arena.n_shards
         mem_sums = dict(self.manager.closed_mem_stats)
         for st in self.manager.sessions.values():
             for k, v in st.memory.io_stats.items():

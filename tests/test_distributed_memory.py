@@ -52,3 +52,51 @@ def test_distributed_insert_capacity_and_ids():
         assert 0 <= io < 8
     with pytest.raises(RuntimeError):
         mem.insert(np.zeros((5, 4), np.float32))
+
+
+def test_empty_index_returns_zero_mass():
+    """REGRESSION: searching an empty (or all-invalid) index must return
+    all-zero probabilities — a plain softmax over the all-(-1e30) masked
+    logits would hand back a UNIFORM distribution over garbage candidate
+    ids, and any sampler downstream would happily draw them."""
+    mesh = _mesh()
+    rng = np.random.default_rng(1)
+    q = rng.normal(0, 1, (16,)).astype(np.float32)
+    mem = DistributedVenusMemory(64, 16, mesh, top_m=8)
+    ids, probs = mem.search(q, tau=0.1)
+    probs = np.asarray(probs)
+    assert probs.shape == np.asarray(ids).shape
+    np.testing.assert_array_equal(probs, 0.0)      # nothing drawable
+    # and the fix must not perturb the non-empty case: mass sums to 1
+    mem.insert(rng.normal(0, 1, (5, 16)).astype(np.float32))
+    _, probs = mem.search(q, tau=0.1)
+    np.testing.assert_allclose(float(np.asarray(probs).sum()), 1.0,
+                               rtol=1e-5)
+
+
+def test_insert_scatter_is_capacity_independent():
+    """REGRESSION: the insert scatter DONATES both sharded operands, so
+    an insert moves O(rows·dim) bytes — never a copy of the whole
+    (capacity, d) buffer. ``scatter_bytes`` counts exactly what crosses;
+    identical inserts into a 16× larger memory must count identical
+    bytes. (On CPU, XLA donation is a no-op copy under the hood, so the
+    counter — not buffer identity — is the portable assertion.)"""
+    mesh = _mesh()
+    rng = np.random.default_rng(2)
+    dim, n = 16, 8
+    rows = rng.normal(0, 1, (n, dim)).astype(np.float32)
+    small = DistributedVenusMemory(64, dim, mesh, top_m=8)
+    large = DistributedVenusMemory(1024, dim, mesh, top_m=8)
+    small.insert(rows)
+    large.insert(rows)
+    expect = n * (dim * 4 + 1 + 4)     # rows f32 + valid bool + pos i32
+    assert small.io_stats["scatter_bytes"] == expect
+    assert large.io_stats["scatter_bytes"] == expect
+    assert small.io_stats["scatter_rows"] == n
+    assert large.io_stats["inserts"] == 1
+    # donation took effect on backends that support it: the pre-insert
+    # buffers were consumed by the in-place update
+    if jax.default_backend() != "cpu":
+        emb0 = large._emb
+        large.insert(rows)
+        assert emb0.is_deleted()

@@ -442,3 +442,95 @@ def test_create_session_eviction_override():
     s_window = mgr.create_session(eviction="sliding_window")
     assert mgr[s_default].memory.eviction.name == "none"
     assert mgr[s_window].memory.eviction.name == "sliding_window"
+
+
+# ---------------------------------------------------------------------------
+# bounded raw-frame archive (FrameStore trim below the eviction window)
+# ---------------------------------------------------------------------------
+
+
+def test_framestore_trim_keeps_absolute_ids():
+    from repro.core.memory import FrameStore
+    fs = FrameStore()
+    fs.append(np.arange(10, dtype=np.float32).reshape(10, 1, 1, 1))
+    assert len(fs) == 10 and fs.retained == 10 and fs.base == 0
+    assert fs.trim(4) == 4
+    assert len(fs) == 10          # absolute id space never shrinks
+    assert fs.retained == 6 and fs.base == 4 and fs.trimmed == 4
+    assert float(fs.get([4])[0].ravel()[0]) == 4.0    # ids stay stable
+    with pytest.raises(IndexError):
+        fs.get([3])               # trimmed ids fail fast, never alias
+    assert fs.trim(2) == 0        # backwards trim is a no-op
+    assert fs.trim(10 ** 9) == 6  # clamped to what exists
+    fs.append(np.arange(2, dtype=np.float32).reshape(2, 1, 1, 1))
+    assert len(fs) == 12 and fs.retained == 2
+
+
+def test_min_live_frame_consults_reservoirs():
+    """The trim horizon is the min over index_frame ids AND count-masked
+    member reservoirs — and cluster_merge's folded members keep an
+    EVICTED row's frames live through the surviving cluster."""
+    rng = np.random.default_rng(3)
+    cap, dim = 4, 8
+    mem = VenusMemory(cap, dim, member_cap=8, eviction="cluster_merge")
+    assert mem.min_live_frame() == np.iinfo(np.int64).max   # empty
+    base = rng.normal(0, 1, (dim,)).astype(np.float32)
+    rows = np.stack([base, -base, base + 1e-3,
+                     rng.normal(0, 1, (dim,))]).astype(np.float32)
+    mem.insert_batch(rows, scene_ids=[0] * 4,
+                     index_frames=[10, 11, 12, 13],
+                     member_lists=[[10, 7], [11], [12], [13]])
+    assert mem.min_live_frame() == 7          # reservoir beats index id
+    # evict row 0 (frame 10): its reservoir folds into the near-dup at
+    # physical 2, so frames 7 and 10 stay reachable — and LIVE
+    mem.insert_batch(rng.normal(0, 1, (1, dim)).astype(np.float32),
+                     scene_ids=[1], index_frames=[14],
+                     member_lists=[[14]])
+    assert mem.io_stats["reservoir_merges"] == 1
+    assert mem.min_live_frame() == 7
+    # a plain sliding window would have released them
+    mem2 = VenusMemory(cap, dim, member_cap=8, eviction="sliding_window")
+    mem2.insert_batch(rows, scene_ids=[0] * 4,
+                      index_frames=[10, 11, 12, 13],
+                      member_lists=[[10, 7], [11], [12], [13]])
+    mem2.insert_batch(rng.normal(0, 1, (1, dim)).astype(np.float32),
+                      scene_ids=[1], index_frames=[14],
+                      member_lists=[[14]])
+    assert mem2.min_live_frame() == 11
+
+
+def test_archive_bounded_under_sliding_window():
+    """ACCEPTANCE: a sliding-window session's raw-frame archive stays
+    bounded — the manager trims host frames below every live reference
+    after each tick — while every frame a query can return remains
+    readable. ``eviction='none'`` sessions keep the historical
+    keep-everything contract."""
+    worlds = _worlds(2)
+    mgr = _manager(EVICT_CFG)
+    s_win = mgr.create_session()
+    s_none = mgr.create_session(eviction="none")
+    for t in range(8):                         # far past capacity
+        chunks = {s_win: worlds[0]}
+        if t < 2:            # keep the "none" session under capacity
+            chunks[s_none] = worlds[1]
+        _tick(mgr, chunks, t)
+    st = mgr[s_win]
+    assert st.memory.io_stats["evicted_rows"] > 0
+    assert st.stats["frames_trimmed"] > 0
+    assert st.frames.retained < st.stats["frames_seen"]
+    assert len(st.frames) == st.stats["frames_seen"]    # ids absolute
+    # never trimmed past a live reference or the un-clustered pending
+    assert st.frames.base <= min(st.memory.min_live_frame(),
+                                 st.pending_base)
+    assert mgr.io_stats["archive_trimmed_frames"] >= \
+        st.stats["frames_trimmed"]
+    # the un-evicting session keeps everything
+    st_n = mgr[s_none]
+    assert st_n.frames.retained == st_n.stats["frames_seen"]
+    assert st_n.stats["frames_trimmed"] == 0
+    # every frame a query returns is still readable from the archive
+    qes = _queries(worlds, [0, 0], seed0=400)
+    for res in mgr.query_batch_cross([s_win, s_win], query_embs=qes):
+        if len(res.frame_ids):
+            assert st.frames.get(res.frame_ids).shape[0] == \
+                len(res.frame_ids)

@@ -1,0 +1,271 @@
+"""Sharded MemoryArena: slab placement, shard_map scan fan-out, and the
+double-buffered ingest/query overlap (PR-7 tentpole acceptance).
+
+Equivalence discipline:
+
+* K == 1 (mesh with a size-1 ``model`` axis, or no mesh) must be
+  BIT-identical to the unsharded arena path — the kops entries
+  short-circuit, growth stays single-slot, the free-list stays LIFO.
+* K > 1 (host-platform devices via
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the
+  multi-device CI lane) must match the single-device oracle
+  draw-for-draw: the stack kernels are pure per-lane programs, so a
+  shard_map over contiguous slot slabs is exactly the single-device
+  computation restricted to each slab, concatenated.
+* Double buffering is a pure scheduling change: the front buffer after
+  every flush is bitwise the single-buffer state.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.memory import MemoryArena
+from repro.core.session import SessionManager, VenusConfig
+from repro.data.video import (OracleEmbedder, PixelEmbedder, VideoWorld,
+                              WorldConfig)
+from repro.kernels import ops as kops
+from repro.launch.mesh import make_host_mesh
+
+CFG = VenusConfig(max_partition_len=48)
+EVICT_CFG = VenusConfig(max_partition_len=32, memory_capacity=16,
+                        eviction="sliding_window")
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count")
+
+
+def _worlds(n):
+    return [VideoWorld(WorldConfig(n_scenes=4 + s, seed=20 + s))
+            for s in range(n)]
+
+
+def _manager(cfg, **kw):
+    return SessionManager(cfg, PixelEmbedder(dim=64), embed_dim=64, **kw)
+
+
+def _chunk(w, t, chunk=64):
+    lo = (t * chunk) % max(w.total_frames - chunk, 1)
+    return w.frames[lo:lo + chunk]
+
+
+def _tick(mgr, stream_map, t):
+    mgr.ingest_tick({sid: _chunk(w, t) for sid, w in stream_map.items()})
+
+
+def _queries(worlds, qsids, seed0):
+    return np.stack([
+        OracleEmbedder(worlds[s], dim=64).embed_queries(
+            worlds[s].make_queries(1, seed=seed0 + j))[0]
+        for j, s in enumerate(qsids)])
+
+
+def _assert_same_results(got, want):
+    assert len(got) == len(want)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a.draws, b.draws)
+        np.testing.assert_array_equal(a.frame_ids, b.frame_ids)
+        assert a.n_drawn == b.n_drawn
+
+
+def _drive(mgr, worlds, sids, *, ticks=3, seed0=300):
+    for t in range(ticks):
+        _tick(mgr, dict(zip(sids, worlds)), t)
+    qsids = [0, 1, 1, 0]
+    qes = _queries(worlds, qsids, seed0=seed0)
+    return mgr.query_batch_cross([sids[s] for s in qsids], query_embs=qes)
+
+
+# ---------------------------------------------------------------------------
+# K == 1: the sharded code path must BE the PR-6 path
+# ---------------------------------------------------------------------------
+
+
+def test_k1_mesh_bit_identical_to_unsharded():
+    """A mesh whose model axis has size 1 must change nothing: same
+    draws, same frame ids, same arena buffer bytes, single-slot growth,
+    and zero sharded launches counted."""
+    worlds = _worlds(2)
+    mesh = make_host_mesh(model=1)
+    plain = _manager(CFG)
+    sharded = _manager(CFG, mesh=mesh, double_buffer=False)
+    sids_p = [plain.create_session() for _ in range(2)]
+    sids_s = [sharded.create_session() for _ in range(2)]
+    assert sids_s == sids_p
+    kops.reset_scan_counts()
+    want = _drive(plain, worlds, sids_p)
+    got = _drive(sharded, worlds, sids_s)
+    _assert_same_results(got, want)
+    assert sharded.arena.n_shards == 1
+    assert sharded.arena.n_sessions == plain.arena.n_sessions == 2
+    assert sharded.arena.virgin_slots == []
+    np.testing.assert_array_equal(np.asarray(sharded.arena.emb),
+                                  np.asarray(plain.arena.emb))
+    assert kops.scan_counts()["sharded_stack_launches"] == 0
+    assert sharded.io_stats["sharded_group_scans"] == 0
+
+
+def test_double_buffer_front_matches_single_buffer():
+    """double_buffer=True is a pure scheduling change: after every tick
+    the front super-buffers are bitwise the single-buffer state and
+    queries answer identically; the back set trails by one tick and the
+    replay counters account for it."""
+    worlds = _worlds(2)
+    single = _manager(CFG, double_buffer=False)
+    double = _manager(CFG, double_buffer=True)
+    sids = [single.create_session() for _ in range(2)]
+    sids_d = [double.create_session() for _ in range(2)]
+    for t in range(3):
+        _tick(single, dict(zip(sids, worlds)), t)
+        _tick(double, dict(zip(sids_d, worlds)), t)
+        for name in ("emb", "members", "member_count", "index_frame"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(double.arena, name)),
+                np.asarray(getattr(single.arena, name)),
+                err_msg=f"front {name} diverged at tick {t}")
+    qsids = [0, 1, 1]
+    qes = _queries(worlds, qsids, seed0=310)
+    _assert_same_results(
+        double.query_batch_cross([sids_d[s] for s in qsids],
+                                 query_embs=qes),
+        single.query_batch_cross([sids[s] for s in qsids],
+                                 query_embs=qes))
+    io = double.arena.io_stats
+    assert io["double_flushes"] == io["appends"] > 0
+    assert io["carry_rows"] > 0          # later ticks replayed a carry
+    assert single.arena.io_stats["double_flushes"] == 0
+
+
+def test_double_buffer_slot_recycle_filters_carry():
+    """A recycled slot must not be resurrected by last tick's replay:
+    close a session right after an ingest tick (its blocks sit in the
+    carry), recycle the slot, ingest — the recycled lane must hold only
+    the new tenant's rows."""
+    worlds = _worlds(3)
+    mgr = _manager(CFG, double_buffer=True)
+    sids = [mgr.create_session() for _ in range(2)]
+    _tick(mgr, dict(zip(sids, worlds[:2])), 0)      # carry now holds both
+    freed = mgr[sids[1]].memory.slot
+    mgr.close_session(sids[1])
+    new_sid = mgr.create_session()
+    assert mgr[new_sid].memory.slot == freed
+    _tick(mgr, {sids[0]: worlds[0], new_sid: worlds[2]}, 1)
+    _tick(mgr, {sids[0]: worlds[0], new_sid: worlds[2]}, 2)
+    # the recycled lane's window rows all belong to the new tenant
+    fresh = _manager(CFG, double_buffer=False)
+    f0 = fresh.create_session()
+    f1 = fresh.create_session()
+    _tick(fresh, {f0: worlds[0]}, 0)
+    _tick(fresh, {f0: worlds[0], f1: worlds[2]}, 1)
+    _tick(fresh, {f0: worlds[0], f1: worlds[2]}, 2)
+    qes = _queries(worlds, [0, 2], seed0=320)
+    _assert_same_results(
+        mgr.query_batch_cross([sids[0], new_sid], query_embs=qes),
+        fresh.query_batch_cross([f0, f1], query_embs=qes))
+
+
+# ---------------------------------------------------------------------------
+# K > 1: multi-device equivalence (host-platform CI lane)
+# ---------------------------------------------------------------------------
+
+
+@multi_device
+def test_block_growth_and_balanced_placement():
+    """The arena grows in blocks of K slots (S always divides the mesh
+    axis); allocation balances live sessions across slabs and recycles
+    freed slots without growth."""
+    k = len(jax.devices())
+    mesh = make_host_mesh(model=k)
+    a = MemoryArena(16, 8, mesh=mesh)
+    assert a.n_shards == k
+    s0 = a.add_session()
+    assert a.n_sessions == k and a.io_stats["grows"] == 1
+    assert sorted(a.virgin_slots + [s0]) == list(range(k))
+    slots = [a.add_session() for _ in range(k - 1)]
+    assert a.virgin_slots == [] and a.io_stats["grows"] == 1
+    # one session per slab: perfectly balanced
+    assert sorted([s0] + slots) == list(range(k))
+    assert {a._shard_of(s) for s in [s0] + slots} == set(range(k))
+    nxt = a.add_session()                     # block 2
+    assert a.n_sessions == 2 * k and a.io_stats["grows"] == 2
+    a.release_slot(nxt)
+    assert a.add_session() == nxt             # recycled, not grown
+    assert a.io_stats["grows"] == 2 and a.io_stats["slot_reuses"] == 1
+    # placement respects the sharding spec end to end
+    assert a.emb.shape[0] % k == 0
+
+
+@multi_device
+def test_sharded_manager_matches_single_device_oracle():
+    """ACCEPTANCE: a manager whose arena is sharded over every
+    host-platform device answers draw-for-draw like the unsharded
+    oracle — including a sliding-window (ring) session — while the
+    fused launches fan out per shard."""
+    k = len(jax.devices())
+    worlds = _worlds(2)
+    mesh = make_host_mesh(model=k)
+    oracle = _manager(CFG)
+    mgr = _manager(CFG, mesh=mesh)
+    assert mgr.double_buffer                   # defaults on with a mesh
+    sids_o = [oracle.create_session() for _ in range(2)]
+    sids_s = [mgr.create_session() for _ in range(2)]
+    kops.reset_scan_counts()
+    want = _drive(oracle, worlds, sids_o, seed0=330)
+    got = _drive(mgr, worlds, sids_s, seed0=330)
+    _assert_same_results(got, want)
+    c = kops.scan_counts()
+    assert c["sharded_stack_launches"] > 0
+    assert mgr.io_stats["sharded_group_scans"] > 0
+    assert mgr.io_stats["stack_rebuilds"] == 0
+    assert mgr.arena.n_sessions % k == 0
+
+
+@multi_device
+def test_sharded_eviction_ring_matches_oracle():
+    """Ring sessions (sliding-window eviction past capacity) keep their
+    window semantics under sharding: the (S, 2) windows array is the
+    shard-local valid operand, split along the slot axis."""
+    k = len(jax.devices())
+    worlds = _worlds(2)
+    mesh = make_host_mesh(model=k)
+    oracle = _manager(EVICT_CFG)
+    mgr = _manager(EVICT_CFG, mesh=mesh)
+    sids_o = [oracle.create_session() for _ in range(2)]
+    sids_s = [mgr.create_session() for _ in range(2)]
+    for t in range(8):                         # far past capacity
+        _tick(oracle, dict(zip(sids_o, worlds)), t)
+        _tick(mgr, dict(zip(sids_s, worlds)), t)
+    for sid in sids_s:
+        assert mgr[sid].memory.io_stats["evicted_rows"] > 0
+    qsids = [0, 1, 1]
+    qes = _queries(worlds, qsids, seed0=340)
+    _assert_same_results(
+        mgr.query_batch_cross([sids_s[s] for s in qsids], query_embs=qes),
+        oracle.query_batch_cross([sids_o[s] for s in qsids],
+                                 query_embs=qes))
+
+
+@multi_device
+def test_shard_gather_bytes_exclude_dense_term():
+    """The fused sharded launch's cross-shard traffic is its OUTPUTS —
+    O(S·Q·(T+K)) candidate/draw arrays — never an O(S·Q·capacity)
+    score tensor. The counter measures actual output sizes, so a dense
+    leak would show up immediately."""
+    k = len(jax.devices())
+    worlds = _worlds(2)
+    mesh = make_host_mesh(model=k)
+    mgr = _manager(CFG, mesh=mesh)
+    sids = [mgr.create_session() for _ in range(2)]
+    for t in range(2):
+        _tick(mgr, dict(zip(sids, worlds)), t)
+    kops.reset_scan_counts()
+    qes = _queries(worlds, [0, 1], seed0=350)
+    mgr.query_batch_cross(sids, query_embs=qes)
+    c = kops.scan_counts()
+    assert c["sharded_stack_launches"] >= 1
+    s, q, cap = mgr.arena.n_sessions, 1, mgr.arena.capacity
+    dense = s * q * cap * 4                   # one f32 (S,Q,cap) tensor
+    assert 0 < c["shard_gather_bytes"] < dense
