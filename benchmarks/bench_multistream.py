@@ -34,6 +34,14 @@ The edge box serves N concurrent camera streams with real-time queries
   bound, and the double-buffered ingest/query overlap. The K>1 arms
   need ``XLA_FLAGS=--xla_force_host_platform_device_count``.
 
+* **hierarchical tier** (``--tiered``) — a session holding 4× its fine
+  capacity of consolidated history answers the same top-k plan via the
+  flat 1×-capacity scan (``coarse=False``) vs the two-stage
+  coarse→fine retrieval: per-plan scanned bytes from the ``kops``
+  counters (two-stage asserted below flat), effective capacity,
+  restacks (asserted 0), plus the recall-vs-compression-ratio curve
+  from ``bench_fig10.recall_vs_compression``.
+
 ``--json`` additionally writes every emitted row (plus run metadata) to
 ``BENCH_multistream.json`` so CI can upload a machine-readable perf
 artifact per commit; the ``trajectory`` key accumulates a compact
@@ -672,6 +680,119 @@ def _bench_shards(n_sessions: int, n_queries: int, chunk: int = 64,
               **overlap})
 
 
+def _bench_tiered(n_queries: int = 2, smoke: bool = False):
+    """Hierarchical consolidation tier: flat scan vs two-stage retrieval.
+
+    One session ingests 4× its fine capacity of clustered rows under
+    ``eviction="consolidate"`` (evictees fold into the coarse summary
+    tier), then answers the SAME top-k plan two ways:
+
+    * ``flat`` — ``execute(plan, coarse=False)``: the escape hatch, one
+      1×-capacity fused scan (the tier is ignored);
+    * ``two_stage`` — coarse scan over the summary tier → top-B winner
+      blocks → gathered fine candidates → second fused scan.
+
+    Reports wall time, per-plan scanned index bytes from the ``kops``
+    counters (coarse + gathered fine vs the flat scan — the bandwidth
+    claim, asserted), the effective capacity ratio (reachable history ÷
+    rows streamed per query), and ``stack_rebuilds`` (asserted 0 — the
+    tier rides the arena, nothing restacks). The recall-vs-compression
+    curve from ``bench_fig10.recall_vs_compression`` runs last so its
+    rows land in the same JSON artifact."""
+    from benchmarks.bench_fig10 import recall_vs_compression
+    from repro.core.queryplan import QuerySpec
+    from repro.kernels import ops as kops
+
+    dim, capacity, n_clusters = 32, 512, 8
+    cfg = VenusConfig(memory_capacity=capacity, member_cap=8,
+                      eviction="consolidate", coarse_capacity=64,
+                      coarse_block=32, coarse_topb=4)
+
+    class _DirectEmbedder:
+        def embed_queries(self, texts):
+            raise AssertionError("bench passes explicit embeddings")
+
+        def embed_frames(self, frames, aux=None, frame_ids=None):
+            raise AssertionError("bench inserts rows directly")
+
+    def _unit(rows):
+        rows = np.asarray(rows, np.float32)
+        return rows / (np.linalg.norm(rows, axis=-1, keepdims=True)
+                       + 1e-12)
+
+    rng = np.random.default_rng(7)
+    cen = _unit(rng.normal(size=(n_clusters, dim)))
+    total = 4 * capacity
+    labels = rng.integers(0, n_clusters, size=total)
+    rows = _unit(cen[labels] + 0.05 * rng.normal(size=(total, dim)))
+
+    mgr = SessionManager(cfg, _DirectEmbedder(), embed_dim=dim)
+    sid = mgr.create_session()
+    mem = mgr.sessions[sid].memory
+    t0 = time.perf_counter()
+    for lo in range(0, total, 64):
+        batch = rows[lo:lo + 64]
+        fids = np.arange(lo, lo + len(batch))
+        with mgr.arena.deferred_appends():
+            mem.insert_batch(batch, scene_ids=[0] * len(batch),
+                             index_frames=fids,
+                             member_lists=[[int(f)] for f in fids])
+    ingest_s = time.perf_counter() - t0
+    a = mgr.arena
+    assert a.has_consolidated()
+
+    specs = [QuerySpec(sid=sid, embedding=cen[qi % n_clusters],
+                       strategy="topk", budget=8)
+             for qi in range(n_queries)]
+    plan = mgr.plan(specs)
+    mgr.execute(plan, coarse=False)                # warm both paths
+    mgr.execute(plan)
+    reps = 2 if smoke else 10
+    out = {}
+    for name, coarse in (("flat", False), ("two_stage", True)):
+        kops.reset_scan_counts()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            mgr.execute(plan, coarse=coarse)
+        dt = time.perf_counter() - t0
+        c = kops.scan_counts()
+        out[name] = c["scan_bytes"] / reps          # bytes per plan
+        derived = {"queries": n_queries, "reps": reps,
+                   "fine_capacity": capacity, "ingested_rows": total,
+                   "scan_bytes_per_plan": int(out[name]),
+                   "stack_rebuilds": mgr.io_stats["stack_rebuilds"],
+                   "ingest_s": f"{ingest_s:.3f}"}
+        if coarse:
+            per_query_rows = (a.n_coarse
+                              + c["fine_gather_rows"] // (reps
+                                                          * n_queries))
+            derived.update(
+                {"coarse_scan_bytes_per_plan":
+                     c["coarse_scan_bytes"] // reps,
+                 "fine_gather_rows_per_query":
+                     c["fine_gather_rows"] // (reps * n_queries),
+                 "two_stage_scans": c["two_stage_scans"],
+                 "scanned_rows_per_query": per_query_rows,
+                 "effective_capacity":
+                     f"{total / per_query_rows:.1f}x"})
+        emit(f"multistream/tiered_{name}", dt, derived)
+
+    # the tentpole invariants, asserted where CI runs them: the tier
+    # never restacks and the two-stage scan undercuts the flat one
+    assert mgr.io_stats["stack_rebuilds"] == 0, mgr.io_stats
+    assert out["two_stage"] < out["flat"], out
+    emit("multistream/tiered_scan_bytes_reduction", 0.0,
+         {"scan_bytes_reduction":
+          f"{out['flat'] / max(out['two_stage'], 1):.2f}x",
+          "history_vs_flat_reach":
+          f"{total / capacity:.0f}x"})
+
+    # recall-vs-compression-ratio curve (fig10 accuracy harness) — the
+    # rows land in this bench's JSON sink / trajectory
+    recall_vs_compression(ratios=(1, 4) if smoke else (1, 2, 4, 8),
+                          prefix="multistream/tiered_recall")
+
+
 def _bench_incremental_index(capacity: int = 16384, dim: int = 256,
                              rounds: int = 20):
     """Post-ingest query latency: incremental append vs full re-upload."""
@@ -710,7 +831,7 @@ def _bench_incremental_index(capacity: int = 16384, dim: int = 256,
 
 
 ALL_PARTS = ("ingest", "query", "cross", "plan", "arena", "churn",
-             "fused", "shards", "incremental")
+             "fused", "shards", "tiered", "incremental")
 JSON_PATH = "BENCH_multistream.json"
 
 
@@ -753,6 +874,8 @@ def run(n_sessions: int = 4, n_queries: int = 8, *,
         if "shards" in parts:
             _bench_shards(n_sessions, n_queries, ticks=ticks,
                           n_scenes=n_scenes)
+        if "tiered" in parts:
+            _bench_tiered(smoke=smoke)
         if "incremental" in parts:
             _bench_incremental_index()
     finally:
@@ -812,6 +935,11 @@ if __name__ == "__main__":
                          "bytes, ingest/query overlap; K>1 arms need "
                          "XLA_FLAGS=--xla_force_host_platform_device_"
                          "count)")
+    ap.add_argument("--tiered", action="store_true",
+                    help="the hierarchical consolidation-tier bench "
+                         "(flat vs two-stage scanned bytes, effective "
+                         "capacity, restacks==0) + the recall-vs-"
+                         "compression-ratio curve from bench_fig10")
     ap.add_argument("--index-dtype", choices=("float32", "int8"),
                     default="int8",
                     help="index dtype for the fused bench's quantised "
@@ -823,12 +951,13 @@ if __name__ == "__main__":
     args = ap.parse_args()
     parts = None
     if args.cross or args.arena or args.churn or args.fused or \
-            args.shards:
+            args.shards or args.tiered:
         parts = (("cross", "plan") if args.cross else ()) + \
                 (("arena",) if args.arena else ()) + \
                 (("churn",) if args.churn else ()) + \
                 (("fused",) if args.fused else ()) + \
-                (("shards",) if args.shards else ())
+                (("shards",) if args.shards else ()) + \
+                (("tiered",) if args.tiered else ())
     run(args.sessions, args.queries, smoke=args.smoke, parts=parts,
         json_path=JSON_PATH if args.json else None,
         index_dtype=args.index_dtype)

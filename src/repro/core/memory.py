@@ -347,23 +347,67 @@ class ClusterMergeEviction(SlidingWindowEviction):
         mem._advance_head(need)
 
 
+class ConsolidationEviction(ClusterMergeEviction):
+    """Hierarchical-tier eviction (paper §IV-C): each evictee folds
+    into the session's COARSE summary tier — a running count-weighted
+    centroid + merged member reservoir + frame-window metadata — before
+    the ring head advances. Unlike ``cluster_merge``, the fold target
+    is a dedicated summary row (not a surviving fine row), so evicted
+    history stays retrievable through the two-stage coarse→fine scan
+    long after it leaves the fine window. Requires the memory to be
+    built with ``coarse_capacity > 0``."""
+
+    name = "consolidate"
+
+    def evict(self, mem: "VenusMemory", need: int) -> None:
+        mem._consolidate(need, self.threshold)
+        mem._advance_head(need)
+
+
 _EVICTION_POLICIES = {
     "none": EvictionPolicy,
     "sliding_window": SlidingWindowEviction,
     "cluster_merge": ClusterMergeEviction,
+    "consolidate": ConsolidationEviction,
 }
 
 
-def get_eviction_policy(policy) -> EvictionPolicy:
+def get_eviction_policy(policy,
+                        threshold: Optional[float] = None) -> EvictionPolicy:
     """Resolve a policy by name (an ``EvictionPolicy`` instance passes
-    through, so callers can hand in a configured one)."""
+    through, so callers can hand in a configured one). ``threshold``
+    configures the similarity cut of the merge/consolidation policies
+    (``VenusConfig.merge_threshold`` reaches here); it is validated to
+    (0, 1] — cosine similarity of normalised rows — and rejected for
+    policies that have no threshold to configure."""
+    if threshold is not None:
+        if not (0.0 < float(threshold) <= 1.0):
+            raise ValueError(
+                f"merge threshold must be in (0, 1], got {threshold!r}")
     if isinstance(policy, EvictionPolicy):
         return policy
     try:
-        return _EVICTION_POLICIES[policy]()
+        cls = _EVICTION_POLICIES[policy]
     except KeyError:
         raise KeyError(f"unknown eviction policy {policy!r}; known: "
                        f"{sorted(_EVICTION_POLICIES)}") from None
+    if threshold is not None and issubclass(cls, ClusterMergeEviction):
+        return cls(float(threshold))
+    return cls()
+
+
+def coarse_rows_for(capacity: int, coarse_capacity: int,
+                    coarse_block: int) -> Tuple[int, int]:
+    """Geometry of the coarse tier: ``(n_blocks, n_coarse)`` where rows
+    ``[0, n_blocks)`` are block summaries of the fine tier (one per
+    ``coarse_block`` physical fine rows) and rows ``[n_blocks,
+    n_coarse)`` are consolidated summaries of evicted history. A
+    ``coarse_capacity`` of 0 disables the tier entirely."""
+    if coarse_capacity <= 0:
+        return 0, 0
+    assert coarse_block > 0, coarse_block
+    n_blocks = -(-capacity // coarse_block)        # ceil div
+    return n_blocks, n_blocks + coarse_capacity
 
 
 class MemoryArena:
@@ -427,7 +471,8 @@ class MemoryArena:
 
     def __init__(self, capacity: int, dim: int, member_cap: int = 128,
                  index_dtype: str = "float32", *, mesh=None,
-                 mesh_axis: str = "model", double_buffer: bool = False):
+                 mesh_axis: str = "model", double_buffer: bool = False,
+                 coarse_capacity: int = 0, coarse_block: int = 64):
         self.capacity = capacity
         self.dim = dim
         self.member_cap = member_cap
@@ -444,6 +489,23 @@ class MemoryArena:
         self.index_frame: Optional[jnp.ndarray] = None   # (S, cap)
         self.sizes = np.zeros((0,), np.int32)            # host mirror
         self.heads = np.zeros((0,), np.int32)            # ring starts
+        # coarse tier: (S, n_coarse, ·) summary super-buffers — rows
+        # [0, n_blocks) summarise fine blocks, [n_blocks, n_coarse)
+        # hold consolidated (evicted) history. Always f32: centroids
+        # are running means and the scan normalises rows anyway, so
+        # quantising the tiny coarse stack buys nothing.
+        self.coarse_capacity = coarse_capacity
+        self.coarse_block = coarse_block
+        self.n_blocks, self.n_coarse = coarse_rows_for(
+            capacity, coarse_capacity, coarse_block)
+        self.coarse_emb: Optional[jnp.ndarray] = None        # (S, Nc, d)
+        self.coarse_members: Optional[jnp.ndarray] = None    # (S, Nc, K)
+        self.coarse_member_count: Optional[jnp.ndarray] = None  # (S, Nc)
+        self.coarse_index_frame: Optional[jnp.ndarray] = None   # (S, Nc)
+        self.coarse_valid = np.zeros((0, self.n_coarse), bool)  # host
+        self._coarse_valid_dev: Optional[jnp.ndarray] = None
+        self._coarse_valid_ver = -1
+        self._coarse_deferred: Optional[list] = None
         self.free_slots: List[int] = []    # released, awaiting reuse
         self.virgin_slots: List[int] = []  # grown, never yet allocated
         self.version = 0          # bumped per append / grow / release
@@ -460,7 +522,8 @@ class MemoryArena:
         self._carry: list = []
         self.io_stats = {"grows": 0, "appends": 0, "appended_rows": 0,
                          "slot_releases": 0, "slot_reuses": 0,
-                         "double_flushes": 0, "carry_rows": 0}
+                         "double_flushes": 0, "carry_rows": 0,
+                         "coarse_appends": 0, "coarse_appended_rows": 0}
 
     @property
     def double_buffer(self) -> bool:
@@ -515,6 +578,12 @@ class MemoryArena:
             # drop the reset slot from the replay queue — last tick's
             # rows must not resurrect inside a recycled slot
             self._carry = [b for b in self._carry if b[0] != slot]
+        if self.n_coarse:
+            (self.coarse_emb, self.coarse_members, self.coarse_member_count,
+             self.coarse_index_frame) = _arena_reset_slot(
+                self.coarse_emb, self.coarse_members,
+                self.coarse_member_count, self.coarse_index_frame, js)
+            self.coarse_valid[slot] = False
         self.sizes[slot] = 0
         self.heads[slot] = 0
         self.version += 1
@@ -549,6 +618,19 @@ class MemoryArena:
                                             jnp.int32)
             bk["index_frame"] = self._grow(bk["index_frame"], (s, cap),
                                            jnp.int32)
+        if self.n_coarse:
+            nc = self.n_coarse
+            self.coarse_emb = self._grow(self.coarse_emb, (s, nc, d),
+                                         jnp.float32)
+            self.coarse_members = self._grow(self.coarse_members,
+                                             (s, nc, k), jnp.int32)
+            self.coarse_member_count = self._grow(
+                self.coarse_member_count, (s, nc), jnp.int32)
+            self.coarse_index_frame = self._grow(
+                self.coarse_index_frame, (s, nc), jnp.int32)
+            self.coarse_valid = np.concatenate(
+                [self.coarse_valid,
+                 np.zeros((self.n_shards, nc), bool)])
         self.sizes = np.append(self.sizes,
                                np.zeros((self.n_shards,), np.int32))
         self.heads = np.append(self.heads,
@@ -598,6 +680,10 @@ class MemoryArena:
         self.free_slots.append(slot)
         self.sizes[slot] = 0
         self.heads[slot] = 0
+        if self.n_coarse:
+            # mask the lane's whole coarse tier out of stage-1 scans;
+            # the stale device rows reset at reuse time like fine rows
+            self.coarse_valid[slot] = False
         self.version += 1
         self.io_stats["slot_releases"] += 1
 
@@ -614,11 +700,17 @@ class MemoryArena:
             yield
             return
         self._deferred = []
+        self._coarse_deferred = []
         try:
             yield
         finally:
             pending, self._deferred = self._deferred, None
+            coarse, self._coarse_deferred = self._coarse_deferred, None
             self._flush(pending)
+            # coarse rows land AFTER the fine flush: block summaries are
+            # host-computed from the post-tick mirrors, so their device
+            # write must not be overtaken by this tick's fine scatter
+            self._flush_coarse(coarse)
 
     def append(self, slot: int, pos: int, emb_rows: np.ndarray,
                member_rows: np.ndarray, member_cnts: np.ndarray,
@@ -642,6 +734,76 @@ class MemoryArena:
             self._deferred.append(block)
             return len(emb_rows)
         return self._flush([block])
+
+    def append_coarse(self, slot: int, pos: int, emb_rows: np.ndarray,
+                      member_rows: np.ndarray, member_cnts: np.ndarray,
+                      if_rows: np.ndarray, valid_rows: np.ndarray) -> int:
+        """Queue one session's coarse summary-row run at ``[slot,
+        pos:pos+n]`` — block summaries (``pos < n_blocks``) or
+        consolidated rows. Inside a ``deferred_appends`` window the run
+        rides the tick's coarse scatter; otherwise it lands immediately.
+        ``valid_rows`` is each row's stage-1 visibility (an empty fine
+        block's summary is masked out)."""
+        assert self.n_coarse, "arena has no coarse tier"
+        block = (slot, pos, np.asarray(emb_rows, np.float32),
+                 np.asarray(member_rows), np.asarray(member_cnts),
+                 np.asarray(if_rows),
+                 np.asarray(valid_rows, bool))
+        if self._coarse_deferred is not None:
+            self._coarse_deferred.append(block)
+            return len(emb_rows)
+        return self._flush_coarse([block])
+
+    def _flush_coarse(self, blocks: list) -> int:
+        """One donated scatter per coarse super-buffer for the tick's
+        summary-row writes (same last-write-wins dedup + pow2 bucketing
+        as the fine scatter). The coarse tier is single-buffered even
+        under ``double_buffer`` — summary rows are tiny, and a stale-by-
+        one-tick coarse row only shifts which fine blocks stage 2
+        gathers, never correctness."""
+        if not blocks:
+            return 0
+        slots = np.concatenate([np.full(len(e), s, np.int32)
+                                for s, _, e, *_ in blocks])
+        poss = np.concatenate([np.arange(p, p + len(e), dtype=np.int32)
+                               for _, p, e, *_ in blocks])
+        emb_rows = np.concatenate([b[2] for b in blocks])
+        mem_rows = np.concatenate([b[3] for b in blocks])
+        cnt_rows = np.concatenate([b[4] for b in blocks])
+        if_rows = np.concatenate([b[5] for b in blocks])
+        val_rows = np.concatenate([b[6] for b in blocks])
+        lin = slots.astype(np.int64) * self.n_coarse + poss
+        if len(np.unique(lin)) != len(lin):
+            last = {l: i for i, l in enumerate(lin)}
+            keep = np.sort(np.fromiter(last.values(), np.int64))
+            slots, poss = slots[keep], poss[keep]
+            emb_rows, mem_rows = emb_rows[keep], mem_rows[keep]
+            cnt_rows, if_rows = cnt_rows[keep], if_rows[keep]
+            val_rows = val_rows[keep]
+        self.coarse_valid[slots, poss] = val_rows
+        n = len(slots)
+        b = pow2_bucket(n, lo=8)
+        if b != n:                       # pad = rewrite row 0 in place
+            reps = np.zeros((b - n,), np.int32)
+            slots = np.concatenate([slots, slots[reps]])
+            poss = np.concatenate([poss, poss[reps]])
+            emb_rows = np.concatenate([emb_rows, emb_rows[reps]])
+            mem_rows = np.concatenate([mem_rows, mem_rows[reps]])
+            cnt_rows = np.concatenate([cnt_rows, cnt_rows[reps]])
+            if_rows = np.concatenate([if_rows, if_rows[reps]])
+        sl, po = jnp.asarray(slots), jnp.asarray(poss)
+        self.coarse_emb = _arena_scatter_rows(
+            self.coarse_emb, jnp.asarray(emb_rows), sl, po)
+        self.coarse_members = _arena_scatter_rows(
+            self.coarse_members, jnp.asarray(mem_rows), sl, po)
+        self.coarse_member_count, self.coarse_index_frame = \
+            _arena_scatter_meta(
+                self.coarse_member_count, self.coarse_index_frame,
+                jnp.asarray(cnt_rows), jnp.asarray(if_rows), sl, po)
+        self.version += 1
+        self.io_stats["coarse_appends"] += 1
+        self.io_stats["coarse_appended_rows"] += b
+        return b
 
     def _scatter_into(self, bufs: dict, blocks: list) -> Tuple[dict, int]:
         """Apply ``blocks`` to the buffer set ``bufs``: ONE donated
@@ -780,6 +942,24 @@ class MemoryArena:
                                               capacity=self.capacity)
         self._valid_version = self.version
 
+    def device_coarse_valid(self) -> jnp.ndarray:
+        """(S, n_coarse) bool stage-1 mask for the coarse tier, cached
+        per version (coarse validity is sparse and host-authored, so the
+        explicit mask form is the canonical valid operand here)."""
+        assert self.n_coarse, "arena has no coarse tier"
+        if (self._coarse_valid_dev is None
+                or self._coarse_valid_ver != self.version):
+            self._coarse_valid_dev = jnp.asarray(self.coarse_valid)
+            self._coarse_valid_ver = self.version
+        return self._coarse_valid_dev
+
+    def has_consolidated(self) -> bool:
+        """True iff any lane holds a consolidated summary row — the
+        two-stage trigger: until the first consolidation the coarse tier
+        is "empty" and every query takes the flat scan unchanged."""
+        return bool(self.n_coarse
+                    and self.coarse_valid[:, self.n_blocks:].any())
+
 
 class VenusMemory:
     """Index layer: packed vector store + cluster member reservoirs."""
@@ -788,14 +968,16 @@ class VenusMemory:
                  seed: int = 0, *, incremental: bool = True,
                  arena: Optional[MemoryArena] = None,
                  slot: Optional[int] = None,
-                 eviction="none", index_dtype: str = "float32"):
+                 eviction="none", index_dtype: str = "float32",
+                 merge_threshold: Optional[float] = None,
+                 coarse_capacity: int = 0, coarse_block: int = 64):
         # the exact integer pick (u * cnt) >> U_BITS must fit in int32
         assert member_cap <= (1 << (31 - U_BITS)), member_cap
         self.capacity = capacity
         self.dim = dim
         self.member_cap = member_cap
         self.incremental = incremental
-        self.eviction = get_eviction_policy(eviction)
+        self.eviction = get_eviction_policy(eviction, merge_threshold)
         # int8 option: host mirrors stay f32 (exact math for merges and
         # host expansion); the DEVICE copy is quantised — arena-backed
         # memories quantise inside the arena's append scatter, detached
@@ -818,6 +1000,28 @@ class VenusMemory:
             assert slot is not None and incremental
             assert (arena.capacity, arena.dim, arena.member_cap) == \
                 (capacity, dim, member_cap)
+            assert (arena.coarse_capacity, arena.coarse_block) == \
+                (coarse_capacity, coarse_block), \
+                "memory and arena disagree on coarse-tier geometry"
+        # coarse consolidation tier: host-authoritative summary rows.
+        # Block summaries ([0, n_blocks)) are computed on demand from
+        # the fine mirrors; only the consolidated region keeps host
+        # state (running centroid / merged reservoir / frame window).
+        self.coarse_capacity = coarse_capacity
+        self.coarse_block = coarse_block
+        self.n_blocks, self.n_coarse = coarse_rows_for(
+            capacity, coarse_capacity, coarse_block)
+        if self.n_coarse:
+            cc = coarse_capacity
+            self._coarse_emb = np.zeros((cc, dim), np.float32)
+            self._coarse_members = np.zeros((cc, member_cap), np.int32)
+            self._coarse_count = np.zeros((cc,), np.int32)
+            self._coarse_ifr = np.zeros((cc,), np.int32)
+            self._coarse_weight = np.zeros((cc,), np.int64)
+            self._coarse_fid_lo = np.zeros((cc,), np.int64)
+            self._coarse_fid_hi = np.zeros((cc,), np.int64)
+        self._coarse_csize = 0          # consolidated rows in use
+        self._dirty_blocks: set = set()  # fine blocks to re-summarise
         self._emb = np.zeros((capacity, dim), np.float32)
         self._members = np.zeros((capacity, member_cap), np.int32)
         self._member_count = np.zeros((capacity,), np.int32)
@@ -842,7 +1046,8 @@ class VenusMemory:
                          "appended_index_frame_rows": 0,
                          "scans": 0, "host_expand_gathers": 0,
                          "device_expand_gathers": 0,
-                         "evicted_rows": 0, "reservoir_merges": 0}
+                         "evicted_rows": 0, "reservoir_merges": 0,
+                         "consolidated_rows": 0}
 
     def reset_io_stats(self) -> None:
         """Zero the transfer/scan counters in place (the dict identity is
@@ -924,6 +1129,10 @@ class VenusMemory:
         self._size += n
         self.version += 1
         self._sync_device(runs)
+        if self.n_coarse:
+            for pos, _off, cnt in runs:
+                self._mark_blocks_dirty(pos, cnt)
+            self._refresh_block_summaries()
         return (tail + np.arange(n)) % self.capacity
 
     def _advance_head(self, need: int) -> None:
@@ -932,9 +1141,132 @@ class VenusMemory:
         (masked invalid by the new window) until the incoming write
         overwrites them, so evicting moves zero bytes."""
         assert 0 <= need <= self._size, (need, self._size)
+        if self.n_coarse and need:
+            run1 = min(need, self.capacity - self._head)
+            self._mark_blocks_dirty(self._head, run1)
+            if run1 < need:
+                self._mark_blocks_dirty(0, need - run1)
         self._head = (self._head + need) % self.capacity
         self._size -= need
         self.io_stats["evicted_rows"] += need
+
+    # ------------------------------------------------- coarse consolidation
+    def _mark_blocks_dirty(self, pos: int, cnt: int) -> None:
+        """Fine physical rows ``[pos, pos+cnt)`` changed validity or
+        contents — their block summaries must be recomputed."""
+        if cnt <= 0:
+            return
+        lo = pos // self.coarse_block
+        hi = (pos + cnt - 1) // self.coarse_block
+        self._dirty_blocks.update(range(lo, hi + 1))
+
+    def _refresh_block_summaries(self) -> None:
+        """Recompute the summary row (centroid over currently-valid
+        fine rows) of every dirty block and push it to the arena's
+        coarse tier, riding the tick's deferred scatter. Block
+        summaries carry NO reservoir: a stage-1 win on a block expands
+        into the block's own fine rows, which carry theirs."""
+        if self.arena is None or not self._dirty_blocks:
+            self._dirty_blocks.clear()
+            return
+        cap, blk = self.capacity, self.coarse_block
+        idx = np.arange(cap)
+        live = ((idx - self._head) % cap) < self._size
+        k = self.member_cap
+        for b in sorted(self._dirty_blocks):
+            rows = slice(b * blk, min((b + 1) * blk, cap))
+            v = live[rows]
+            any_v = bool(v.any())
+            if any_v:
+                cen = self._emb[rows][v].mean(0, dtype=np.float64)
+                ifr = int(self._index_frame[rows][v][0])
+            else:
+                cen = np.zeros((self.dim,), np.float64)
+                ifr = 0
+            self.arena.append_coarse(
+                self.slot, b, cen.astype(np.float32)[None],
+                np.zeros((1, k), np.int32), np.zeros((1,), np.int32),
+                np.asarray([ifr], np.int32), np.asarray([any_v]))
+        self._dirty_blocks.clear()
+
+    def _consolidate(self, need: int, threshold: float) -> None:
+        """Fold the ``need`` oldest rows into the consolidated region of
+        the coarse tier before they leave the fine window: running
+        count-weighted centroid, merged member reservoir (evictee's
+        index_frame + members, up to ``member_cap``), widened frame
+        window. Fold target: the most similar existing summary when its
+        cosine clears ``threshold``, a fresh summary row while the
+        region has space, else the most similar row unconditionally (a
+        full tier degrades to coarser summaries, never to data loss)."""
+        if self.n_coarse == 0:
+            raise RuntimeError(
+                "eviction='consolidate' needs coarse_capacity > 0 "
+                "(VenusConfig(coarse_capacity=...))")
+        need = min(need, self._size)
+        if need <= 0:
+            return
+        phys = (self._head + np.arange(need)) % self.capacity
+        touched = set()
+        for pe in phys:
+            e = self._emb[pe].astype(np.float64)
+            cs = self._coarse_csize
+            best, best_sim = -1, -np.inf
+            if cs:
+                en = e / (np.linalg.norm(e) + 1e-12)
+                c = self._coarse_emb[:cs].astype(np.float64)
+                cn = c / (np.linalg.norm(c, axis=-1, keepdims=True)
+                          + 1e-12)
+                best = int(np.argmax(cn @ en))
+                best_sim = float(cn[best] @ en)
+            cnt_e = int(self._member_count[pe])
+            fids = np.concatenate(
+                [[int(self._index_frame[pe])],
+                 self._members[pe, :cnt_e].astype(np.int64)])
+            if best >= 0 and (best_sim >= threshold
+                              or cs >= self.coarse_capacity):
+                r, w = best, int(self._coarse_weight[best])
+                self._coarse_emb[r] = (
+                    (self._coarse_emb[r].astype(np.float64) * w + e)
+                    / (w + 1)).astype(np.float32)
+                self._coarse_weight[r] = w + 1
+                ct = int(self._coarse_count[r])
+                take = min(len(fids), self.member_cap - ct)
+                if take > 0:
+                    self._coarse_members[r, ct:ct + take] = fids[:take]
+                    self._coarse_count[r] = ct + take
+                self._coarse_fid_lo[r] = min(int(self._coarse_fid_lo[r]),
+                                             int(fids.min()))
+                self._coarse_fid_hi[r] = max(int(self._coarse_fid_hi[r]),
+                                             int(fids.max()))
+            else:
+                r = cs
+                self._coarse_csize = cs + 1
+                self._coarse_emb[r] = e.astype(np.float32)
+                self._coarse_weight[r] = 1
+                m = min(len(fids), self.member_cap)
+                self._coarse_members[r, :m] = fids[:m]
+                self._coarse_members[r, m:] = 0
+                self._coarse_count[r] = m
+                self._coarse_ifr[r] = int(self._index_frame[pe])
+                self._coarse_fid_lo[r] = int(fids.min())
+                self._coarse_fid_hi[r] = int(fids.max())
+            touched.add(r)
+        self.io_stats["consolidated_rows"] += int(need)
+        for r in sorted(touched):
+            self._resync_coarse(r)
+
+    def _resync_coarse(self, row: int) -> None:
+        """Push one consolidated summary row to the arena's coarse tier
+        (position offset past the block-summary region)."""
+        if self.arena is None:
+            return
+        self.arena.append_coarse(
+            self.slot, self.n_blocks + row,
+            self._coarse_emb[row:row + 1],
+            self._coarse_members[row:row + 1],
+            self._coarse_count[row:row + 1],
+            self._coarse_ifr[row:row + 1],
+            np.asarray([True]))
 
     def _merge_into_survivors(self, need: int, threshold: float) -> None:
         """Cluster-merge-aware eviction: before the ``need`` oldest rows
@@ -1080,15 +1412,21 @@ class VenusMemory:
         current ring window. Reservoirs are consulted FIRST-CLASS, so
         cluster_merge's folded members keep their raw frames reachable
         (and untrimmed) long after their own index row left the window.
+        Consolidated summary rows count as live references too: their
+        merged reservoirs are what a two-stage query expands, so their
+        frame windows pin the archive exactly like fine reservoirs do.
         An empty memory returns int64-max: it constrains nothing."""
-        if self._size == 0:
-            return int(np.iinfo(np.int64).max)
-        phys = (self._head + np.arange(self._size)) % self.capacity
-        lo = int(self._index_frame[phys].min())
-        cnt = self._member_count[phys]
-        live = np.arange(self.member_cap)[None, :] < cnt[:, None]
-        if live.any():
-            lo = min(lo, int(self._members[phys][live].min()))
+        lo = int(np.iinfo(np.int64).max)
+        if self._size:
+            phys = (self._head + np.arange(self._size)) % self.capacity
+            lo = int(self._index_frame[phys].min())
+            cnt = self._member_count[phys]
+            live = np.arange(self.member_cap)[None, :] < cnt[:, None]
+            if live.any():
+                lo = min(lo, int(self._members[phys][live].min()))
+        if self.n_coarse and self._coarse_csize:
+            lo = min(lo, int(self._coarse_fid_lo[:self._coarse_csize]
+                             .min()))
         return lo
 
     def detach_from_arena(self) -> None:

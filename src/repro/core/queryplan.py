@@ -82,6 +82,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import retrieval as rt
+from repro.core import tiering
 from repro.core.memory import VenusMemory, expand_gather
 
 
@@ -473,13 +474,21 @@ def _fused_akr_post(draws, drawn_p, p_max, members, counts, u, *, theta,
     return akr, fids, ok
 
 
-def execute_plan(manager, plan: QueryPlan, *, fused: bool = True
-                 ) -> List[QueryResult]:
+def execute_plan(manager, plan: QueryPlan, *, fused: bool = True,
+                 coarse: bool = True) -> List[QueryResult]:
     """Run every group of the plan: ONE scan launch per group (the fused
     retrieval scan for sampling/AKR/top-k groups when ``fused``, the
     dense ``similarity_scan_stack`` otherwise), vmapped strategy
     post-processing, device-side expansion. Returns results in the
-    plan's spec order."""
+    plan's spec order.
+
+    ``coarse`` is the two-stage escape hatch: when True (default) and
+    the arena's hierarchical tier holds at least one consolidated
+    summary row, fused groups run coarse-scan → winner-block-gather →
+    candidate-scan (``tiering.two_stage_retrieve``) instead of the flat
+    capacity scan. Until the first consolidation — and always with
+    ``coarse=False`` — the flat path runs UNCHANGED (bit-identical to a
+    coarse-less build); PRNG chains advance identically either way."""
     specs = plan.specs
     results: List[Optional[QueryResult]] = [None] * len(specs)
     t0 = time.perf_counter()
@@ -493,7 +502,7 @@ def execute_plan(manager, plan: QueryPlan, *, fused: bool = True
     t_embed = time.perf_counter() - t0
     for group in plan.groups:
         _execute_group(manager, group, specs, embedded, results, t_embed,
-                       fused=fused)
+                       fused=fused, coarse=coarse)
     return results
 
 
@@ -534,7 +543,8 @@ def _group_keys(manager, group: ExecutionGroup, specs, qmax, lanes
 
 
 def _execute_group(manager, group: ExecutionGroup, specs, embedded,
-                   results, t_embed: float, *, fused: bool = True) -> None:
+                   results, t_embed: float, *, fused: bool = True,
+                   coarse: bool = True) -> None:
     cfg = manager.cfg
     strat = group.strategy
     use_fused = fused and strat.name in _FUSED_STRATEGIES
@@ -563,17 +573,35 @@ def _execute_group(manager, group: ExecutionGroup, specs, embedded,
     # --- the ONE scan launch for this group ------------------------------
     t0 = time.perf_counter()
     stack = manager.memory_stack(lanes)
+    a = stack.arena_view()
     k = group.key
+    # two-stage trigger: fused group + arena-backed + the hierarchical
+    # tier actually holds consolidated rows (before that the coarse
+    # tier adds nothing the flat scan doesn't cover — and skipping it
+    # keeps the pre-consolidation path bit-identical to a coarse-less
+    # build, which is the `coarse=False` contract too)
+    two_stage = (use_fused and coarse and a is not None
+                 and a.has_consolidated())
+    ts = None
     if use_fused:
         # fused path: draws/top-k resolve inside the launch; dense
-        # (S, Q, cap) scores never cross the kernel boundary
+        # (S, Q, cap) scores never cross the kernel boundary. Targets
+        # derive from the SAME keys in both modes, so session PRNG
+        # chains advance identically with or without the coarse tier.
         if strat.stochastic:
             targets = _targets_from_keys(keys, n=k.budget)
         else:           # top-k ignores the draw epilogue: dummy targets
             targets = jnp.zeros((ln, qmax, 1), jnp.float32)
-        fr = stack.fused_retrieve(
-            jnp.asarray(q_stack), targets, tau=k.tau,
-            n_topk=k.budget if strat.name == "topk" else 1)
+        n_topk = k.budget if strat.name == "topk" else 1
+        if two_stage:
+            ts = tiering.two_stage_retrieve(
+                a, jnp.asarray(q_stack), targets, tau=k.tau,
+                n_topk=n_topk, topb=getattr(cfg, "coarse_topb", 4))
+            fr = ts.fr
+            manager.io_stats["two_stage_groups"] += 1
+        else:
+            fr = stack.fused_retrieve(
+                jnp.asarray(q_stack), targets, tau=k.tau, n_topk=n_topk)
     else:
         sims, probs = stack.search(jnp.asarray(q_stack), tau=k.tau)
     if len(sids) == 1:   # single-session group: legacy per-session accounting
@@ -582,7 +610,6 @@ def _execute_group(manager, group: ExecutionGroup, specs, embedded,
     else:
         manager.io_stats["fused_scans"] += 1
     manager.io_stats["group_scans"] += 1
-    a = stack.arena_view()
     if a is not None and a.n_shards > 1:
         # this launch fanned out per shard under shard_map (the kernel
         # entries count bytes; this counts launches at the plan level)
@@ -595,32 +622,68 @@ def _execute_group(manager, group: ExecutionGroup, specs, embedded,
         if strat.name == "topk":
             draws = fr.topk_i
             sq = draws.shape[:2]
-            out = StrategyOutput(draws, jnp.ones(draws.shape, bool),
-                                 np.full(sq, k.budget),
-                                 np.full(sq, np.nan))
-            fids_np = np.asarray(_gather_index_frames(
-                stack.device_index_frames(), out.draws))
+            if ts is not None:
+                # candidate-local draws → candidate ifr; k may be
+                # clamped to the candidate width, and lanes can hold
+                # fewer valid candidates than k (a consolidated winner
+                # is ONE candidate), so masked slots — recognisable by
+                # their NEG_INF running-top-k score — are dropped
+                # rather than surfacing garbage frame ids
+                valid_d = fr.topk_v > -1e29
+                out = StrategyOutput(
+                    draws, valid_d,
+                    np.asarray(valid_d.sum(-1)), np.full(sq, np.nan))
+                fids_np = np.asarray(tiering.gather_candidate_ifr(
+                    ts.cand_ifr, out.draws))
+            else:
+                out = StrategyOutput(draws, jnp.ones(draws.shape, bool),
+                                     np.full(sq, draws.shape[-1]),
+                                     np.full(sq, np.nan))
+                fids_np = np.asarray(_gather_index_frames(
+                    stack.device_index_frames(), out.draws))
             ok_np = np.asarray(out.valid)
         else:
-            members, counts = stack.device_members()
             u = jnp.asarray(VenusMemory.expand_u(cfg.seed, k.budget),
                             jnp.int32)
-            if strat.name == "sampling":
-                valid_d = jnp.ones(fr.draws.shape, bool)
-                fids, ok = _expand_stack(members, counts, fr.draws,
-                                         valid_d, u)
-                sq = fr.draws.shape[:2]
-                out = StrategyOutput(fr.draws, valid_d,
-                                     np.full(sq, k.budget),
-                                     np.full(sq, np.nan))
-            else:                                               # akr
-                akr, fids, ok = _fused_akr_post(
-                    fr.draws, fr.drawn_p, fr.p_max[..., 0], members,
-                    counts, u, theta=k.theta, beta=k.beta,
-                    n_max=k.budget)
-                out = StrategyOutput(akr.draws, akr.valid,
-                                     np.asarray(akr.n_drawn),
-                                     np.asarray(akr.mass))
+            if ts is not None:
+                # candidate-local expansion: draws index the gathered
+                # (S, Q, C) candidate tables, whose member reservoirs
+                # came along in the stage-2 gather
+                if strat.name == "sampling":
+                    valid_d = jnp.ones(fr.draws.shape, bool)
+                    fids, ok = tiering.expand_candidates(
+                        ts.cand_members, ts.cand_counts, fr.draws,
+                        valid_d, u)
+                    sq = fr.draws.shape[:2]
+                    out = StrategyOutput(fr.draws, valid_d,
+                                         np.full(sq, k.budget),
+                                         np.full(sq, np.nan))
+                else:                                           # akr
+                    akr, fids, ok = tiering.akr_post_candidates(
+                        fr.draws, fr.drawn_p, fr.p_max[..., 0],
+                        ts.cand_members, ts.cand_counts, u,
+                        theta=k.theta, beta=k.beta, n_max=k.budget)
+                    out = StrategyOutput(akr.draws, akr.valid,
+                                         np.asarray(akr.n_drawn),
+                                         np.asarray(akr.mass))
+            else:
+                members, counts = stack.device_members()
+                if strat.name == "sampling":
+                    valid_d = jnp.ones(fr.draws.shape, bool)
+                    fids, ok = _expand_stack(members, counts, fr.draws,
+                                             valid_d, u)
+                    sq = fr.draws.shape[:2]
+                    out = StrategyOutput(fr.draws, valid_d,
+                                         np.full(sq, k.budget),
+                                         np.full(sq, np.nan))
+                else:                                           # akr
+                    akr, fids, ok = _fused_akr_post(
+                        fr.draws, fr.drawn_p, fr.p_max[..., 0], members,
+                        counts, u, theta=k.theta, beta=k.beta,
+                        n_max=k.budget)
+                    out = StrategyOutput(akr.draws, akr.valid,
+                                         np.asarray(akr.n_drawn),
+                                         np.asarray(akr.mass))
             manager.io_stats["device_expands"] += 1
             fids_np, ok_np = np.asarray(fids), np.asarray(ok)
     else:

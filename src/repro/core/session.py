@@ -92,9 +92,26 @@ class VenusConfig:
     # lifecycle: what a session does when it outlives memory_capacity —
     # "none" (overflow raises; the pre-lifecycle contract),
     # "sliding_window" (device-side ring: evict the oldest rows, O(1)
-    # head motion), or "cluster_merge" (sliding window that first folds
-    # evicted member reservoirs into similar surviving clusters)
+    # head motion), "cluster_merge" (sliding window that first folds
+    # evicted member reservoirs into similar surviving clusters), or
+    # "consolidate" (evictees fold into the hierarchical coarse tier's
+    # compressed summary rows — requires coarse_capacity > 0)
     eviction: str = "none"
+    # cosine threshold for cluster_merge/consolidate folds: an evictee
+    # joins its most similar survivor/summary only at >= this similarity
+    # (None = the policy default, 0.8); validated in (0, 1] by
+    # get_eviction_policy
+    merge_threshold: Optional[float] = None
+    # hierarchical two-level memory (ARCHITECTURE.md "Hierarchical
+    # consolidation tier"): coarse_capacity > 0 gives every arena slot a
+    # summary tier of ceil(capacity / coarse_block) block centroids plus
+    # coarse_capacity consolidated rows; once consolidation populates
+    # it, fused queries run the two-stage coarse-scan → winner-gather
+    # path, streaming ~n_coarse + coarse_topb·coarse_block rows per
+    # query instead of the full capacity
+    coarse_capacity: int = 0
+    coarse_block: int = 64
+    coarse_topb: int = 4
     # querying (Eq. 5-7)
     tau: float = 0.1
     theta: float = 0.9
@@ -131,7 +148,10 @@ class SessionState:
                                   arena=arena, slot=slot,
                                   eviction=(cfg.eviction if eviction
                                             is None else eviction),
-                                  index_dtype=cfg.index_dtype)
+                                  index_dtype=cfg.index_dtype,
+                                  merge_threshold=cfg.merge_threshold,
+                                  coarse_capacity=cfg.coarse_capacity,
+                                  coarse_block=cfg.coarse_block)
         self.frames = FrameStore()
         self.pending: List[np.ndarray] = []   # frames not yet clustered
         self.pending_base = 0                 # abs index of pending[0]
@@ -221,6 +241,21 @@ def commit_jobs(sessions: Mapping[int, SessionState], embedder,
     references — see ``SessionManager._trim_archives``."""
     if not jobs:
         return 0
+    # fail fast on eviction="none" sessions about to overflow: raising
+    # here — before the embed call and the deferred scatter — names the
+    # session and the fix, instead of a deep-in-scatter shape error
+    # after embedding work is already spent
+    incoming: Dict[int, int] = {}
+    for j in jobs:
+        incoming[j.sid] = incoming.get(j.sid, 0) + len(j.frame_ids)
+    for sid, n_new in incoming.items():
+        mem = sessions[sid].memory
+        if mem.eviction.name == "none" and mem.size + n_new > mem.capacity:
+            raise RuntimeError(
+                f"session {sid}: memory full ({mem.size} rows + {n_new} "
+                f"incoming > capacity {mem.capacity}) — enable eviction "
+                f"or consolidation (VenusConfig(eviction='sliding_window'"
+                f" | 'cluster_merge' | 'consolidate'))")
     frames = np.concatenate([j.frames for j in jobs])
     ids = np.concatenate([j.frame_ids for j in jobs])
     aux = None
@@ -291,6 +326,7 @@ class SessionManager:
                          "device_expands": 0, "group_scans": 0,
                          "stack_rebuilds": 0, "sessions_closed": 0,
                          "sharded_group_scans": 0,
+                         "two_stage_groups": 0,
                          "archive_trimmed_frames": 0}
         # summed io_stats of closed sessions' memories: keeps the
         # service-level mem_* monitoring counters monotonic across
@@ -337,12 +373,13 @@ class SessionManager:
         arena = slot = None
         if self.use_arena:
             if self.arena is None:
-                self.arena = MemoryArena(self.cfg.memory_capacity,
-                                         self.embed_dim,
-                                         self.cfg.member_cap,
-                                         index_dtype=self.cfg.index_dtype,
-                                         mesh=self.mesh,
-                                         double_buffer=self.double_buffer)
+                self.arena = MemoryArena(
+                    self.cfg.memory_capacity, self.embed_dim,
+                    self.cfg.member_cap,
+                    index_dtype=self.cfg.index_dtype, mesh=self.mesh,
+                    double_buffer=self.double_buffer,
+                    coarse_capacity=self.cfg.coarse_capacity,
+                    coarse_block=self.cfg.coarse_block)
             arena, slot = self.arena, self.arena.add_session()
         self.sessions[sid] = SessionState(sid, self.cfg, self.embed_dim,
                                           arena=arena, slot=slot,
@@ -456,8 +493,8 @@ class SessionManager:
         """Group specs into execution groups (one fused scan each)."""
         return build_plan(specs, self.cfg)
 
-    def execute(self, plan: QueryPlan, *, fused: bool = True
-                ) -> List[QueryResult]:
+    def execute(self, plan: QueryPlan, *, fused: bool = True,
+                coarse: bool = True) -> List[QueryResult]:
         """Run a plan: ONE scan launch per group. ``fused=True`` (the
         default) resolves sampling/AKR/top-k groups inside the launch —
         draws and top-k come back instead of dense scores; strategies
@@ -465,8 +502,11 @@ class SessionManager:
         plus uniform) fall back to the dense scan per group regardless.
         ``fused=False`` forces the dense path for everything (debugging /
         A-B measurement escape hatch; results are draw-for-draw
-        identical either way)."""
-        return execute_plan(self, plan, fused=fused)
+        identical either way). ``coarse=False`` disables the two-stage
+        coarse-tier path even when the arena holds consolidated summary
+        rows (the flat-scan escape hatch — bit-identical to a build
+        without a coarse tier)."""
+        return execute_plan(self, plan, fused=fused, coarse=coarse)
 
     def query_specs(self, specs: Sequence[QuerySpec]) -> List[QueryResult]:
         """Convenience: ``execute(plan(specs))``."""

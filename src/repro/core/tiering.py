@@ -1,0 +1,208 @@
+"""Hierarchical two-level memory: the coarse summary tier + the
+two-stage (coarse → fine) retrieval executor (paper §IV-C; Video-XL's
+visual-context-compression argument — capacity outruns scan bandwidth
+by scanning summaries and gathering only winning detail).
+
+Storage layout (owned by ``MemoryArena`` — see ``coarse_rows_for``):
+each slot's coarse tier is ``n_coarse = n_blocks + coarse_capacity``
+summary rows inside ``(S, n_coarse, ·)`` super-buffers:
+
+* rows ``[0, n_blocks)`` — **block summaries**: one centroid per
+  ``coarse_block`` physical fine rows, recomputed for dirty blocks at
+  tick flush from the host mirrors. They carry no reservoir: a stage-1
+  win on block ``b`` gathers block ``b``'s actual fine rows, which
+  carry their own members/index_frame metadata.
+* rows ``[n_blocks, n_coarse)`` — **consolidated summaries**: evicted
+  fine rows folded by ``ConsolidationEviction`` into running
+  count-weighted centroids with merged member reservoirs and
+  ``[fid_lo, fid_hi]`` frame windows. These rows ARE their own stage-2
+  candidates (one row each), expanded through the merged reservoir.
+
+Two-stage retrieval contract (``two_stage_retrieve``):
+
+1. **Stage 1 — coarse scan.** The existing fused stack scan runs over
+   the ``(S, n_coarse, d)`` coarse tier (``tier="coarse"`` so the bytes
+   count into ``kops.coarse_scan_bytes``), selecting the per-query
+   top-B summary winners on device. Sharded arenas fan this launch out
+   per slot slab exactly like the fine scan.
+2. **Stage 2 — winner-block gather + fine scan.** A jit'd gather builds
+   each (session, query)'s candidate table: ``coarse_block`` fine arena
+   rows per block-summary winner, the summary row itself per
+   consolidated winner (padded to the block width, masked). The same
+   fused scan then runs over the ``(S·Q, B·block, d)`` candidate
+   operand with the group's ORIGINAL inverse-CDF targets, so draws /
+   top-k / AKR stop-rule state resolve over candidates only. Gathered
+   candidate rows count into ``kops.fine_gather_rows``.
+
+Per query the streamed rows are ``n_coarse + B·coarse_block`` — sized
+far below ``capacity`` — while consolidation keeps ≫ capacity of
+ingested history reachable: effective capacity ≫ scanned bytes.
+
+Equivalence: the executor only enters this path when the tier holds at
+least one consolidated row (``MemoryArena.has_consolidated``); before
+the first consolidation — and always under the ``coarse=False`` escape
+hatch — queries take the flat scan UNCHANGED, so flat-path results are
+bit-identical to a coarse-less build. The PRNG contract is also
+preserved: session chains advance identically in both modes (the same
+keys produce the same targets; only the operand they resolve over
+differs).
+
+The stage-2 candidate scan runs unsharded even on a sharded arena: the
+winner gather crosses slab boundaries anyway and the candidate operand
+is epilogue-sized (O(S·Q·B·block·d)), not capacity-sized — it is the
+two-stage analogue of the sharded fused scan's candidate gather.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import retrieval as rt
+from repro.core.memory import MemoryArena, expand_gather
+from repro.kernels import ops as kops
+
+
+class TwoStageResult(NamedTuple):
+    """What the plan executor consumes after a coarse→fine retrieval.
+    ``fr`` is candidate-LOCAL (draw/top-k indices address the gathered
+    candidate tables, not arena rows); the ``cand_*`` tables map those
+    back to member reservoirs and frame ids."""
+    fr: kops.FusedRetrieval      # (S, Q, ·) candidate-local outputs
+    cand_members: jnp.ndarray    # (S, Q, C, K) per-candidate reservoirs
+    cand_counts: jnp.ndarray     # (S, Q, C) reservoir counts
+    cand_ifr: jnp.ndarray        # (S, Q, C) candidate frame ids
+    cand_valid: jnp.ndarray      # (S, Q, C) candidate validity
+    winners: jnp.ndarray         # (S, Q, B) stage-1 coarse row winners
+
+
+@functools.partial(jax.jit, static_argnames=("block", "n_blocks"))
+def _gather_candidates(winners, f_emb, f_mem, f_cnt, f_ifr, f_valid,
+                       c_emb, c_mem, c_cnt, c_ifr, c_valid, *,
+                       block: int, n_blocks: int):
+    """Winner-block gather, vmapped over sessions. Per session:
+    winners (Q, B) coarse rows; ``f_*`` (cap, ·) fine tables;
+    ``c_*`` (n_coarse, ·) coarse tables. Block winners (< n_blocks)
+    contribute their block's ``block`` fine rows; consolidated winners
+    contribute themselves in candidate slot 0, the rest masked.
+    Returns (emb, members, counts, ifr, valid) with a (Q, B·block)
+    candidate axis."""
+
+    def per_session(w, fe, fm, fc, ff, fv, ce, cm, cc, cf, cv):
+        cap = fe.shape[0]
+        is_blk = w < n_blocks                            # (Q, B)
+        offs = jnp.arange(block)
+        first = offs == 0
+        rows = jnp.clip(w[..., None] * block + offs, 0, cap - 1)
+        k0_emb = fe[rows].astype(jnp.float32)            # (Q,B,blk,d)
+        k0_valid = fv[rows] & is_blk[..., None]
+        cw = jnp.clip(w, 0, ce.shape[0] - 1)
+        k1_valid = cv[cw] & ~is_blk                      # (Q, B)
+        k1_emb = (ce[cw][:, :, None, :]
+                  * first[None, None, :, None])          # (Q,B,blk,d)
+        emb = jnp.where(is_blk[..., None, None], k0_emb, k1_emb)
+        valid = jnp.where(is_blk[..., None], k0_valid,
+                          k1_valid[..., None] & first)
+        mem = jnp.where(is_blk[..., None, None], fm[rows],
+                        cm[cw][:, :, None, :])
+        cnt = jnp.where(is_blk[..., None], fc[rows],
+                        cc[cw][..., None] * first)
+        ifr = jnp.where(is_blk[..., None], ff[rows],
+                        cf[cw][..., None] * first)
+        q, b = w.shape
+        c = b * block
+        return (emb.reshape(q, c, -1), mem.reshape(q, c, -1),
+                cnt.reshape(q, c), ifr.reshape(q, c),
+                valid.reshape(q, c))
+
+    return jax.vmap(per_session)(winners, f_emb, f_mem, f_cnt, f_ifr,
+                                 f_valid, c_emb, c_mem, c_cnt, c_ifr,
+                                 c_valid)
+
+
+def two_stage_retrieve(arena: MemoryArena, q_stack: jnp.ndarray,
+                       targets: jnp.ndarray, *, tau: float, n_topk: int,
+                       topb: int) -> TwoStageResult:
+    """Run one group's coarse→fine retrieval over the arena tiers.
+    ``q_stack`` (S, Q, d), ``targets`` (S, Q, T) — the group's ORIGINAL
+    inverse-CDF targets (PRNG chains advance identically to the flat
+    path). ``topb`` is B, the stage-1 winner budget per query."""
+    assert arena.n_coarse, "arena has no coarse tier"
+    s, q, d = q_stack.shape
+    topb = max(1, min(int(topb), arena.n_coarse))
+    # ---- stage 1: fused scan over the coarse summary tier --------------
+    fr1 = kops.fused_retrieve_stack(
+        q_stack, arena.coarse_emb, tau=tau,
+        valid=arena.device_coarse_valid(),
+        targets=jnp.zeros((s, q, 1), jnp.float32), n_topk=topb,
+        mesh=arena.mesh, mesh_axis=arena.mesh_axis, tier="coarse")
+    winners = fr1.topk_i                                  # (S, Q, B)
+    # ---- stage 2: gather winner blocks, rescan candidates --------------
+    cand_emb, cand_mem, cand_cnt, cand_ifr, cand_valid = \
+        _gather_candidates(
+            winners, arena.emb, arena.members, arena.member_count,
+            arena.index_frame, arena.device_valid(),
+            arena.coarse_emb, arena.coarse_members,
+            arena.coarse_member_count, arena.coarse_index_frame,
+            arena.device_coarse_valid(),
+            block=arena.coarse_block, n_blocks=arena.n_blocks)
+    c = topb * arena.coarse_block
+    kops.count_fine_gather(s * q * c)
+    n_topk = max(1, min(int(n_topk), c))
+    fr2 = kops.fused_retrieve_stack(
+        q_stack.reshape(s * q, 1, d), cand_emb.reshape(s * q, c, d),
+        tau=tau, valid=cand_valid.reshape(s * q, c),
+        targets=targets.reshape(s * q, 1, -1), n_topk=n_topk)
+    fr = kops.FusedRetrieval(
+        draws=fr2.draws.reshape(s, q, -1),
+        drawn_p=fr2.drawn_p.reshape(s, q, -1),
+        topk_v=fr2.topk_v.reshape(s, q, -1),
+        topk_i=fr2.topk_i.reshape(s, q, -1),
+        m=fr2.m.reshape(s, q, 1), l=fr2.l.reshape(s, q, 1),
+        p_max=fr2.p_max.reshape(s, q, 1))
+    return TwoStageResult(fr, cand_mem, cand_cnt, cand_ifr, cand_valid,
+                          winners)
+
+
+# --- candidate-local post-processing (the per-(s,q)-table twins of the
+# --- executor's stacked expansion jits) ------------------------------------
+
+
+@jax.jit
+def gather_candidate_ifr(cand_ifr: jnp.ndarray, draws: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """cand_ifr (S, Q, C) × candidate-local draws (S, Q, n) → frame ids
+    (S, Q, n): the two-stage twin of ``_gather_index_frames``, except
+    each (s, q) lane gathers from its own candidate table."""
+    c = cand_ifr.shape[-1]
+    return jnp.take_along_axis(cand_ifr, jnp.clip(draws, 0, c - 1),
+                               axis=-1)
+
+
+@jax.jit
+def expand_candidates(cand_mem, cand_cnt, draws, valid, u):
+    """Reservoir expansion over per-(s,q) candidate tables: the
+    two-stage twin of the executor's ``_expand_stack`` (same
+    ``expand_gather`` core, same u variates — one vmap deeper)."""
+    fids, ok = jax.vmap(jax.vmap(
+        lambda m, c, d, v: expand_gather(m, c, d, v, u)))(
+            cand_mem, cand_cnt, draws, valid)
+    return fids, ok
+
+
+@functools.partial(jax.jit, static_argnames=("theta", "beta", "n_max"))
+def akr_post_candidates(draws, drawn_p, p_max, cand_mem, cand_cnt, u, *,
+                        theta, beta, n_max):
+    """AKR stop rule + reservoir expansion over candidate-local draw
+    state: per-lane it is exactly ``akr_from_draws`` (the fused flat
+    path's epilogue) applied to the stage-2 scan's outputs."""
+    akr = jax.vmap(jax.vmap(lambda dd, p, pm: rt.akr_from_draws(
+        dd, p, pm, theta=theta, beta=beta, n_max=n_max)))(
+            draws, drawn_p, p_max)
+    fids, ok = jax.vmap(jax.vmap(
+        lambda m, c, d, v: expand_gather(m, c, d, v, u)))(
+            cand_mem, cand_cnt, akr.draws, akr.valid)
+    return akr, fids, ok

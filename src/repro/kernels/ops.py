@@ -61,14 +61,33 @@ def _interpret() -> bool:
 # output arrays, so the "only the epilogue crosses" contract is a
 # counter assertion, not a claim. (Counters are host-side: they bump at
 # the dispatch call site, never inside a traced shard_map body.)
+#
+# Two-stage (hierarchical-tier) accounting: ``coarse_scan_bytes`` is the
+# subset of ``scan_bytes`` streamed by stage-1 scans over the coarse
+# summary tier; ``fine_gather_rows`` counts the candidate fine rows
+# stage 2 gathers into its per-query scan operand (winner blocks ×
+# block rows, padding slots included — the honest operand size);
+# ``two_stage_scans`` counts completed coarse→fine retrievals. Together
+# they pin the tier's bandwidth claim: coarse_scan_bytes + the gathered
+# candidate bytes must undercut the flat 1×-capacity scan.
 _scan_counts = {"similarity": 0, "similarity_stack": 0,
                 "scan_bytes": 0, "fused_draw_launches": 0,
                 "dense_score_launches": 0,
-                "sharded_stack_launches": 0, "shard_gather_bytes": 0}
+                "sharded_stack_launches": 0, "shard_gather_bytes": 0,
+                "coarse_scan_bytes": 0, "fine_gather_rows": 0,
+                "two_stage_scans": 0}
 
 
 def _count_scan_bytes(index) -> None:
     _scan_counts["scan_bytes"] += index.size * index.dtype.itemsize
+
+
+def count_fine_gather(n_rows: int) -> None:
+    """Host-side stage-2 accounting hook for the tiering layer: the
+    candidate rows gathered out of the fine arena for one two-stage
+    retrieval (counted at dispatch, never inside a traced body)."""
+    _scan_counts["fine_gather_rows"] += int(n_rows)
+    _scan_counts["two_stage_scans"] += 1
 
 
 def scan_counts() -> dict:
@@ -258,7 +277,8 @@ def _fused_retrieve_sharded(query, index, valid, targets, *, tau: float,
 
 def fused_retrieve_stack(query, index, *, tau: float, valid, targets,
                          n_topk: int, mesh=None,
-                         mesh_axis: str = "model") -> FusedRetrieval:
+                         mesh_axis: str = "model",
+                         tier: str = "fine") -> FusedRetrieval:
     """One-launch fused retrieval: query (S,Q,d) × index (S,N,d) fp32 or
     int8 + valid (any canonical mask form) + targets (S,Q,T) inverse-CDF
     draw targets -> draws, drawn probabilities, top-k, softmax stats.
@@ -275,10 +295,19 @@ def fused_retrieve_stack(query, index, *, tau: float, valid, targets,
     outputs — O(S·Q·(T+K)) bytes, counted into ``shard_gather_bytes`` —
     cross shard boundaries; K == 1 (or mesh None) short-circuits to the
     single-device launch, bit-identically.
+
+    ``tier="coarse"`` marks the launch as a stage-1 scan over the
+    hierarchical summary tier: identical math, but the streamed bytes
+    are additionally counted into ``coarse_scan_bytes`` so the
+    two-stage bandwidth claim stays a counter assertion.
     """
+    assert tier in ("fine", "coarse"), tier
     _scan_counts["similarity_stack"] += 1
     _scan_counts["fused_draw_launches"] += 1
     _count_scan_bytes(index)
+    if tier == "coarse":
+        _scan_counts["coarse_scan_bytes"] += int(
+            index.size * index.dtype.itemsize)
     n = index.shape[1]
     if mesh is not None and mesh_axis_size(mesh, mesh_axis) > 1:
         assert query.shape[0] % mesh_axis_size(mesh, mesh_axis) == 0, \

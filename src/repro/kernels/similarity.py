@@ -19,6 +19,19 @@ in a single kernel launch. Capacities that do not divide the block size
 are zero-padded by the wrapper (pad lanes are masked invalid, so they
 contribute nothing to the softmax statistics).
 
+Tier-agnostic by design (the hierarchical consolidation tier rides on
+this): the same stack kernels scan the FINE arena ``(S, capacity, d)``
+and the COARSE summary tier ``(S, n_coarse, d)`` — a coarse stage-1
+scan is just a stack launch with a smaller N and the coarse validity
+mask, and stage 2 re-enters as a ``(S·Q, B·block, d)`` scan over
+gathered candidates. Nothing in this module knows which tier it is
+scanning; the stage-1/stage-2 bookkeeping (``coarse_scan_bytes``,
+``fine_gather_rows``) lives at the ``kernels.ops`` dispatch layer, and
+the orchestration in ``core.tiering``. Since summary centroids are
+means of unit rows, the in-register L2 row normalisation below is also
+what makes block/consolidated centroids comparable to fine rows under
+one cosine — keep it.
+
 Shard-local entry contract (the sharded arena rides on this): every
 stack kernel in this module is a pure per-lane program — softmax
 statistics, inverse-CDF draw counts, and top-k selections are all

@@ -71,8 +71,14 @@ class VenusService:
                       eviction: Optional[str] = None) -> int:
         """Open a camera stream (recycles a freed arena slot when one
         exists). ``eviction`` picks this stream's bounded-memory policy
-        ("none" | "sliding_window" | "cluster_merge") — 24/7 streams
-        should use a window policy so they never stop ingesting."""
+        ("none" | "sliding_window" | "cluster_merge" | "consolidate") —
+        24/7 streams should use a window policy so they never stop
+        ingesting. "consolidate" additionally folds evictees into the
+        manager-wide coarse summary tier (``VenusConfig
+        (coarse_capacity=...)``) so long-horizon queries keep answering
+        through the two-stage coarse→fine scan after the fine window
+        moved on. A stream left on "none" raises a "memory full" error
+        from ``ingest_tick`` once its capacity fills."""
         return self.manager.create_session(sid, eviction=eviction)
 
     def close_stream(self, sid: int) -> Dict[str, int]:
@@ -156,6 +162,19 @@ class VenusService:
         epilogue (no dense score tensor), ``kops_dense_score_launches``
         counts scans that DID materialise (S, Q, cap) scores (the
         BOLT/MDF/AKS fallback and legacy ``search`` calls).
+
+        Hierarchical-tier deployments (``eviction="consolidate"``) add
+        the two-stage counters: ``kops_coarse_scan_bytes`` (the subset
+        of ``kops_scan_bytes`` streamed by stage-1 scans over the
+        summary tier), ``kops_fine_gather_rows`` (candidate fine rows
+        gathered into stage-2 operands), ``kops_two_stage_scans`` /
+        ``two_stage_groups`` (kernel- and plan-level counts of
+        completed coarse→fine retrievals), and ``mem_consolidated_rows``
+        / ``arena_coarse_appends`` (evictees folded into summary rows,
+        and the deferred scatters that pushed them to the device tier).
+        The bandwidth invariant to alert on: per query group,
+        ``kops_coarse_scan_bytes`` plus the gathered candidate bytes
+        stay below one flat capacity×dim scan.
 
         Sharded deployments additionally surface ``arena_shards`` (the
         mesh ``model``-axis size the arena slot axis is slabbed over),

@@ -380,6 +380,117 @@ def test_cluster_merge_folds_reservoirs():
     assert mem2.io_stats["reservoir_merges"] <= merges0 + 1
 
 
+def test_cluster_merge_no_survivor_above_threshold():
+    """Evictees with NO survivor clearing the threshold fall back to
+    plain sliding-window: no merge, reservoirs dropped with the row."""
+    rng = np.random.default_rng(9)
+    cap, dim = 4, 8
+    mem = VenusMemory(cap, dim, member_cap=8,
+                      eviction=get_eviction_policy("cluster_merge",
+                                                   threshold=0.999))
+    rows = np.eye(dim, dtype=np.float32)[:4]     # mutually orthogonal
+    mem.insert_batch(rows, scene_ids=[0] * 4,
+                     index_frames=[10, 11, 12, 13],
+                     member_lists=[[10, 100], [11], [12], [13]])
+    mem.insert_batch(rng.normal(0, 1, (2, dim)).astype(np.float32),
+                     scene_ids=[1] * 2, index_frames=[14, 15],
+                     member_lists=[[14], [15]])
+    assert mem.io_stats["evicted_rows"] == 2
+    assert mem.io_stats["reservoir_merges"] == 0
+    # no surviving reservoir inherited the evicted frames
+    live = (mem.head + np.arange(mem.size)) % cap
+    for p in live:
+        got = set(mem._members[p, :mem._member_count[p]].tolist())
+        assert not ({10, 100, 11} & got)
+
+
+def test_cluster_merge_need_exceeds_live_window():
+    """``need`` ≥ the live window (one batch overruns everything the
+    memory holds): merging is skipped — there is no survivor to fold
+    into — and the window semantics match plain sliding-window."""
+    rng = np.random.default_rng(10)
+    cap, dim = 8, 8
+    mem = VenusMemory(cap, dim, member_cap=4, eviction="cluster_merge")
+    first = rng.normal(0, 1, (3, dim)).astype(np.float32)
+    mem.insert_batch(first, scene_ids=[0] * 3, index_frames=[0, 1, 2],
+                     member_lists=[[0], [1], [2]])
+    n = cap + 5                                  # > capacity AND > size
+    rows = rng.normal(0, 1, (n, dim)).astype(np.float32)
+    mem.insert_batch(rows, scene_ids=[1] * n,
+                     index_frames=list(range(3, 3 + n)),
+                     member_lists=[[i] for i in range(3, 3 + n)])
+    twin = VenusMemory(cap, dim, member_cap=4, eviction="sliding_window")
+    twin.insert_batch(first, scene_ids=[0] * 3, index_frames=[0, 1, 2],
+                      member_lists=[[0], [1], [2]])
+    twin.insert_batch(rows, scene_ids=[1] * n,
+                      index_frames=list(range(3, 3 + n)),
+                      member_lists=[[i] for i in range(3, 3 + n)])
+    assert mem.size == twin.size == cap
+    assert mem.window == twin.window
+    np.testing.assert_array_equal(mem._index_frame, twin._index_frame)
+    np.testing.assert_array_equal(mem._emb, twin._emb)
+
+
+def test_cluster_merge_folds_on_recycled_slot():
+    """A recycled arena slot must fold into the NEW tenant's survivors
+    only: the old tenant's rows are gone from the device rows the slot
+    reuses, and post-recycle merge behaviour matches a fresh manager."""
+    worlds = _worlds(3)
+    cfg = VenusConfig(max_partition_len=32, memory_capacity=16,
+                      eviction="cluster_merge")
+    mgr = _manager(cfg)
+    sids = [mgr.create_session() for _ in range(2)]
+    for t in range(6):                           # both fill past capacity
+        _tick(mgr, dict(zip(sids, worlds[:2])), t)
+    assert mgr[sids[0]].memory.io_stats["evicted_rows"] > 0
+    slot = mgr[sids[1]].memory.slot
+    mgr.close_session(sids[1])
+    new_sid = mgr.create_session()               # recycles the slot
+    assert mgr[new_sid].memory.slot == slot
+    fresh = _manager(cfg)
+    fsid_keep = fresh.create_session()
+    fsid_new = fresh.create_session()
+    for t in range(6):
+        _tick(fresh, {fsid_keep: worlds[0]}, t)
+    for t in range(6, 12):                       # recycled tenant fills
+        _tick(mgr, {sids[0]: worlds[0], new_sid: worlds[2]}, t)
+        _tick(fresh, {fsid_keep: worlds[0], fsid_new: worlds[2]}, t)
+    mem_r = mgr[new_sid].memory
+    mem_f = fresh[fsid_new].memory
+    assert mem_r.io_stats["evicted_rows"] > 0
+    assert mem_r.window == mem_f.window
+    np.testing.assert_array_equal(mem_r._index_frame, mem_f._index_frame)
+    np.testing.assert_array_equal(mem_r._member_count,
+                                  mem_f._member_count)
+    qes = _queries(worlds, [0, 2], seed0=500)
+    _assert_same_results(
+        mgr.query_batch_cross([sids[0], new_sid], query_embs=qes),
+        fresh.query_batch_cross([fsid_keep, fsid_new], query_embs=qes))
+
+
+def test_commit_jobs_raises_clear_memory_full_error():
+    """Satellite: an ``eviction='none'`` session at capacity fails the
+    TICK with a named, actionable error — before any embedding work —
+    instead of a deep-in-scatter failure."""
+    worlds = _worlds(1)
+    cfg = VenusConfig(max_partition_len=32, memory_capacity=8,
+                      eviction="none")
+    mgr = _manager(cfg)
+    sid = mgr.create_session()
+    with pytest.raises(RuntimeError,
+                       match=rf"session {sid}: memory full"):
+        for t in range(12):
+            _tick(mgr, {sid: worlds[0]}, t)
+    # the error names the fix
+    try:
+        for t in range(12, 24):
+            _tick(mgr, {sid: worlds[0]}, t)
+    except RuntimeError as e:
+        assert "enable eviction or consolidation" in str(e)
+    # the session itself is intact (the tick failed cleanly)
+    assert mgr[sid].memory.size <= cfg.memory_capacity
+
+
 # ---------------------------------------------------------------------------
 # ACCEPTANCE: churn workload — steady-state slots, zero restacks
 # ---------------------------------------------------------------------------

@@ -269,3 +269,91 @@ def test_shard_gather_bytes_exclude_dense_term():
     s, q, cap = mgr.arena.n_sessions, 1, mgr.arena.capacity
     dense = s * q * cap * 4                   # one f32 (S,Q,cap) tensor
     assert 0 < c["shard_gather_bytes"] < dense
+
+
+# ---------------------------------------------------------------------------
+# hierarchical coarse tier under sharding (two-stage kops pin, CI lane)
+# ---------------------------------------------------------------------------
+
+
+TIER_DIM = 32
+# n_blocks = 128/16 = 8, n_coarse = 40; one two-stage query streams
+# 40 coarse + topb·16 = 104 rows vs the flat scan's full capacity
+TIER_CFG = VenusConfig(memory_capacity=128, member_cap=8,
+                       eviction="consolidate", coarse_capacity=32,
+                       coarse_block=16, coarse_topb=4)
+
+
+class _ArrayEmbedder:
+    def embed_queries(self, texts):
+        raise AssertionError("tests pass explicit embeddings")
+
+    def embed_frames(self, frames, aux=None, frame_ids=None):
+        raise AssertionError("tests insert rows directly")
+
+
+def _tier_feed(mgr, sid, rows):
+    mem = mgr.sessions[sid].memory
+    for lo in range(0, len(rows), 16):
+        batch = rows[lo:lo + 16]
+        fids = np.arange(lo, lo + len(batch))
+        with mgr.arena.deferred_appends():
+            mem.insert_batch(batch, scene_ids=[0] * len(batch),
+                             index_frames=fids,
+                             member_lists=[[int(f)] for f in fids])
+
+
+@multi_device
+def test_sharded_two_stage_matches_oracle_and_pins_bytes():
+    """ACCEPTANCE (multi-device lane): the two-stage path on a K-sharded
+    arena answers draw-for-draw like the single-device tiered oracle —
+    stage 1 fans out per slab, stage 2's candidate scan is epilogue-sized
+    and unsharded — and the kops counters pin coarse + gathered-fine
+    bytes BELOW one flat 1×-capacity scan."""
+    k = len(jax.devices())
+    rng = np.random.default_rng(23)
+    cen = rng.normal(size=(8, TIER_DIM)).astype(np.float32)
+    cen /= np.linalg.norm(cen, axis=-1, keepdims=True)
+    labels = rng.integers(0, 8, size=4 * TIER_CFG.memory_capacity)
+    rows = cen[labels] + 0.05 * rng.normal(size=(len(labels), TIER_DIM))
+    rows = (rows / np.linalg.norm(rows, axis=-1, keepdims=True)
+            ).astype(np.float32)
+
+    mesh = make_host_mesh(model=k)
+    mgr = SessionManager(TIER_CFG, _ArrayEmbedder(), embed_dim=TIER_DIM,
+                         mesh=mesh)
+    oracle = SessionManager(TIER_CFG, _ArrayEmbedder(),
+                            embed_dim=TIER_DIM)
+    sid = mgr.create_session()
+    osid = oracle.create_session()
+    _tier_feed(mgr, sid, rows)
+    _tier_feed(oracle, osid, rows)
+    assert mgr.arena.n_shards == k > 1
+    assert mgr.arena.has_consolidated()
+
+    from repro.core.queryplan import QuerySpec
+    spec = lambda s, j: QuerySpec(sid=s, embedding=cen[j],
+                                  strategy="topk", budget=8)
+    # flat baseline bytes on the sharded manager
+    kops.reset_scan_counts()
+    mgr.execute(mgr.plan([spec(sid, 0)]), coarse=False)
+    flat_bytes = kops.scan_counts()["scan_bytes"]
+
+    kops.reset_scan_counts()
+    for j in range(4):
+        got = mgr.execute(mgr.plan([spec(sid, j)]))[0]
+        want = oracle.execute(oracle.plan([spec(osid, j)]))[0]
+        np.testing.assert_array_equal(got.draws, want.draws)
+        np.testing.assert_array_equal(got.frame_ids, want.frame_ids)
+    c = kops.scan_counts()
+    # the kops counters are process-global: 4 sharded + 4 oracle queries
+    assert c["two_stage_scans"] == 8
+    assert c["coarse_scan_bytes"] > 0
+    assert c["fine_gather_rows"] > 0
+    per_query_fine = TIER_CFG.coarse_topb * TIER_CFG.coarse_block
+    # per-query bytes (one sharded query): coarse + gathered fine < flat
+    coarse_per_q = mgr.arena.n_coarse * mgr.arena.n_sessions \
+        * TIER_DIM * 4
+    assert coarse_per_q + per_query_fine * TIER_DIM * 4 < flat_bytes
+    assert mgr.io_stats["two_stage_groups"] == 4
+    assert mgr.io_stats["stack_rebuilds"] == 0

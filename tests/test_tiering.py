@@ -1,0 +1,416 @@
+"""Hierarchical two-level memory: coarse tier + two-stage retrieval.
+
+Acceptance suite for the consolidation-tier subsystem
+(``repro.core.tiering`` + the arena/session/queryplan integration):
+
+* geometry + population: ``coarse_rows_for`` row layout, block
+  summaries recomputed for dirty blocks, ``ConsolidationEviction``
+  folding evictees into running-centroid summary rows (threshold fold /
+  fresh row / full-tier degrade), recycled slots resetting the tier;
+* equivalence: before the first consolidation — and always under the
+  ``coarse=False`` escape hatch — the flat scan runs UNCHANGED, so a
+  tiered build answers draw-for-draw like a coarse-less one;
+* the bandwidth claim: with consolidation enabled, per-query scanned
+  bytes (coarse scan + gathered fine candidates) stay BELOW the flat
+  1×-capacity scan while ≥ 4× capacity of ingested history keeps
+  top-k recall ≥ 0.8 vs an unbounded-capacity oracle — pinned by the
+  ``kops`` counters, not by timing.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.memory import (ConsolidationEviction, MemoryArena,
+                               VenusMemory, coarse_rows_for,
+                               get_eviction_policy)
+from repro.core.queryplan import QuerySpec
+from repro.core.session import SessionManager, VenusConfig
+from repro.data.video import OracleEmbedder, PixelEmbedder, VideoWorld, \
+    WorldConfig
+from repro.kernels import ops as kops
+
+DIM = 32
+
+
+# small geometry so a few hundred direct inserts cover 4× capacity:
+# n_blocks = 128/16 = 8, n_coarse = 8 + 32 = 40; a two-stage query
+# streams 40 + topb·16 = 104 rows vs the flat scan's 128+
+TIER_CFG = VenusConfig(memory_capacity=128, member_cap=8,
+                       eviction="consolidate", coarse_capacity=32,
+                       coarse_block=16, coarse_topb=4)
+
+
+def _unit(rows):
+    rows = np.asarray(rows, np.float32)
+    return rows / (np.linalg.norm(rows, axis=-1, keepdims=True) + 1e-12)
+
+
+class ArrayEmbedder:
+    """Planner stub for managers fed by direct ``insert_batch`` calls."""
+
+    def embed_queries(self, texts):
+        raise AssertionError("tests pass explicit embeddings")
+
+    def embed_frames(self, frames, aux=None, frame_ids=None):
+        raise AssertionError("tests insert rows directly")
+
+
+def _clustered_rows(rng, centroids, labels, noise=0.05):
+    rows = centroids[labels] + noise * rng.normal(
+        size=(len(labels), centroids.shape[1]))
+    return _unit(rows)
+
+
+def _direct_manager(cfg, **kw):
+    return SessionManager(cfg, ArrayEmbedder(), embed_dim=DIM, **kw)
+
+
+def _feed(mgr, sid, rows, fid0, chunk=16):
+    """Insert rows straight into the session's memory, riding the same
+    deferred arena scatter an ingest tick uses."""
+    mem = mgr.sessions[sid].memory
+    for lo in range(0, len(rows), chunk):
+        batch = rows[lo:lo + chunk]
+        fids = np.arange(fid0 + lo, fid0 + lo + len(batch))
+        with mgr.arena.deferred_appends():
+            mem.insert_batch(batch, scene_ids=[0] * len(batch),
+                             index_frames=fids,
+                             member_lists=[[int(f)] for f in fids])
+    return fid0 + len(rows)
+
+
+# ---------------------------------------------------------------------------
+# geometry + population
+# ---------------------------------------------------------------------------
+
+
+def test_coarse_rows_layout():
+    assert coarse_rows_for(128, 32, 16) == (8, 40)
+    assert coarse_rows_for(100, 4, 16) == (7, 11)      # ragged last block
+    assert coarse_rows_for(128, 0, 16) == (0, 0)       # disabled
+    a = MemoryArena(128, DIM, 8, coarse_capacity=32, coarse_block=16)
+    a.add_session()
+    assert (a.n_blocks, a.n_coarse) == (8, 40)
+    assert a.coarse_emb.shape == (1, 40, DIM)
+    assert a.coarse_members.shape == (1, 40, 8)
+    assert not a.has_consolidated()
+    flat = MemoryArena(128, DIM, 8)
+    flat.add_session()
+    assert flat.n_coarse == 0 and flat.coarse_emb is None
+    assert not flat.has_consolidated()
+
+
+def test_block_summaries_track_live_rows():
+    """Ingest marks blocks dirty; their summary rows become the valid
+    centroid of the block's live rows (no reservoir), and eviction
+    re-summarises the blocks it invalidated."""
+    rng = np.random.default_rng(0)
+    mgr = _direct_manager(TIER_CFG)
+    sid = mgr.create_session()
+    mem, a = mgr.sessions[sid].memory, mgr.arena
+    rows = _unit(rng.normal(size=(24, DIM)))
+    _feed(mgr, sid, rows, 0)
+    # blocks 0 (full) and 1 (8/16 rows) valid, the rest not
+    cv = a.coarse_valid[mem.slot]
+    np.testing.assert_array_equal(cv[:a.n_blocks],
+                                  [True, True] + [False] * 6)
+    assert not cv[a.n_blocks:].any()           # nothing consolidated yet
+    got = np.asarray(a.coarse_emb[mem.slot, 0])
+    np.testing.assert_allclose(got, rows[:16].mean(0), atol=1e-5)
+    got1 = np.asarray(a.coarse_emb[mem.slot, 1])
+    np.testing.assert_allclose(got1, rows[16:24].mean(0), atol=1e-5)
+    # block summaries carry no reservoir
+    assert int(np.asarray(a.coarse_member_count[mem.slot, 0])) == 0
+
+
+def test_consolidation_fold_rules():
+    """Similar evictees fold into one running centroid + merged
+    reservoir; dissimilar ones open fresh rows; a full region folds
+    into the nearest row unconditionally instead of losing data."""
+    cap, cc = 4, 2
+    mem = VenusMemory(cap, DIM, member_cap=8,
+                      eviction=ConsolidationEviction(threshold=0.9),
+                      coarse_capacity=cc, coarse_block=4)
+    e = np.eye(DIM, dtype=np.float32)
+    rows = np.stack([e[0], e[0], e[1], e[2]])
+    mem.insert_batch(rows, scene_ids=[0] * 4,
+                     index_frames=[10, 11, 12, 13],
+                     member_lists=[[10, 100], [11], [12], [13]])
+    # evict rows 10+11 (both e0): first opens a summary, second folds
+    mem.insert_batch(np.stack([e[3], e[4]]), scene_ids=[1] * 2,
+                     index_frames=[14, 15], member_lists=[[14], [15]])
+    assert mem.io_stats["consolidated_rows"] == 2
+    assert mem._coarse_csize == 1
+    assert int(mem._coarse_weight[0]) == 2
+    np.testing.assert_allclose(mem._coarse_emb[0], e[0], atol=1e-6)
+    got = set(mem._coarse_members[0, :mem._coarse_count[0]].tolist())
+    assert got == {10, 100, 11}
+    assert (int(mem._coarse_fid_lo[0]), int(mem._coarse_fid_hi[0])) \
+        == (10, 100)
+    # dissimilar evictee (e1) opens row 1; the NEXT dissimilar one (e2)
+    # finds the region full and folds into its nearest row anyway
+    mem.insert_batch(np.stack([e[5], e[6]]), scene_ids=[2] * 2,
+                     index_frames=[16, 17], member_lists=[[16], [17]])
+    assert mem._coarse_csize == 2
+    assert mem.io_stats["consolidated_rows"] == 4
+    assert int(mem._coarse_weight[0]) + int(mem._coarse_weight[1]) == 4
+    # frame-window metadata keeps every folded frame ≥ its fid_lo
+    assert mem.min_live_frame() <= 10
+
+
+def test_consolidate_requires_coarse_capacity():
+    mem = VenusMemory(4, DIM, member_cap=4, eviction="consolidate")
+    rows = _unit(np.random.default_rng(1).normal(size=(4, DIM)))
+    mem.insert_batch(rows, scene_ids=[0] * 4, index_frames=[0, 1, 2, 3],
+                     member_lists=[[0], [1], [2], [3]])
+    with pytest.raises(RuntimeError, match="coarse_capacity"):
+        mem.insert_batch(rows[:1], scene_ids=[1], index_frames=[4],
+                         member_lists=[[4]])
+
+
+def test_merge_threshold_config_and_validation():
+    """Satellite: the fold threshold is a first-class config knob,
+    validated in ``get_eviction_policy``."""
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError, match="threshold"):
+            get_eviction_policy("cluster_merge", threshold=bad)
+    assert get_eviction_policy("cluster_merge", threshold=0.5) \
+        .threshold == 0.5
+    assert get_eviction_policy("consolidate", threshold=1.0) \
+        .threshold == 1.0
+    assert get_eviction_policy("cluster_merge").threshold == 0.8
+    # instances pass through; thresholds still validate
+    pol = ConsolidationEviction(threshold=0.7)
+    assert get_eviction_policy(pol) is pol
+    with pytest.raises(ValueError):
+        get_eviction_policy(pol, threshold=2.0)
+    # threaded from VenusConfig into the session's policy
+    cfg = VenusConfig(memory_capacity=32, eviction="cluster_merge",
+                      merge_threshold=0.6)
+    mgr = SessionManager(cfg, PixelEmbedder(dim=64), embed_dim=64)
+    sid = mgr.create_session()
+    assert mgr.sessions[sid].memory.eviction.threshold == 0.6
+
+
+# ---------------------------------------------------------------------------
+# equivalence: empty tier / escape hatch == the flat scan
+# ---------------------------------------------------------------------------
+
+
+def _drive(mgr, sid, world, ticks):
+    chunk = 64
+    for t in range(ticks):
+        lo = (t * chunk) % max(world.total_frames - chunk, 1)
+        mgr.ingest_tick({sid: world.frames[lo:lo + chunk]})
+
+
+def test_flat_path_bit_identical_before_consolidation():
+    """A tiered manager whose tier holds no consolidated rows answers
+    draw-for-draw like a coarse-less build — the two-stage path must
+    not even engage."""
+    world = VideoWorld(WorldConfig(n_scenes=5, seed=21))
+    cfg_tier = VenusConfig(max_partition_len=48,
+                           eviction="consolidate", coarse_capacity=32,
+                           coarse_block=64)
+    cfg_flat = VenusConfig(max_partition_len=48)
+    mt = SessionManager(cfg_tier, PixelEmbedder(dim=64), embed_dim=64)
+    mf = SessionManager(cfg_flat, PixelEmbedder(dim=64), embed_dim=64)
+    st, sf = mt.create_session(), mf.create_session()
+    _drive(mt, st, world, 2)          # well under capacity: no eviction
+    _drive(mf, sf, world, 2)
+    assert not mt.arena.has_consolidated()
+    qes = OracleEmbedder(world, dim=64).embed_queries(
+        world.make_queries(3, seed=5))
+    kops.reset_scan_counts()
+    for strat in ("topk", "sampling", "akr"):
+        specs_t = [QuerySpec(sid=st, embedding=q, strategy=strat,
+                             budget=8) for q in qes]
+        specs_f = [QuerySpec(sid=sf, embedding=q, strategy=strat,
+                             budget=8) for q in qes]
+        got = mt.execute(mt.plan(specs_t))
+        want = mf.execute(mf.plan(specs_f))
+        for a, b in zip(got, want):
+            np.testing.assert_array_equal(a.draws, b.draws)
+            np.testing.assert_array_equal(a.frame_ids, b.frame_ids)
+            assert a.n_drawn == b.n_drawn
+    sc = kops.scan_counts()
+    assert sc["two_stage_scans"] == 0
+    assert sc["coarse_scan_bytes"] == 0
+    assert mt.io_stats["two_stage_groups"] == 0
+
+
+def test_coarse_false_matches_sliding_window_twin():
+    """With consolidated rows present, ``coarse=False`` still takes the
+    flat scan — and because ``consolidate`` moves the fine window
+    exactly like ``sliding_window``, it answers draw-for-draw like a
+    sliding-window twin fed the same stream."""
+    rng = np.random.default_rng(3)
+    cen = _unit(rng.normal(size=(8, DIM)))
+    labels = rng.integers(0, 8, size=4 * TIER_CFG.memory_capacity)
+    rows = _clustered_rows(rng, cen, labels)
+
+    win_cfg = VenusConfig(memory_capacity=TIER_CFG.memory_capacity,
+                          member_cap=TIER_CFG.member_cap,
+                          eviction="sliding_window")
+    mt, mw = _direct_manager(TIER_CFG), _direct_manager(win_cfg)
+    st, sw = mt.create_session(), mw.create_session()
+    _feed(mt, st, rows, 0)
+    _feed(mw, sw, rows, 0)
+    assert mt.arena.has_consolidated()
+    for j in range(4):
+        spec_t = QuerySpec(sid=st, embedding=cen[j], strategy="topk",
+                           budget=8, seed=7)
+        spec_w = QuerySpec(sid=sw, embedding=cen[j], strategy="topk",
+                           budget=8, seed=7)
+        got = mt.execute(mt.plan([spec_t]), coarse=False)[0]
+        want = mw.execute(mw.plan([spec_w]))[0]
+        np.testing.assert_array_equal(got.draws, want.draws)
+        np.testing.assert_array_equal(got.frame_ids, want.frame_ids)
+    assert mt.io_stats["two_stage_groups"] == 0
+
+
+# ---------------------------------------------------------------------------
+# ACCEPTANCE: bandwidth pinned by counters, recall vs unbounded oracle
+# ---------------------------------------------------------------------------
+
+
+def test_two_stage_scans_fewer_bytes_than_flat():
+    """The kops pin: with the tier populated, one query's coarse scan +
+    gathered fine candidates stream fewer bytes than ONE flat
+    1×-capacity scan, and both stages are counted."""
+    rng = np.random.default_rng(5)
+    cen = _unit(rng.normal(size=(8, DIM)))
+    labels = rng.integers(0, 8, size=4 * TIER_CFG.memory_capacity)
+    rows = _clustered_rows(rng, cen, labels)
+    mgr = _direct_manager(TIER_CFG)
+    sid = mgr.create_session()
+    _feed(mgr, sid, rows, 0)
+    a = mgr.arena
+    assert a.has_consolidated()
+
+    spec = QuerySpec(sid=sid, embedding=cen[0], strategy="topk",
+                     budget=8)
+    # flat baseline: one 1×-capacity scan
+    kops.reset_scan_counts()
+    mgr.execute(mgr.plan([spec]), coarse=False)
+    flat_bytes = kops.scan_counts()["scan_bytes"]
+    assert kops.scan_counts()["two_stage_scans"] == 0
+
+    kops.reset_scan_counts()
+    mgr.execute(mgr.plan([spec]))
+    sc = kops.scan_counts()
+    assert sc["two_stage_scans"] == 1
+    assert mgr.io_stats["two_stage_groups"] == 1
+    assert sc["coarse_scan_bytes"] > 0
+    assert sc["fine_gather_rows"] == TIER_CFG.coarse_topb * \
+        TIER_CFG.coarse_block
+    itemsize = 4          # both tiers scan f32 here
+    gathered_bytes = sc["fine_gather_rows"] * DIM * itemsize
+    assert sc["coarse_scan_bytes"] + gathered_bytes < flat_bytes
+    # effective capacity ≫ scanned rows: 4× capacity of history is
+    # reachable while the scan streamed n_coarse + B·block rows
+    scanned_rows = a.n_coarse + sc["fine_gather_rows"]
+    assert scanned_rows < TIER_CFG.memory_capacity
+    assert len(rows) == 4 * TIER_CFG.memory_capacity
+    # and nothing restacked
+    assert mgr.io_stats["stack_rebuilds"] == 0
+
+
+def test_recall_vs_unbounded_oracle():
+    """ACCEPTANCE: ≥ 4× capacity ingested, top-k recall ≥ 0.8 vs an
+    unbounded-capacity oracle. Recall is measured on cluster identity:
+    the fraction of returned frames belonging to the query's cluster
+    (the oracle scores 1.0 by construction on this workload)."""
+    rng = np.random.default_rng(11)
+    n_clusters = 8
+    cen = _unit(rng.normal(size=(n_clusters, DIM)))
+    total = 4 * TIER_CFG.memory_capacity
+    labels = rng.integers(0, n_clusters, size=total)
+    rows = _clustered_rows(rng, cen, labels)
+
+    mgr = _direct_manager(TIER_CFG)
+    sid = mgr.create_session()
+    _feed(mgr, sid, rows, 0)
+    assert mgr.arena.has_consolidated()
+
+    oracle_cfg = VenusConfig(memory_capacity=total, member_cap=8)
+    om = _direct_manager(oracle_cfg)
+    osid = om.create_session()
+    _feed(om, osid, rows, 0)
+
+    k = 8
+    recalls, oracle_recalls = [], []
+    for q in range(n_clusters):
+        got = mgr.execute(mgr.plan([QuerySpec(
+            sid=sid, embedding=cen[q], strategy="topk", budget=k)]))[0]
+        want = om.execute(om.plan([QuerySpec(
+            sid=osid, embedding=cen[q], strategy="topk", budget=k)]))[0]
+        assert len(got.frame_ids) > 0
+        recalls.append(np.mean(labels[got.frame_ids] == q))
+        oracle_recalls.append(np.mean(labels[want.frame_ids] == q))
+    assert np.mean(oracle_recalls) == 1.0      # workload sanity
+    assert np.mean(recalls) >= 0.8, recalls
+    # the two-stage path reaches frames the fine window evicted long ago
+    assert mgr.io_stats["two_stage_groups"] == n_clusters
+
+
+def test_sampling_akr_reach_consolidated_reservoirs():
+    """Stochastic strategies expand through the CANDIDATE tables: draws
+    landing on a consolidated summary return frames from its merged
+    reservoir — history the fine window no longer holds."""
+    rng = np.random.default_rng(13)
+    cen = _unit(rng.normal(size=(4, DIM)))
+    total = 4 * TIER_CFG.memory_capacity
+    labels = rng.integers(0, 4, size=total)
+    rows = _clustered_rows(rng, cen, labels)
+    mgr = _direct_manager(TIER_CFG)
+    sid = mgr.create_session()
+    _feed(mgr, sid, rows, 0)
+    evicted_horizon = total - TIER_CFG.memory_capacity
+    reached_old = False
+    for strat in ("sampling", "akr"):
+        for j in range(4):
+            res = mgr.execute(mgr.plan([QuerySpec(
+                sid=sid, embedding=cen[j], strategy=strat,
+                budget=16)]))[0]
+            assert res.frame_ids.size > 0
+            assert res.frame_ids.max() < total
+            if res.frame_ids.min() < evicted_horizon:
+                reached_old = True
+    assert reached_old, "no draw ever reached consolidated history"
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: recycled slots reset the tier
+# ---------------------------------------------------------------------------
+
+
+def test_recycled_slot_resets_coarse_tier():
+    """close → create on the same slot: the new tenant must not see the
+    old tenant's summary rows (validity cleared, buffers zeroed)."""
+    rng = np.random.default_rng(17)
+    cen = _unit(rng.normal(size=(4, DIM)))
+    rows = _clustered_rows(
+        rng, cen, rng.integers(0, 4, size=2 * TIER_CFG.memory_capacity))
+    mgr = _direct_manager(TIER_CFG)
+    sid = mgr.create_session()
+    _feed(mgr, sid, rows, 0)
+    a = mgr.arena
+    slot = mgr.sessions[sid].memory.slot
+    assert a.coarse_valid[slot].any()
+    mgr.close_session(sid)
+    assert not a.coarse_valid[slot].any()
+    sid2 = mgr.create_session()
+    assert mgr.sessions[sid2].memory.slot == slot    # recycled
+    np.testing.assert_array_equal(np.asarray(a.coarse_emb[slot]), 0.0)
+    assert not a.has_consolidated()
+    mem2 = mgr.sessions[sid2].memory
+    assert mem2._coarse_csize == 0
+    # the recycled tenant consolidates from scratch and answers
+    _feed(mgr, sid2, rows, 0)
+    assert a.has_consolidated()
+    res = mgr.execute(mgr.plan([QuerySpec(
+        sid=sid2, embedding=cen[0], strategy="topk", budget=4)]))[0]
+    assert res.frame_ids.size > 0
