@@ -34,6 +34,14 @@ The edge box serves N concurrent camera streams with real-time queries
   bound, and the double-buffered ingest/query overlap. The K>1 arms
   need ``XLA_FLAGS=--xla_force_host_platform_device_count``.
 
+* **disk spill tier** (``--spill``) — ``eviction="none"`` sessions
+  under a ``host_retain`` budget, ingesting ≥ 4× their budget:
+  demotion throughput (host frames → npy segments) and fault-in
+  throughput (cold sweep from disk vs LRU-cached re-reads), with the
+  bounded-host invariant (``retained ≤ host_retain``), bit-identical
+  round-trips, and full demotion/fault accounting asserted in-harness.
+  The spill directory is a tmpdir, removed in a ``finally``.
+
 * **hierarchical tier** (``--tiered``) — a session holding 4× its fine
   capacity of consolidated history answers the same top-k plan via the
   flat 1×-capacity scan (``coarse=False``) vs the two-stage
@@ -55,7 +63,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import shutil
 import sys
+import tempfile
 import time
 from typing import Dict
 
@@ -500,6 +510,107 @@ def _bench_churn(n_sessions: int, n_queries: int, chunk: int = 64,
           "sessions_closed": mgr.io_stats["sessions_closed"]})
 
 
+def _bench_spill(n_sessions: int, chunk: int = 64, ticks: int = 8,
+                 n_scenes: int = 4, host_retain: int = 64,
+                 segment_frames: int = 16):
+    """Disk spill tier: demote/fault throughput on bounded-host
+    ``eviction="none"`` sessions.
+
+    N keep-everything streams ingest ``ticks`` chunks each (≥ 4× the
+    ``host_retain`` budget), so ``_trim_archives`` demotes their cold
+    frames into npy segments every tick. Measures demotion throughput
+    (inside the ingest ticks), cold fault-in throughput (full-history
+    sweep with an empty LRU cache), and warm re-read throughput (the
+    same sweep again, served by the cache). The production invariants
+    are asserted in-harness: host ``retained ≤ host_retain`` on every
+    stream, every demotion and fault accounted by the counters,
+    bit-identical round-trips against the ingested chunks, zero
+    restacks, and the spill tmpdir is removed in a ``finally``."""
+    assert ticks * chunk >= 4 * host_retain, (ticks, chunk, host_retain)
+    tmp = tempfile.mkdtemp(prefix="venus-spill-bench-")
+    try:
+        cfg = VenusConfig(max_partition_len=32, spill_dir=tmp,
+                          host_retain=host_retain,
+                          spill_segment_frames=segment_frames)
+        worlds = [VideoWorld(WorldConfig(n_scenes=n_scenes, seed=40 + s))
+                  for s in range(n_sessions)]
+        mgr = SessionManager(cfg, PixelEmbedder(dim=64), embed_dim=64)
+        sids = [mgr.create_session() for _ in range(n_sessions)]
+        twins = {sid: [] for sid in sids}
+
+        def chunk_at(w, t):
+            lo = (t * chunk) % max(w.total_frames - chunk, 1)
+            return np.asarray(w.frames[lo:lo + chunk], np.float32)
+
+        # warm-up tick compiles segment/embed paths before timing
+        mgr.ingest_tick({sid: chunk_at(w, 0)
+                         for sid, w in zip(sids, worlds)})
+        for sid, w in zip(sids, worlds):
+            twins[sid].extend(chunk_at(w, 0))
+
+        t0 = time.perf_counter()
+        for t in range(1, ticks):
+            mgr.ingest_tick({sid: chunk_at(w, t)
+                             for sid, w in zip(sids, worlds)})
+            for sid, w in zip(sids, worlds):
+                twins[sid].extend(chunk_at(w, t))
+        ingest_s = time.perf_counter() - t0
+
+        spilled_frames = spilled_bytes = 0
+        for sid in sids:
+            fs = mgr[sid].frames
+            # the bounded-host invariant, where CI runs it
+            assert fs.retained <= host_retain, (fs.retained, host_retain)
+            assert fs.io_stats["spilled_frames"] == fs.trimmed > 0
+            spilled_frames += fs.io_stats["spilled_frames"]
+            spilled_bytes += fs.io_stats["spilled_bytes"]
+
+        # cold sweep: every historical id of every stream faults its
+        # segment from disk (caches are empty — nothing was read yet)
+        t0 = time.perf_counter()
+        for sid in sids:
+            fs = mgr[sid].frames
+            got = fs.get(list(range(len(fs))))
+            assert got.tobytes() == np.stack(twins[sid]).tobytes()
+        cold_s = time.perf_counter() - t0
+        faults = sum(mgr[sid].frames.io_stats["spill_faults"]
+                     for sid in sids)
+        assert faults > 0, "cold sweep never touched disk"
+
+        # warm sweep: identical reads — the LRU cache absorbs re-reads
+        # of the most recent segments (small cache ⇒ partial hits only)
+        t0 = time.perf_counter()
+        for sid in sids:
+            mgr[sid].frames.get(list(range(len(mgr[sid].frames))))
+        warm_s = time.perf_counter() - t0
+        hits = sum(mgr[sid].frames.io_stats["spill_cache_hits"]
+                   for sid in sids)
+        # every spilled read was either a fault or a cache hit
+        reads = 2 * spilled_frames
+        total_faults = sum(mgr[sid].frames.io_stats["spill_faults"]
+                           for sid in sids)
+        assert total_faults + hits == reads, (total_faults, hits, reads)
+        assert mgr.io_stats["stack_rebuilds"] == 0
+        total_frames = sum(len(mgr[sid].frames) for sid in sids)
+        emit("multistream/spill", ingest_s,
+             {"sessions": n_sessions, "ticks": ticks,
+              "host_retain": host_retain,
+              "frames_total": total_frames,
+              "spilled_frames": spilled_frames,
+              "spilled_mb": f"{spilled_bytes / 2**20:.1f}",
+              "demote_frames_per_s":
+                  f"{spilled_frames / max(ingest_s, 1e-9):.0f}",
+              "cold_fault_frames_per_s":
+                  f"{total_frames / max(cold_s, 1e-9):.0f}",
+              "warm_read_frames_per_s":
+                  f"{total_frames / max(warm_s, 1e-9):.0f}",
+              "spill_faults": total_faults,
+              "spill_cache_hits": hits,
+              "restacks": mgr.io_stats["stack_rebuilds"]})
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def _bench_fused(n_sessions: int, n_queries: int, chunk: int = 64,
                  ticks: int = 5, n_scenes: int = 6,
                  index_dtype: str = "int8"):
@@ -831,8 +942,39 @@ def _bench_incremental_index(capacity: int = 16384, dim: int = 256,
 
 
 ALL_PARTS = ("ingest", "query", "cross", "plan", "arena", "churn",
-             "fused", "shards", "tiered", "incremental")
+             "fused", "shards", "tiered", "spill", "incremental")
 JSON_PATH = "BENCH_multistream.json"
+
+
+def write_json_artifact(json_path: str, rows: list, meta: dict) -> dict:
+    """Merge one run's rows into the cross-run JSON artifact.
+
+    The ``trajectory`` key accumulates ACROSS runs: the previous
+    artifact at ``json_path`` is re-read and this run's compact summary
+    appended — a bare mode-"w" ``json.dump`` would wipe the history
+    every run and leave the trajectory perpetually length-1. A missing
+    or corrupt previous artifact starts a fresh trajectory. NOTE for
+    CI: the artifact is gitignored, so accumulation only works if the
+    workflow RESTORES the previous run's file into the workspace before
+    the bench runs (ci.yml does this with ``actions/cache``) — uploads
+    alone never land back in the next run's tree. Returns the payload
+    it wrote (pinned by ``tests/test_bench_artifact.py``)."""
+    try:
+        with open(json_path) as f:
+            trajectory = json.load(f).get("trajectory", [])
+    except (OSError, ValueError):
+        trajectory = []
+    trajectory.append(
+        {"timestamp": meta["timestamp"], "parts": meta["parts"],
+         "smoke": meta["smoke"],
+         "rows": {r["name"]: round(r["seconds"], 6) for r in rows}})
+    payload = {"meta": meta, "benchmarks": rows,
+               "trajectory": trajectory}
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"[bench_multistream] wrote {json_path} "
+          f"({len(rows)} rows, {len(trajectory)} runs in trajectory)")
+    return payload
 
 
 def run(n_sessions: int = 4, n_queries: int = 8, *,
@@ -876,6 +1018,10 @@ def run(n_sessions: int = 4, n_queries: int = 8, *,
                           n_scenes=n_scenes)
         if "tiered" in parts:
             _bench_tiered(smoke=smoke)
+        if "spill" in parts:
+            _bench_spill(n_sessions, ticks=5 if smoke else 8,
+                         n_scenes=n_scenes,
+                         host_retain=32 if smoke else 64)
         if "incremental" in parts:
             _bench_incremental_index()
     finally:
@@ -883,33 +1029,12 @@ def run(n_sessions: int = 4, n_queries: int = 8, *,
         # still leaves every completed row on disk for CI to compare
         common.set_sink(None)
         if json_path:
-            # trajectory accumulates ACROSS runs: re-read the previous
-            # artifact and append this run's compact summary — a bare
-            # mode-"w" json.dump would wipe the history every run and
-            # leave the trajectory perpetually empty
-            try:
-                with open(json_path) as f:
-                    trajectory = json.load(f).get("trajectory", [])
-            except (OSError, ValueError):
-                trajectory = []
-            now = time.time()
-            trajectory.append(
-                {"timestamp": now, "parts": list(parts), "smoke": smoke,
-                 "rows": {r["name"]: round(r["seconds"], 6)
-                          for r in rows}})
-            payload = {"meta": {"bench": "multistream",
-                                "sessions": n_sessions,
-                                "queries": n_queries, "smoke": smoke,
-                                "parts": list(parts),
-                                "index_dtype": index_dtype,
-                                "timestamp": now},
-                       "benchmarks": rows,
-                       "trajectory": trajectory}
-            with open(json_path, "w") as f:
-                json.dump(payload, f, indent=2)
-            print(f"[bench_multistream] wrote {json_path} "
-                  f"({len(rows)} rows, {len(trajectory)} runs in "
-                  f"trajectory)")
+            write_json_artifact(
+                json_path, rows,
+                {"bench": "multistream", "sessions": n_sessions,
+                 "queries": n_queries, "smoke": smoke,
+                 "parts": list(parts), "index_dtype": index_dtype,
+                 "timestamp": time.time()})
 
 
 if __name__ == "__main__":
@@ -940,6 +1065,12 @@ if __name__ == "__main__":
                          "(flat vs two-stage scanned bytes, effective "
                          "capacity, restacks==0) + the recall-vs-"
                          "compression-ratio curve from bench_fig10")
+    ap.add_argument("--spill", action="store_true",
+                    help="the disk spill-tier bench (host_retain-"
+                         "bounded eviction='none' streams: demotion + "
+                         "cold-fault + warm-read throughput; bounded "
+                         "host / bit-identity / counter accounting "
+                         "asserted in-harness; tmpdir-scoped)")
     ap.add_argument("--index-dtype", choices=("float32", "int8"),
                     default="int8",
                     help="index dtype for the fused bench's quantised "
@@ -951,13 +1082,14 @@ if __name__ == "__main__":
     args = ap.parse_args()
     parts = None
     if args.cross or args.arena or args.churn or args.fused or \
-            args.shards or args.tiered:
+            args.shards or args.tiered or args.spill:
         parts = (("cross", "plan") if args.cross else ()) + \
                 (("arena",) if args.arena else ()) + \
                 (("churn",) if args.churn else ()) + \
                 (("fused",) if args.fused else ()) + \
                 (("shards",) if args.shards else ()) + \
-                (("tiered",) if args.tiered else ())
+                (("tiered",) if args.tiered else ()) + \
+                (("spill",) if args.spill else ())
     run(args.sessions, args.queries, smoke=args.smoke, parts=parts,
         json_path=JSON_PATH if args.json else None,
         index_dtype=args.index_dtype)

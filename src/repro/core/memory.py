@@ -72,8 +72,11 @@ A sizes vector is exactly a window with ``start == 0``.
 
 from __future__ import annotations
 
+import bisect
 import contextlib
 import functools
+import os
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
@@ -87,24 +90,61 @@ from repro.launch.sharding import memory_sharding, mesh_axis_size
 
 
 class FrameStore:
-    """Raw data layer: archive of frames by absolute index.
+    """Raw data layer: two-tier host+disk archive of frames by absolute
+    index (ARCHITECTURE.md "Storage tiers").
 
     Append-only at the front, BOUNDED at the back: ``trim(keep_from)``
-    drops every frame below an absolute id, closing the unbounded
-    host-RSS leak a 24/7 stream would otherwise accumulate (the paper's
-    NVMe archive; here the bound is the eviction window). Frames keep
-    their ABSOLUTE ids across trims — ``_base`` offsets the retained
-    list — so every id recorded in index/member tables stays stable;
-    reading a trimmed frame raises ``IndexError`` with the trim
-    horizon, never silently returns the wrong frame. The session layer
-    only trims below every live reference (ring windows + member
-    reservoirs + un-clustered pending frames), so a correctly-driven
-    store never hits that error."""
+    removes every host frame below an absolute id, closing the
+    unbounded host-RSS leak a 24/7 stream would otherwise accumulate.
+    Frames keep their ABSOLUTE ids across trims — ``_base`` offsets the
+    retained list — so every id recorded in index/member tables stays
+    stable.
 
-    def __init__(self):
+    Without a ``spill_dir`` (the historical single-tier contract),
+    trimming DELETES: reading a trimmed frame raises ``IndexError``
+    with the trim horizon, never silently returns the wrong frame, and
+    the session layer only trims below every live reference (ring
+    windows + member reservoirs + un-clustered pending frames).
+
+    With ``spill_dir`` set, ``trim`` becomes a DEMOTION to the paper's
+    NVMe archive tier: dropped frames are written to append-only ``.npy``
+    segment files of ≤ ``segment_frames`` frames each, contiguously
+    tiling ``[0, base)`` (demotions always continue at the current
+    base, so segment starts are strictly increasing and ``bisect``
+    finds any spilled id). ``get`` then transparently FAULTS spilled
+    ids back through a small LRU segment cache (``cache_segments``
+    whole segments), returning bytes bit-identical to what was appended
+    — the npy container round-trips dtype and contents exactly.
+    Durability is a tick-boundary affair: segments are written eagerly
+    but ``sync()`` (called by the session manager after each tick's
+    trims) is what fsyncs them — and the directory — to disk.
+    ``io_stats`` counts demotions (``spilled_frames``/``spilled_bytes``)
+    and reads (``spill_faults`` = segment loads from disk,
+    ``spill_cache_hits`` = reads served from the LRU cache) so tests
+    and benches can account for every demotion and fault. ``close()``
+    releases BOTH tiers: host frames, the cache, and every segment
+    file (churned sessions must leak neither RSS nor disk)."""
+
+    def __init__(self, spill_dir: Optional[str] = None, *,
+                 segment_frames: int = 64, cache_segments: int = 4):
+        assert segment_frames >= 1, segment_frames
+        assert cache_segments >= 1, cache_segments
         self._frames: List[np.ndarray] = []
         self._base = 0            # absolute id of _frames[0]
-        self.trimmed = 0          # total frames dropped so far
+        self.trimmed = 0          # total frames dropped from host so far
+        self.spill_dir = spill_dir
+        self.segment_frames = int(segment_frames)
+        self.cache_segments = int(cache_segments)
+        # (start, count, path, nbytes) per segment, tiling [0, _base)
+        self._segments: List[Tuple[int, int, str, int]] = []
+        self._seg_starts: List[int] = []       # bisect key for _segments
+        self._cache: "OrderedDict[int, np.ndarray]" = OrderedDict()
+        self._unsynced: List[str] = []         # written, not yet fsync'd
+        self._disk_bytes = 0                   # live segment bytes gauge
+        self.io_stats = {"spilled_frames": 0, "spilled_bytes": 0,
+                         "spill_faults": 0, "spill_cache_hits": 0}
+        if spill_dir is not None:
+            os.makedirs(spill_dir, exist_ok=True)
 
     def append(self, frames: np.ndarray) -> None:
         for f in np.asarray(frames):
@@ -116,34 +156,141 @@ class FrameStore:
 
     @property
     def base(self) -> int:
-        """Smallest absolute frame id still retained."""
+        """Smallest absolute frame id still retained ON HOST. With
+        spill enabled, ids below this are on disk, not gone."""
         return self._base
 
     @property
     def retained(self) -> int:
-        """Frames currently held on host (the actual RSS footprint)."""
+        """Frames currently held on host (the actual RSS footprint;
+        the LRU fault cache is bounded separately by
+        ``cache_segments * segment_frames``)."""
         return len(self._frames)
+
+    @property
+    def spill_enabled(self) -> bool:
+        return self.spill_dir is not None
+
+    @property
+    def spill_floor(self) -> int:
+        """Smallest absolute id ``get`` can serve: 0 with spill enabled
+        (every demoted frame faults back in), else the host base."""
+        return 0 if self.spill_enabled else self._base
+
+    @property
+    def disk_bytes(self) -> int:
+        """Bytes currently held in spill segment files (gauge — drops
+        to 0 at ``close``)."""
+        return self._disk_bytes
+
+    def reset_io_stats(self) -> None:
+        for k in self.io_stats:
+            self.io_stats[k] = 0
 
     def get(self, idx: Sequence[int]) -> np.ndarray:
         out = []
         for i in idx:
             i = int(i)
-            if i < self._base:
+            if i >= self._base:
+                out.append(self._frames[i - self._base])
+            elif self.spill_enabled and 0 <= i < self._base:
+                out.append(self._fault(i))
+            else:
                 raise IndexError(
                     f"frame {i} was trimmed from the archive "
                     f"(retained ids start at {self._base})")
-            out.append(self._frames[i - self._base])
         return np.stack(out)
 
     def trim(self, keep_from: int) -> int:
-        """Drop every frame with absolute id < ``keep_from``; returns
-        how many were dropped. Trimming past the end is clamped."""
+        """Drop every frame with absolute id < ``keep_from`` from the
+        host tier; returns how many left the host. Trimming past the
+        end is clamped. With spill enabled this is a demotion — the
+        dropped frames are written to segment files first and stay
+        readable through ``get``; without it they are gone."""
         drop = max(0, min(int(keep_from), len(self)) - self._base)
         if drop:
+            if self.spill_enabled:
+                self._spill(self._frames[:drop])
             del self._frames[:drop]
             self._base += drop
             self.trimmed += drop
         return drop
+
+    def _spill(self, frames: List[np.ndarray]) -> None:
+        """Demote ``frames`` (the host prefix starting at the current
+        base) into ≤ ``segment_frames``-frame npy segments appended
+        after the existing ones."""
+        start = self._base
+        for off in range(0, len(frames), self.segment_frames):
+            chunk = np.stack(frames[off:off + self.segment_frames])
+            seg_start = start + off
+            path = os.path.join(
+                self.spill_dir,
+                f"seg-{seg_start:012d}-{len(chunk):05d}.npy")
+            np.save(path, chunk, allow_pickle=False)
+            self._segments.append(
+                (seg_start, len(chunk), path, chunk.nbytes))
+            self._seg_starts.append(seg_start)
+            self._unsynced.append(path)
+            self._disk_bytes += chunk.nbytes
+            self.io_stats["spilled_frames"] += len(chunk)
+            self.io_stats["spilled_bytes"] += chunk.nbytes
+
+    def _fault(self, i: int) -> np.ndarray:
+        """Serve one spilled absolute id from its segment, via the LRU
+        whole-segment cache (a miss loads — and counts — one segment)."""
+        k = bisect.bisect_right(self._seg_starts, i) - 1
+        start, count, path, _ = self._segments[k]
+        assert start <= i < start + count, (i, start, count)
+        seg = self._cache.get(start)
+        if seg is not None:
+            self._cache.move_to_end(start)
+            self.io_stats["spill_cache_hits"] += 1
+        else:
+            seg = np.load(path, allow_pickle=False)
+            self.io_stats["spill_faults"] += 1
+            self._cache[start] = seg
+            while len(self._cache) > self.cache_segments:
+                self._cache.popitem(last=False)
+        return seg[i - start]
+
+    def sync(self) -> int:
+        """fsync every segment written since the last sync (plus the
+        spill directory, so the new names are durable too). The session
+        manager calls this at tick boundaries — segment writes inside a
+        tick are buffered, the tick commit is the durability point.
+        Returns how many files were synced."""
+        if not self._unsynced:
+            return 0
+        for path in self._unsynced:
+            with open(path, "rb") as f:
+                os.fsync(f.fileno())
+        dfd = os.open(self.spill_dir, os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+        n = len(self._unsynced)
+        self._unsynced.clear()
+        return n
+
+    def close(self) -> None:
+        """Release BOTH tiers: host frames, the fault cache, and every
+        spill segment file (and the per-session spill directory, if
+        empty). Idempotent; counters survive so the session layer can
+        fold them into its closed-session sums first."""
+        self._frames.clear()
+        self._cache.clear()
+        self._unsynced.clear()
+        for _, _, path, _ in self._segments:
+            with contextlib.suppress(OSError):
+                os.remove(path)
+        self._segments.clear()
+        self._seg_starts.clear()
+        self._disk_bytes = 0
+        if self.spill_dir is not None:
+            with contextlib.suppress(OSError):
+                os.rmdir(self.spill_dir)
 
 
 @dataclass

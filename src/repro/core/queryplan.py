@@ -74,8 +74,8 @@ from __future__ import annotations
 import functools
 import time
 from dataclasses import dataclass, field
-from typing import (Callable, Dict, List, NamedTuple, Optional, Sequence,
-                    Tuple)
+from typing import (Callable, Dict, List, Mapping, NamedTuple, Optional,
+                    Sequence, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -164,7 +164,9 @@ class QueryPlan:
         return "\n".join(lines)
 
 
-def build_plan(specs: Sequence[QuerySpec], cfg) -> QueryPlan:
+def build_plan(specs: Sequence[QuerySpec], cfg,
+               sessions: Optional[Mapping[int, object]] = None
+               ) -> QueryPlan:
     """Group compatible specs into execution groups.
 
     ``cfg`` supplies the ``tau``/``theta``/``beta``/``n_max`` defaults
@@ -172,6 +174,15 @@ def build_plan(specs: Sequence[QuerySpec], cfg) -> QueryPlan:
     Groups are emitted in first-spec-appearance order; within a group,
     sessions run in sorted-sid order and each session's queries keep
     arrival order (the order its PRNG chain is consumed in).
+
+    When ``sessions`` (sid → session state) is provided — the
+    ``SessionManager.plan`` path — the planner also validates strategy
+    ↔ session compatibility at PLAN time: the ``uniform`` strategy
+    draws arbitrary archive frame ids, so against a window-evicting
+    session whose ``FrameStore`` has no spill tier it is rejected here
+    with a clear error instead of the deep ``IndexError`` the read
+    would otherwise hit. With spill enabled the trimmed frames fault
+    back from disk, so ``uniform`` is legal again and no check fires.
     """
     specs = list(specs)
     groups: Dict[GroupKey, ExecutionGroup] = {}
@@ -179,6 +190,22 @@ def build_plan(specs: Sequence[QuerySpec], cfg) -> QueryPlan:
         if spec.text is None and spec.embedding is None:
             raise ValueError(f"spec {j}: needs text or embedding")
         strat = get_strategy(spec.strategy)
+        if strat.name == "uniform" and sessions is not None:
+            st = sessions.get(int(spec.sid))
+            policy = (st.memory.eviction.name if st is not None
+                      else "none")
+            if (st is not None and policy != "none"
+                    and not st.frames.spill_enabled):
+                raise ValueError(
+                    f"spec {j}: strategy 'uniform' draws arbitrary "
+                    f"archive frame ids, but session {spec.sid} evicts "
+                    f"with policy '{policy}' and has no spill tier — "
+                    f"its trimmed frames are deleted, so uniform reads "
+                    f"would IndexError in FrameStore.get. Use a "
+                    f"members-expanding strategy, keep the session on "
+                    f"eviction='none', or set VenusConfig(spill_dir=..."
+                    f") so trimmed frames demote to disk and fault "
+                    f"back in.")
         key = GroupKey(
             strategy=strat.name,
             budget=int(spec.budget if spec.budget is not None

@@ -43,6 +43,7 @@ recycled under a new tenant.
 from __future__ import annotations
 
 import contextlib
+import os
 import time
 import weakref
 from dataclasses import dataclass
@@ -112,12 +113,46 @@ class VenusConfig:
     coarse_capacity: int = 0
     coarse_block: int = 64
     coarse_topb: int = 4
+    # disk spill tier (ARCHITECTURE.md "Storage tiers"): spill_dir set
+    # turns FrameStore.trim into a DEMOTION — dropped host frames are
+    # written to append-only npy segment files under
+    # spill_dir/session-<sid>/ and get() faults them back through an
+    # LRU segment cache, so every historical absolute id stays readable
+    # (the paper's NVMe archive tier). host_retain additionally bounds
+    # the HOST tier: _trim_archives demotes frames beyond the newest
+    # host_retain even for eviction="none" sessions (closing their 24/7
+    # RSS leak without breaking the keep-everything contract — the
+    # history moves to disk instead of growing RSS forever).
+    spill_dir: Optional[str] = None
+    spill_segment_frames: int = 64
+    spill_cache_segments: int = 4
+    host_retain: Optional[int] = None
     # querying (Eq. 5-7)
     tau: float = 0.1
     theta: float = 0.9
     beta: float = 1.0
     n_max: int = 32
     seed: int = 0
+
+    def __post_init__(self):
+        if self.spill_segment_frames < 1:
+            raise ValueError(
+                f"spill_segment_frames must be >= 1, got "
+                f"{self.spill_segment_frames}")
+        if self.spill_cache_segments < 1:
+            raise ValueError(
+                f"spill_cache_segments must be >= 1, got "
+                f"{self.spill_cache_segments}")
+        if self.host_retain is not None:
+            if self.spill_dir is None:
+                raise ValueError(
+                    "host_retain bounds the HOST tier by demoting cold "
+                    "frames to disk — it requires spill_dir to be set "
+                    "(without a spill tier, demotion would be deletion "
+                    "and break the keep-everything contract)")
+            if self.host_retain < 1:
+                raise ValueError(
+                    f"host_retain must be >= 1, got {self.host_retain}")
 
 
 @dataclass
@@ -152,7 +187,11 @@ class SessionState:
                                   merge_threshold=cfg.merge_threshold,
                                   coarse_capacity=cfg.coarse_capacity,
                                   coarse_block=cfg.coarse_block)
-        self.frames = FrameStore()
+        spill = (None if cfg.spill_dir is None
+                 else os.path.join(cfg.spill_dir, f"session-{sid:05d}"))
+        self.frames = FrameStore(
+            spill, segment_frames=cfg.spill_segment_frames,
+            cache_segments=cfg.spill_cache_segments)
         self.pending: List[np.ndarray] = []   # frames not yet clustered
         self.pending_base = 0                 # abs index of pending[0]
         self.key = jax.random.key(cfg.seed)
@@ -332,6 +371,10 @@ class SessionManager:
         # service-level mem_* monitoring counters monotonic across
         # stream closes (a popped session takes its live dict with it)
         self.closed_mem_stats: Dict[str, int] = {}
+        # same treatment for closed sessions' FrameStore spill counters
+        # (close_session deletes the store's segments, so the counters
+        # must be folded here first to stay monotonic)
+        self.closed_frame_stats: Dict[str, int] = {}
         self._arena_stack: Optional[ArenaStackView] = None
         _LIVE_MANAGERS.add(self)
 
@@ -344,8 +387,10 @@ class SessionManager:
             self.io_stats[k] = 0
         if include_memories:
             self.closed_mem_stats.clear()
+            self.closed_frame_stats.clear()
             for st in self.sessions.values():
                 st.memory.reset_io_stats()
+                st.frames.reset_io_stats()
             if self.arena is not None:
                 self.arena.reset_io_stats()
 
@@ -396,10 +441,19 @@ class SessionManager:
         reset. The popped session's memory is detached from the arena
         first, so any handle the caller still holds reads the session's
         own host mirrors instead of rows that are about to be recycled.
-        Returns the session's final ingest stats."""
+        Frame storage is released on BOTH tiers: the host ``FrameStore``
+        is dropped and its spill segment files are deleted, so a churn
+        workload leaks neither RSS nor disk (the store's spill counters
+        are folded into ``closed_frame_stats`` first, keeping the
+        service-level sums monotonic). Returns the session's final
+        ingest stats."""
         st = self.sessions.pop(sid)
         for k, v in st.memory.io_stats.items():
             self.closed_mem_stats[k] = self.closed_mem_stats.get(k, 0) + v
+        for k, v in st.frames.io_stats.items():
+            self.closed_frame_stats[k] = (
+                self.closed_frame_stats.get(k, 0) + v)
+        st.frames.close()
         self._stacks = {k: v for k, v in self._stacks.items()
                         if sid not in k}
         if self.arena is not None:
@@ -461,21 +515,49 @@ class SessionManager:
         reservoirs of the rows inside the current ring window (so
         ``cluster_merge``'s folded members keep their evicted frames
         reachable and retained) and (b) ``pending_base`` (frames not
-        yet clustered). Only sessions with a window eviction policy
-        trim — under ``eviction="none"`` nothing ever leaves the
+        yet clustered).
+
+        Without a spill tier, only sessions with a window eviction
+        policy trim — under ``eviction="none"`` nothing ever leaves the
         window, so the historical keep-everything archive contract is
-        untouched. NOTE the ``uniform`` query strategy draws arbitrary
-        archive ids and is therefore incompatible with window-evicting
-        sessions (it always was — their index no longer spans the
-        stream); trimmed ids now fail fast in ``FrameStore.get`` rather
-        than silently aliasing."""
+        untouched — and the ``uniform`` query strategy (which draws
+        arbitrary archive ids) is incompatible with window-evicting
+        sessions: ``build_plan`` rejects that combination up front and
+        trimmed ids fail fast in ``FrameStore.get`` rather than
+        silently aliasing.
+
+        With ``VenusConfig(spill_dir=...)`` the trim is a DEMOTION —
+        dropped frames move to npy segments and fault back through
+        ``get`` — which changes the policy in two ways: (1)
+        ``host_retain`` bounds the host tier even for
+        ``eviction="none"`` sessions (their cold frames demote instead
+        of growing RSS forever; every id stays readable, so the
+        keep-everything contract holds at the *store* level), and (2)
+        window-evicting sessions may demote beyond the live-reference
+        horizon too (a faulted read is legal now), so ``uniform`` and
+        ``cluster_merge``'s folded-reservoir reads succeed from disk.
+        Demoting below ``pending_base`` is safe with spill on: frames
+        awaiting clustering are duplicated in ``SessionState.pending``,
+        which is what ``cluster_stage`` reads. Each session's store is
+        ``sync()``'d here — the tick boundary is the fsync/durability
+        point for that tick's demotions."""
         trimmed = 0
+        retain = self.cfg.host_retain
         for sid in sids:
             st = self.sessions[sid]
+            fs = st.frames
+            spill = fs.spill_enabled
             if st.memory.eviction.name == "none":
-                continue
-            keep = min(st.memory.min_live_frame(), st.pending_base)
-            n = st.frames.trim(keep)
+                if not (spill and retain is not None):
+                    continue
+                keep = len(fs) - retain
+            else:
+                keep = min(st.memory.min_live_frame(), st.pending_base)
+                if spill and retain is not None:
+                    keep = max(keep, len(fs) - retain)
+            n = fs.trim(keep)
+            if spill:
+                fs.sync()
             if n:
                 st.stats["frames_trimmed"] += n
                 trimmed += n
@@ -490,8 +572,11 @@ class SessionManager:
     # tests/test_crosssession.py + tests/test_queryplan.py).
 
     def plan(self, specs: Sequence[QuerySpec]) -> QueryPlan:
-        """Group specs into execution groups (one fused scan each)."""
-        return build_plan(specs, self.cfg)
+        """Group specs into execution groups (one fused scan each).
+        Passing the live sessions lets the planner reject plans that
+        could only fail deep in execution (e.g. ``uniform`` against a
+        window-evicting session with no spill tier)."""
+        return build_plan(specs, self.cfg, sessions=self.sessions)
 
     def execute(self, plan: QueryPlan, *, fused: bool = True,
                 coarse: bool = True) -> List[QueryResult]:

@@ -185,7 +185,18 @@ class VenusService:
         candidate gather: O(S·Q·(T+K)) fused, no O(S·Q·capacity) term,
         which is the whole point of scanning shard-locally.
         ``archive_trimmed_frames`` counts host frames the bounded
-        ``FrameStore`` dropped below the live eviction windows."""
+        ``FrameStore`` dropped below the live eviction windows.
+
+        Spill-tier deployments (``VenusConfig(spill_dir=...)``) add the
+        storage-tier counters, summed over live AND closed sessions
+        (closes fold into ``closed_frame_stats`` like the ``mem_*``
+        sums): ``spilled_frames`` / ``spilled_bytes`` (demotions the
+        host tier wrote to disk segments), ``spill_faults`` (segment
+        loads a ``get`` of a spilled id paid), ``spill_cache_hits``
+        (spilled reads served from the LRU segment cache), and the
+        gauge ``spill_disk_bytes`` (bytes currently in live sessions'
+        segment files — returns to baseline when streams close, which
+        is the disk-leak invariant to alert on)."""
         out: Dict[str, int] = dict(self.manager.io_stats)
         for k, v in kops.scan_counts().items():
             out[f"kops_{k}"] = v
@@ -199,4 +210,12 @@ class VenusService:
                 mem_sums[k] = mem_sums.get(k, 0) + v
         for k, v in mem_sums.items():
             out[f"mem_{k}"] = v
+        frame_sums = dict(self.manager.closed_frame_stats)
+        disk_bytes = 0
+        for st in self.manager.sessions.values():
+            for k, v in st.frames.io_stats.items():
+                frame_sums[k] = frame_sums.get(k, 0) + v
+            disk_bytes += st.frames.disk_bytes
+        out.update(frame_sums)
+        out["spill_disk_bytes"] = disk_bytes
         return out

@@ -1,0 +1,74 @@
+"""The cross-run bench ``trajectory`` merge (ISSUE 9 satellite).
+
+Root cause of the perpetually length-1 trajectory: the artifact is
+gitignored and ``actions/upload-artifact`` never lands files back in
+the NEXT run's workspace, so in CI the bench's re-read-before-rewrite
+always found nothing. Two pins here:
+
+* ``write_json_artifact`` APPENDS to a pre-seeded artifact's
+  trajectory (and starts fresh on a missing/corrupt one) — the merge
+  logic itself,
+* ``ci.yml`` actually restores the previous artifact before the bench
+  runs (``actions/cache/restore``) and saves it after — without that
+  step the merge logic never sees history, which was the bug.
+"""
+
+import json
+
+import pytest
+
+bench = pytest.importorskip(
+    "benchmarks.bench_multistream",
+    reason="bench module needs the repo root on sys.path")
+
+ROWS = [{"name": "multistream/spill", "seconds": 1.25,
+         "derived": {"sessions": 4}},
+        {"name": "multistream/churn", "seconds": 0.5, "derived": {}}]
+META = {"bench": "multistream", "sessions": 4, "queries": 8,
+        "smoke": True, "parts": ["spill", "churn"],
+        "index_dtype": "int8", "timestamp": 1000.0}
+
+
+def test_trajectory_appends_to_preseeded_artifact(tmp_path):
+    path = tmp_path / "BENCH_multistream.json"
+    previous = [
+        {"timestamp": 1.0, "parts": ["cross"], "smoke": True,
+         "rows": {"multistream/cross": 0.111}},
+        {"timestamp": 2.0, "parts": ["arena"], "smoke": False,
+         "rows": {"multistream/arena": 0.222}}]
+    path.write_text(json.dumps(
+        {"meta": {"timestamp": 2.0}, "benchmarks": [],
+         "trajectory": previous}))
+    payload = bench.write_json_artifact(str(path), ROWS, dict(META))
+    assert len(payload["trajectory"]) == 3
+    # the pre-seeded history survives VERBATIM, in order
+    assert payload["trajectory"][:2] == previous
+    newest = payload["trajectory"][-1]
+    assert newest["timestamp"] == 1000.0
+    assert newest["parts"] == ["spill", "churn"]
+    assert newest["rows"] == {"multistream/spill": 1.25,
+                              "multistream/churn": 0.5}
+    # this run's full rows replace the previous run's (only the
+    # trajectory accumulates)
+    assert payload["benchmarks"] == ROWS
+    # and what's on disk is what was returned
+    assert json.loads(path.read_text()) == payload
+
+
+def test_trajectory_fresh_on_missing_or_corrupt(tmp_path):
+    # no previous artifact -> trajectory starts at length 1
+    path = tmp_path / "fresh.json"
+    payload = bench.write_json_artifact(str(path), ROWS, dict(META))
+    assert len(payload["trajectory"]) == 1
+    # corrupt previous artifact -> same, not a crash
+    bad = tmp_path / "corrupt.json"
+    bad.write_text("{not json")
+    payload = bench.write_json_artifact(str(bad), ROWS, dict(META))
+    assert len(payload["trajectory"]) == 1
+
+
+def test_trajectory_accumulates_run_over_run(tmp_path):
+    path = tmp_path / "BENCH_multistream.json"
+    for n in range(1, 4):
+        payload = bench.write_json_artifact(str(path), ROWS, dict(META))
+        assert len(payload["trajectory"]) == n

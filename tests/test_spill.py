@@ -1,0 +1,320 @@
+"""The two-tier host+disk ``FrameStore`` (ARCHITECTURE.md "Storage
+tiers") and its session wiring:
+
+* spill-on ``trim`` is a DEMOTION — dropped frames land in npy segment
+  files and ``get`` faults them back bit-identically through the LRU
+  segment cache; spill-off keeps the historical delete-and-raise
+  contract (pinned against an unbounded twin; the hypothesis property
+  test over random append/trim/get sequences lives in
+  ``tests/test_spill_properties.py``),
+* ``VenusConfig(spill_dir=..., host_retain=...)`` bounds the HOST tier
+  of ``eviction="none"`` sessions: ``_trim_archives`` demotes their
+  cold frames, keeping ``retained <= host_retain`` while every
+  historical absolute id stays readable (the 24/7 RSS-leak fix),
+* ``cluster_merge``'s folded-reservoir ids and ``uniform``-strategy
+  reads succeed from disk after the host window moved past them,
+* ``close_session`` releases BOTH tiers — churned sessions leak
+  neither RSS nor disk (usage returns to baseline),
+* ``build_plan`` rejects ``uniform`` against window-evicting sessions
+  up front when spill is off (deep ``IndexError`` otherwise), and
+  accepts it again when spill is on,
+* ``VenusService.io_stats()`` accounts for every demotion and fault
+  (``spilled_frames``/``spilled_bytes``/``spill_faults``/
+  ``spill_cache_hits`` + the ``spill_disk_bytes`` gauge).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.memory import FrameStore
+from repro.core.queryplan import QuerySpec, build_plan
+from repro.core.session import SessionManager, VenusConfig
+from repro.data.video import PixelEmbedder, VideoWorld, WorldConfig
+from repro.serving.venus_service import VenusService
+
+CHUNK = 32
+
+
+def _worlds(n):
+    return [VideoWorld(WorldConfig(n_scenes=4 + s, seed=50 + s))
+            for s in range(n)]
+
+
+def _mgr(cfg):
+    return SessionManager(cfg, PixelEmbedder(dim=64), embed_dim=64)
+
+
+def _chunk_at(w, t, chunk=CHUNK):
+    lo = (t * chunk) % max(w.total_frames - chunk, 1)
+    return np.asarray(w.frames[lo:lo + chunk], np.float32)
+
+
+def _disk_usage(root) -> int:
+    total = 0
+    for d, _, files in os.walk(root):
+        for f in files:
+            total += os.path.getsize(os.path.join(d, f))
+    return total
+
+
+# ---------------------------------------------------------------- unit tier
+
+
+def test_spill_roundtrip_bit_identical(tmp_path):
+    fs = FrameStore(str(tmp_path / "s0"), segment_frames=4,
+                    cache_segments=2)
+    twin = FrameStore()                     # unbounded single-tier twin
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        chunk = rng.standard_normal((7, 4, 4, 3)).astype(np.float32)
+        fs.append(chunk)
+        twin.append(chunk)
+        fs.trim(len(fs) - 6)
+    assert fs.retained == 6 and len(fs) == len(twin) == 35
+    assert fs.base == 29 and fs.spill_floor == 0
+    ids = list(range(len(fs)))
+    assert fs.get(ids).tobytes() == twin.get(ids).tobytes()
+    # demotion accounting: everything that left the host was spilled
+    assert fs.io_stats["spilled_frames"] == fs.trimmed == 29
+    assert fs.io_stats["spilled_bytes"] == fs.disk_bytes > 0
+
+
+def test_segment_chunking_and_sync(tmp_path):
+    fs = FrameStore(str(tmp_path / "s0"), segment_frames=4)
+    fs.append(np.arange(10 * 12, dtype=np.float32).reshape(10, 2, 2, 3))
+    fs.trim(10)
+    # 10 demoted frames chunk into ceil(10/4) = 3 append-only segments
+    segs = sorted(os.listdir(tmp_path / "s0"))
+    assert len(segs) == 3 and all(s.endswith(".npy") for s in segs)
+    assert fs.sync() == 3                   # first sync flushes all 3
+    assert fs.sync() == 0                   # nothing new -> no-op
+    fs.trim(10)                             # no-op trim spills nothing
+    assert fs.sync() == 0
+
+
+def test_lru_cache_hit_and_fault_counters(tmp_path):
+    fs = FrameStore(str(tmp_path / "s0"), segment_frames=2,
+                    cache_segments=1)
+    fs.append(np.arange(8 * 12, dtype=np.float32).reshape(8, 2, 2, 3))
+    fs.trim(6)                              # segments [0,2) [2,4) [4,6)
+    fs.get([0])                             # fault seg0
+    fs.get([1])                             # hit   seg0
+    fs.get([2])                             # fault seg1 (evicts seg0)
+    fs.get([0])                             # fault seg0 again
+    assert fs.io_stats["spill_faults"] == 3
+    assert fs.io_stats["spill_cache_hits"] == 1
+
+
+def test_spill_off_contract_unchanged():
+    fs = FrameStore()
+    fs.append(np.ones((5, 2, 2, 3), np.float32))
+    fs.trim(3)
+    assert fs.spill_floor == fs.base == 3 and fs.trimmed == 3
+    with pytest.raises(IndexError, match="trimmed from the archive"):
+        fs.get([2])
+    assert fs.sync() == 0                   # no spill tier -> no-op
+    assert fs.disk_bytes == 0
+    assert fs.io_stats["spilled_frames"] == 0
+
+
+def test_close_releases_disk(tmp_path):
+    spill = tmp_path / "s0"
+    fs = FrameStore(str(spill), segment_frames=2)
+    fs.append(np.ones((6, 2, 2, 3), np.float32))
+    fs.trim(4)
+    fs.get([0])
+    assert fs.disk_bytes > 0 and os.path.exists(spill)
+    fs.close()
+    assert fs.disk_bytes == 0 and fs.retained == 0
+    assert not os.path.exists(spill)
+    fs.close()                              # idempotent
+    # counters survive close, for the manager's closed-session fold
+    assert fs.io_stats["spilled_frames"] == 4
+
+
+def test_config_validation(tmp_path):
+    with pytest.raises(ValueError, match="requires spill_dir"):
+        VenusConfig(host_retain=64)
+    with pytest.raises(ValueError, match="host_retain must be >= 1"):
+        VenusConfig(spill_dir=str(tmp_path), host_retain=0)
+    with pytest.raises(ValueError, match="spill_segment_frames"):
+        VenusConfig(spill_segment_frames=0)
+    with pytest.raises(ValueError, match="spill_cache_segments"):
+        VenusConfig(spill_cache_segments=-1)
+    VenusConfig(spill_dir=str(tmp_path), host_retain=64)  # valid
+
+
+# ----------------------------------------------------------- session tier
+
+
+def test_none_session_host_retain_bounded_and_bit_identical(tmp_path):
+    """The acceptance criterion: an ``eviction="none"`` session
+    ingesting >= 4x ``host_retain`` frames keeps ``retained`` within
+    budget while EVERY historical absolute id reads back bit-identical
+    to an unbounded twin, with the counters accounting for every
+    demotion and fault and zero restacks throughout."""
+    retain = 48
+    cfg = VenusConfig(max_partition_len=32, spill_dir=str(tmp_path),
+                      host_retain=retain, spill_segment_frames=16)
+    mgr = _mgr(cfg)
+    sid = mgr.create_session()              # eviction="none" (default)
+    assert mgr[sid].memory.eviction.name == "none"
+    w = _worlds(1)[0]
+    twin = FrameStore()
+    t = 0
+    while len(twin) < 4 * retain:
+        c = _chunk_at(w, t)
+        t += 1
+        twin.append(c)
+        mgr.ingest_tick({sid: c})
+        assert mgr[sid].frames.retained <= retain
+    fs = mgr[sid].frames
+    assert len(fs) == len(twin) >= 4 * retain
+    assert fs.retained <= retain
+    # every demotion accounted for
+    assert (fs.io_stats["spilled_frames"] == fs.trimmed
+            == len(fs) - fs.retained > 0)
+    # any historical id: bit-identical to the unbounded twin
+    ids = list(range(len(fs)))
+    assert fs.get(ids).tobytes() == twin.get(ids).tobytes()
+    # every fault accounted for: each spilled-id read was either a
+    # segment load or a cache hit
+    assert (fs.io_stats["spill_faults"] + fs.io_stats["spill_cache_hits"]
+            == fs.trimmed)
+    assert fs.io_stats["spill_faults"] >= 1
+    assert mgr.io_stats["stack_rebuilds"] == 0
+    assert mgr.io_stats["archive_trimmed_frames"] == fs.trimmed
+
+
+def test_cluster_merge_folded_reservoirs_fault_from_disk(tmp_path):
+    """Under ``cluster_merge`` + an aggressive ``host_retain``, folded
+    member reservoirs reference frames the host tier demoted; their
+    reads must fault from disk bit-identically (spill-off would raise
+    here), including on a RECYCLED arena slot."""
+    cfg = VenusConfig(max_partition_len=32, memory_capacity=16,
+                      eviction="cluster_merge", spill_dir=str(tmp_path),
+                      host_retain=40, spill_segment_frames=8)
+    mgr = _mgr(cfg)
+    w = _worlds(1)[0]
+
+    def drive(sid):
+        twin = FrameStore()
+        for t in range(8):
+            c = _chunk_at(w, t)
+            twin.append(c)
+            mgr.ingest_tick({sid: c})
+        fs = mgr[sid].frames
+        lo = mgr[sid].memory.min_live_frame()
+        # the demotion horizon passed live reservoir references — the
+        # exact situation that used to IndexError
+        assert lo < fs.base, (lo, fs.base)
+        assert fs.get([lo]).tobytes() == twin.get([lo]).tobytes()
+        # a members-expanding query's frame ids all read back fine
+        res = mgr.query(sid, "anything",
+                        query_emb=np.full(64, 0.125, np.float32))
+        got = fs.get(res.frame_ids)
+        assert got.tobytes() == twin.get(res.frame_ids).tobytes()
+        return fs
+
+    fs = drive(mgr.create_session())
+    assert fs.io_stats["spill_faults"] >= 1
+    mgr.close_session(0)
+    sid2 = mgr.create_session()             # recycles the arena slot
+    assert mgr.arena.io_stats["slot_reuses"] == 1
+    drive(sid2)
+    assert mgr.io_stats["stack_rebuilds"] == 0
+
+
+def test_churn_disk_usage_returns_to_baseline(tmp_path):
+    """create -> ingest -> close churn leaks neither RSS nor disk:
+    ``close_session`` drops the host FrameStore AND deletes the spill
+    segments, so disk usage under ``spill_dir`` returns to baseline
+    after every close."""
+    cfg = VenusConfig(max_partition_len=32, spill_dir=str(tmp_path),
+                      host_retain=32, spill_segment_frames=8)
+    mgr = _mgr(cfg)
+    w = _worlds(1)[0]
+    assert _disk_usage(tmp_path) == 0
+    for r in range(3):
+        sid = mgr.create_session()
+        twin = FrameStore()
+        for t in range(5):
+            c = _chunk_at(w, t)
+            twin.append(c)
+            mgr.ingest_tick({sid: c})
+        fs = mgr[sid].frames
+        assert fs.disk_bytes > 0 and _disk_usage(tmp_path) > 0
+        ids = list(range(len(fs)))
+        assert fs.get(ids).tobytes() == twin.get(ids).tobytes()
+        mgr.close_session(sid)
+        assert _disk_usage(tmp_path) == 0   # baseline restored
+    assert mgr.io_stats["sessions_closed"] == 3
+    # the closed sessions' spill counters survived the closes
+    assert mgr.closed_frame_stats["spilled_frames"] > 0
+
+
+def test_uniform_rejected_without_spill_legal_with(tmp_path):
+    w = _worlds(1)[0]
+    # window eviction + no spill: rejected at PLAN time, naming the
+    # session and its policy
+    mgr = _mgr(VenusConfig(max_partition_len=32, memory_capacity=16,
+                           eviction="sliding_window"))
+    sid = mgr.create_session()
+    mgr.ingest_tick({sid: _chunk_at(w, 0)})
+    with pytest.raises(ValueError) as ei:
+        mgr.plan([QuerySpec(sid=sid, text="x", strategy="uniform")])
+    assert f"session {sid}" in str(ei.value)
+    assert "sliding_window" in str(ei.value)
+    # eviction="none": legal (nothing is ever trimmed)
+    mgr2 = _mgr(VenusConfig(max_partition_len=32))
+    sid2 = mgr2.create_session()
+    mgr2.ingest_tick({sid2: _chunk_at(w, 0)})
+    mgr2.plan([QuerySpec(sid=sid2, text="x", strategy="uniform")])
+    # window eviction + spill: legal again — and the reads SUCCEED
+    # from disk end-to-end
+    mgr3 = _mgr(VenusConfig(max_partition_len=32, memory_capacity=16,
+                            eviction="sliding_window",
+                            spill_dir=str(tmp_path), host_retain=40))
+    sid3 = mgr3.create_session()
+    twin = FrameStore()
+    for t in range(6):
+        c = _chunk_at(w, t)
+        twin.append(c)
+        mgr3.ingest_tick({sid3: c})
+    res = mgr3.query_specs([QuerySpec(
+        sid=sid3, strategy="uniform", budget=8,
+        embedding=np.full(64, 0.125, np.float32))])[0]
+    fs = mgr3[sid3].frames
+    assert fs.base > 0                      # history left the host tier
+    got = fs.get(res.frame_ids)             # ...yet every draw reads
+    assert got.tobytes() == twin.get(res.frame_ids).tobytes()
+    # sessions= is optional: a bare build_plan still works (no gate)
+    build_plan([QuerySpec(sid=sid, text="x", strategy="uniform")],
+               mgr.cfg)
+
+
+def test_service_io_stats_accounts_spill(tmp_path):
+    cfg = VenusConfig(max_partition_len=32, spill_dir=str(tmp_path),
+                      host_retain=32, spill_segment_frames=8)
+    mgr = _mgr(cfg)
+    svc = VenusService(mgr, engine=None)
+    w = _worlds(1)[0]
+    sid = mgr.create_session()
+    for t in range(5):
+        mgr.ingest_tick({sid: _chunk_at(w, t)})
+    fs = mgr[sid].frames
+    fs.get(list(range(len(fs))))
+    stats = svc.io_stats()
+    assert stats["spilled_frames"] == fs.trimmed > 0
+    assert stats["spilled_bytes"] == fs.io_stats["spilled_bytes"] > 0
+    assert stats["spill_faults"] == fs.io_stats["spill_faults"] >= 1
+    assert stats["spill_cache_hits"] == fs.io_stats["spill_cache_hits"]
+    assert stats["spill_disk_bytes"] == fs.disk_bytes > 0
+    spilled_before_close = stats["spilled_frames"]
+    mgr.close_session(sid)
+    stats = svc.io_stats()
+    # counters stay monotonic across the close; the disk gauge drops
+    assert stats["spilled_frames"] == spilled_before_close
+    assert stats["spill_disk_bytes"] == 0

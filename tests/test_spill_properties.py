@@ -1,0 +1,67 @@
+"""Property test for the two-tier ``FrameStore``: random
+append/trim/get sequences against an unbounded twin.
+
+The invariant (ISSUE 9 / ARCHITECTURE.md "Storage tiers"): for EVERY
+absolute id ever archived, ``get(i)`` is bit-identical to an unbounded
+single-tier twin whenever the id is live or spilled, and raises
+``IndexError`` only for ids below the spill floor — which is 0 with
+spill enabled (everything faults back in) and the host base with spill
+disabled (trimmed means deleted).
+"""
+
+import os
+import shutil
+import tempfile
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.memory import FrameStore  # noqa: E402
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data(), spill=st.booleans())
+def test_random_ops_match_unbounded_twin(data, spill):
+    tmp = tempfile.mkdtemp() if spill else None
+    try:
+        fs = FrameStore(os.path.join(tmp, "s") if spill else None,
+                        segment_frames=3, cache_segments=2)
+        twin = FrameStore()
+        counter = 0
+        for _ in range(data.draw(st.integers(2, 12))):
+            op = data.draw(st.sampled_from(["append", "trim", "get"]))
+            if op == "append":
+                k = data.draw(st.integers(1, 5))
+                frames = (np.arange(counter, counter + k,
+                                    dtype=np.float32)[:, None, None, None]
+                          * np.ones((1, 2, 2, 3), np.float32))
+                counter += k
+                fs.append(frames)
+                twin.append(frames)
+            elif op == "trim" and len(fs):
+                fs.trim(data.draw(st.integers(0, len(fs))))
+            elif op == "get" and len(fs):
+                i = data.draw(st.integers(0, len(fs) - 1))
+                if i >= fs.spill_floor:
+                    assert (fs.get([i]).tobytes()
+                            == twin.get([i]).tobytes())
+                else:
+                    with pytest.raises(IndexError):
+                        fs.get([i])
+        assert fs.spill_floor == (0 if spill else fs.base)
+        # demotion accounting holds at every stopping point
+        assert fs.io_stats["spilled_frames"] == (fs.trimmed if spill
+                                                 else 0)
+        for i in range(len(fs)):            # final exhaustive sweep
+            if i >= fs.spill_floor:
+                assert fs.get([i]).tobytes() == twin.get([i]).tobytes()
+            else:
+                with pytest.raises(IndexError):
+                    fs.get([i])
+    finally:
+        if tmp is not None:
+            shutil.rmtree(tmp, ignore_errors=True)
