@@ -99,11 +99,15 @@ def recall_vs_compression(ratios=(1, 2, 4, 8), *, capacity: int = 128,
              {"compression_ratio": f"{ratio}x",
               "ingested_rows": total, "fine_capacity": capacity,
               "recall": f"{curve[ratio][0]:.3f}",
-              "oracle_recall": f"{curve[ratio][1]:.3f}"})
+              "oracle_recall": f"{curve[ratio][1]:.3f}"},
+             value=curve[ratio][0])
     # the paper-facing claim, asserted wherever the curve runs: ≥ 4×
-    # capacity of history stays useful through the summary tier
+    # capacity of history stays useful through the summary tier — and
+    # every recorded recall is a real measurement, never 0.0 (a zero in
+    # the trajectory means the harness didn't actually retrieve)
     for ratio, (rec, orec) in curve.items():
         assert orec == 1.0, (ratio, orec)       # workload sanity
+        assert rec > 0.0, (ratio, curve)
         if ratio >= 4:
             assert rec >= 0.8, (ratio, curve)
     return curve

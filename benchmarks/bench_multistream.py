@@ -419,7 +419,8 @@ def _bench_arena(n_sessions: int, n_queries: int, chunk: int = 64,
          {"query_speedup":
           f"{out['restack']['query'] / out['arena']['query']:.2f}x",
           "total_speedup":
-          f"{out['restack']['total'] / out['arena']['total']:.2f}x"})
+          f"{out['restack']['total'] / out['arena']['total']:.2f}x"},
+         value=out["restack"]["query"] / out["arena"]["query"])
 
 
 def _bench_churn(n_sessions: int, n_queries: int, chunk: int = 64,
@@ -701,7 +702,8 @@ def _bench_fused(n_sessions: int, n_queries: int, chunk: int = 64,
     emit("multistream/fused_scan_bytes_reduction", 0.0,
          {"scan_bytes_reduction": f"{reduction:.2f}x",
           "fused_fp32_vs_dense":
-          f"{out['dense_fp32'] / max(out['fused_fp32'], 1):.2f}x"})
+          f"{out['dense_fp32'] / max(out['fused_fp32'], 1):.2f}x"},
+         value=reduction)
 
 
 def _bench_shards(n_sessions: int, n_queries: int, chunk: int = 64,
@@ -892,11 +894,15 @@ def _bench_tiered(n_queries: int = 2, smoke: bool = False):
     # never restacks and the two-stage scan undercuts the flat one
     assert mgr.io_stats["stack_rebuilds"] == 0, mgr.io_stats
     assert out["two_stage"] < out["flat"], out
+    reduction = out["flat"] / max(out["two_stage"], 1)
+    # the recorded headline must be a real reduction, smoke included —
+    # a 0.0 here means the smoke run never actually consolidated
+    assert reduction > 1.0, out
     emit("multistream/tiered_scan_bytes_reduction", 0.0,
-         {"scan_bytes_reduction":
-          f"{out['flat'] / max(out['two_stage'], 1):.2f}x",
+         {"scan_bytes_reduction": f"{reduction:.2f}x",
           "history_vs_flat_reach":
-          f"{total / capacity:.0f}x"})
+          f"{total / capacity:.0f}x"},
+         value=reduction)
 
     # recall-vs-compression-ratio curve (fig10 accuracy harness) — the
     # rows land in this bench's JSON sink / trajectory
@@ -938,11 +944,114 @@ def _bench_incremental_index(capacity: int = 16384, dim: int = 256,
              {"full_uploads": mem.io_stats["full_uploads"],
               "appended_rows": mem.io_stats["appended_rows"]})
     emit("multistream/post_ingest_query_speedup", 0.0,
-         {"speedup": f"{out['seed_reupload'] / out['incremental']:.2f}x"})
+         {"speedup": f"{out['seed_reupload'] / out['incremental']:.2f}x"},
+         value=out["seed_reupload"] / out["incremental"])
+
+
+def _bench_standing(n_sessions: int = 4, smoke: bool = False):
+    """Standing queries on the ingest path (``repro.core.standing``).
+
+    ``n_sessions`` direct-insert streams each carry standing top-k
+    specs keyed to known cluster centroids; every tick commits a batch
+    of rows per stream and runs the ONE extra fused launch over the
+    ``(S, max_new, d)`` new-row slab. Reports the evaluate() wall time
+    per tick, alerts+suppressions per tick, and the headline bytes
+    claim — ``standing_scan_bytes`` per tick vs the full-capacity
+    re-scan the slab replaces — asserted in-harness: the slab stays
+    within the 2× pow2-padding envelope of ``new_rows · d`` and far
+    under the capacity bound, with ``stack_rebuilds == 0``."""
+    from repro.core.queryplan import QuerySpec
+    from repro.kernels import ops as kops
+
+    dim, capacity, rows_per_tick = 32, 4096, 16
+    ticks = 4 if smoke else 20
+    cfg = VenusConfig(memory_capacity=capacity, member_cap=8)
+
+    class _DirectEmbedder:
+        def embed_queries(self, texts):
+            raise AssertionError("bench passes explicit embeddings")
+
+        def embed_frames(self, frames, aux=None, frame_ids=None):
+            raise AssertionError("bench inserts rows directly")
+
+    def _unit(rows):
+        rows = np.asarray(rows, np.float32)
+        return rows / (np.linalg.norm(rows, axis=-1, keepdims=True)
+                       + 1e-12)
+
+    rng = np.random.default_rng(11)
+    cen = _unit(rng.normal(size=(n_sessions, dim)))
+    mgr = SessionManager(cfg, _DirectEmbedder(), embed_dim=dim)
+    sids = [mgr.create_session() for _ in range(n_sessions)]
+    for s, sid in enumerate(sids):
+        mgr.register_standing(
+            sid, QuerySpec(sid=sid, embedding=cen[s], strategy="topk",
+                           budget=4),
+            threshold=0.8, hysteresis=0.1)
+
+    def _tick(t):
+        phys = {}
+        for s, sid in enumerate(sids):
+            # ~half the ticks carry a near-centroid row -> live alert
+            # traffic through the trigger machine, not a dead registry
+            hit = (t + s) % 2 == 0
+            rows = _unit(rng.normal(size=(rows_per_tick, dim)))
+            if hit:
+                rows[0] = _unit(cen[s]
+                                + 0.05 * rng.normal(size=dim))
+            mem = mgr.sessions[sid].memory
+            fids = np.arange(t * rows_per_tick,
+                             (t + 1) * rows_per_tick)
+            with mgr.arena.deferred_appends():
+                p = mem.insert_batch(
+                    rows, scene_ids=[0] * len(rows),
+                    index_frames=fids,
+                    member_lists=[[int(f)] for f in fids])
+            phys[sid] = [p]
+        return phys
+
+    first = _tick(0)                       # warm the slab-shape jits
+    mgr.standing.evaluate(mgr.sessions, first, mgr.io_stats)
+    mgr.poll_alerts()
+    kops.reset_scan_counts()
+    fired = supp0 = 0
+    supp0 = mgr.io_stats["alerts_suppressed"]
+    t0 = time.perf_counter()
+    eval_s = 0.0
+    for t in range(1, ticks + 1):
+        phys = _tick(t)
+        te = time.perf_counter()
+        fired += len(mgr.standing.evaluate(mgr.sessions, phys,
+                                           mgr.io_stats))
+        eval_s += time.perf_counter() - te
+    total_s = time.perf_counter() - t0
+    bytes_per_tick = kops.scan_counts()["standing_scan_bytes"] / ticks
+    full_scan_bound = n_sessions * capacity * dim * 4
+    # the O(new_rows · d) claim, asserted where CI runs it
+    assert bytes_per_tick <= 2 * n_sessions * rows_per_tick * dim * 4, \
+        bytes_per_tick
+    assert bytes_per_tick < full_scan_bound / 16, bytes_per_tick
+    assert mgr.io_stats["stack_rebuilds"] == 0, mgr.io_stats
+    assert fired > 0, "bench must exercise live alert traffic"
+    emit("multistream/standing_tick", eval_s / ticks,
+         {"sessions": n_sessions, "specs": mgr.standing.n_specs,
+          "ticks": ticks, "rows_per_tick": rows_per_tick,
+          "alerts_per_tick": f"{fired / ticks:.2f}",
+          "suppressed":
+              mgr.io_stats["alerts_suppressed"] - supp0,
+          "scan_bytes_per_tick": int(bytes_per_tick),
+          "ingest_plus_eval_s": f"{total_s:.4f}",
+          "stack_rebuilds": mgr.io_stats["stack_rebuilds"]})
+    emit("multistream/standing_scan_bytes_reduction", 0.0,
+         {"vs_full_rescan":
+          f"{full_scan_bound / max(bytes_per_tick, 1):.0f}x",
+          "full_rescan_bytes_per_tick": full_scan_bound},
+         value=full_scan_bound / max(bytes_per_tick, 1))
 
 
 ALL_PARTS = ("ingest", "query", "cross", "plan", "arena", "churn",
-             "fused", "shards", "tiered", "spill", "incremental")
+             "fused", "shards", "tiered", "spill", "standing",
+             "incremental")
 JSON_PATH = "BENCH_multistream.json"
 
 
@@ -967,7 +1076,10 @@ def write_json_artifact(json_path: str, rows: list, meta: dict) -> dict:
     trajectory.append(
         {"timestamp": meta["timestamp"], "parts": meta["parts"],
          "smoke": meta["smoke"],
-         "rows": {r["name"]: round(r["seconds"], 6) for r in rows}})
+         # metric rows (seconds=0.0, headline scalar in "value") track
+         # their VALUE across runs; timing rows track seconds
+         "rows": {r["name"]: round(r.get("value", r["seconds"]), 6)
+                  for r in rows}})
     payload = {"meta": meta, "benchmarks": rows,
                "trajectory": trajectory}
     with open(json_path, "w") as f:
@@ -1022,6 +1134,8 @@ def run(n_sessions: int = 4, n_queries: int = 8, *,
             _bench_spill(n_sessions, ticks=5 if smoke else 8,
                          n_scenes=n_scenes,
                          host_retain=32 if smoke else 64)
+        if "standing" in parts:
+            _bench_standing(n_sessions, smoke=smoke)
         if "incremental" in parts:
             _bench_incremental_index()
     finally:
@@ -1071,6 +1185,11 @@ if __name__ == "__main__":
                          "cold-fault + warm-read throughput; bounded "
                          "host / bit-identity / counter accounting "
                          "asserted in-harness; tmpdir-scoped)")
+    ap.add_argument("--standing", action="store_true",
+                    help="the standing-query bench (per-tick trigger "
+                         "evaluation over the new-row slab: alerts/"
+                         "tick, standing_scan_bytes vs the full-scan "
+                         "bound it replaces — asserted in-harness)")
     ap.add_argument("--index-dtype", choices=("float32", "int8"),
                     default="int8",
                     help="index dtype for the fused bench's quantised "
@@ -1082,14 +1201,15 @@ if __name__ == "__main__":
     args = ap.parse_args()
     parts = None
     if args.cross or args.arena or args.churn or args.fused or \
-            args.shards or args.tiered or args.spill:
+            args.shards or args.tiered or args.spill or args.standing:
         parts = (("cross", "plan") if args.cross else ()) + \
                 (("arena",) if args.arena else ()) + \
                 (("churn",) if args.churn else ()) + \
                 (("fused",) if args.fused else ()) + \
                 (("shards",) if args.shards else ()) + \
                 (("tiered",) if args.tiered else ()) + \
-                (("spill",) if args.spill else ())
+                (("spill",) if args.spill else ()) + \
+                (("standing",) if args.standing else ())
     run(args.sessions, args.queries, smoke=args.smoke, parts=parts,
         json_path=JSON_PATH if args.json else None,
         index_dtype=args.index_dtype)

@@ -38,9 +38,18 @@ def set_sink(sink: Optional[List[dict]]) -> None:
     _SINK = sink
 
 
-def emit(name: str, seconds: float, derived: Dict | None = None) -> None:
+def emit(name: str, seconds: float, derived: Dict | None = None, *,
+         value: Optional[float] = None) -> None:
+    """Record one bench row. ``value`` is the row's headline scalar for
+    trajectory tracking when the row isn't a timing (a speedup, a
+    reduction factor, a recall) — without it, a metric row emitted with
+    ``seconds=0.0`` would land in the cross-run trajectory as a
+    meaningless 0.0 (see ``write_json_artifact``)."""
     d = "|".join(f"{k}={v}" for k, v in (derived or {}).items())
     if _SINK is not None:
-        _SINK.append({"name": name, "seconds": seconds,
-                      "derived": dict(derived or {})})
+        row = {"name": name, "seconds": seconds,
+               "derived": dict(derived or {})}
+        if value is not None:
+            row["value"] = float(value)
+        _SINK.append(row)
     print(f"{name},{seconds * 1e6:.1f},{d}")

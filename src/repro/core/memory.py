@@ -143,8 +143,76 @@ class FrameStore:
         self._disk_bytes = 0                   # live segment bytes gauge
         self.io_stats = {"spilled_frames": 0, "spilled_bytes": 0,
                          "spill_faults": 0, "spill_cache_hits": 0}
+        self.recovered_frames = 0     # adopted from disk at open
+        self.dropped_segments = 0     # rejected as short/corrupt/gapped
         if spill_dir is not None:
             os.makedirs(spill_dir, exist_ok=True)
+            self._recover_segments()
+
+    def _recover_segments(self) -> None:
+        """Re-adopt segment files left by a previous process (crash
+        recovery: a store re-opened on an existing spill dir must serve
+        the frames it already demoted, not silently alias absolute ids
+        from 0 again).
+
+        Adoption walks the ``seg-<start>-<count>.npy`` names in start
+        order and accepts the longest VALID prefix tiling ``[0, base)``:
+        a segment is rejected — along with everything after it, since
+        later starts would leave a hole in the id space — if its start
+        leaves a gap or its payload doesn't round-trip as a
+        ``(count, ...)`` npy array (the
+        truncated-mid-write case: a torn header or short data section
+        fails to load rather than returning garbage frames). Rejected
+        files are deleted so the on-disk state matches the adopted
+        prefix and future demotions can't collide with a half-written
+        name; files that don't look like segments at all are left
+        untouched (they're not ours to delete). The host tier restarts
+        empty at ``base`` = the adopted
+        frame count; ``get`` faults adopted ids back exactly as if this
+        process had spilled them."""
+        try:
+            names = sorted(os.listdir(self.spill_dir))
+        except OSError:
+            return
+        parsed = []
+        rejects = []
+        for name in names:
+            parts = name.split("-")
+            if (name.endswith(".npy") and len(parts) == 3
+                    and parts[0] == "seg" and parts[1].isdigit()
+                    and parts[2][:-4].isdigit()):
+                parsed.append((int(parts[1]), int(parts[2][:-4]), name))
+        parsed.sort()
+        base = 0
+        for start, count, name in parsed:
+            path = os.path.join(self.spill_dir, name)
+            ok = start == base and count >= 1
+            if ok:
+                try:
+                    # mmap validates the header AND that the file holds
+                    # the full payload (a short data section raises) —
+                    # without reading the frames in
+                    seg = np.load(path, mmap_mode="r",
+                                  allow_pickle=False)
+                    ok = seg.shape[0] == count
+                    nbytes = seg.size * seg.dtype.itemsize
+                    del seg
+                except Exception:
+                    ok = False
+            if not ok:
+                rejects.append(name)
+                continue
+            self._segments.append((start, count, path, nbytes))
+            self._seg_starts.append(start)
+            self._disk_bytes += nbytes
+            base = start + count
+        self._base = base
+        self.trimmed = base
+        self.recovered_frames = base
+        for name in rejects:
+            self.dropped_segments += 1
+            with contextlib.suppress(OSError):
+                os.remove(os.path.join(self.spill_dir, name))
 
     def append(self, frames: np.ndarray) -> None:
         for f in np.asarray(frames):

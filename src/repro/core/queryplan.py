@@ -165,8 +165,8 @@ class QueryPlan:
 
 
 def build_plan(specs: Sequence[QuerySpec], cfg,
-               sessions: Optional[Mapping[int, object]] = None
-               ) -> QueryPlan:
+               sessions: Optional[Mapping[int, object]] = None, *,
+               standing: bool = False) -> QueryPlan:
     """Group compatible specs into execution groups.
 
     ``cfg`` supplies the ``tau``/``theta``/``beta``/``n_max`` defaults
@@ -183,6 +183,17 @@ def build_plan(specs: Sequence[QuerySpec], cfg,
     with a clear error instead of the deep ``IndexError`` the read
     would otherwise hit. With spill enabled the trimmed frames fault
     back from disk, so ``uniform`` is legal again and no check fires.
+
+    ``standing=True`` is the validation mode the standing-query
+    registry runs at registration time (``core.standing``): the spec
+    must resolve — with the SAME GroupKey resolution as an ad-hoc plan,
+    which is what keeps the differential bit-identity claim honest —
+    but under the ingest-path evaluation contract: a deterministic
+    strategy the fused kernel epilogue computes in-launch (``topk``;
+    the stochastic strategies would consume the session PRNG chain
+    from inside ingest ticks, silently perturbing every subsequent
+    ad-hoc query) and no explicit ``seed`` (standing evaluation never
+    draws, so a seed could only signal a misunderstanding).
     """
     specs = list(specs)
     groups: Dict[GroupKey, ExecutionGroup] = {}
@@ -190,6 +201,20 @@ def build_plan(specs: Sequence[QuerySpec], cfg,
         if spec.text is None and spec.embedding is None:
             raise ValueError(f"spec {j}: needs text or embedding")
         strat = get_strategy(spec.strategy)
+        if standing:
+            if strat.stochastic or strat.name not in _FUSED_STRATEGIES:
+                raise ValueError(
+                    f"spec {j}: strategy {strat.name!r} cannot run as a "
+                    f"standing query — the ingest-path evaluation is "
+                    f"deterministic and resolves inside the fused "
+                    f"launch, so only non-stochastic fused strategies "
+                    f"('topk') are accepted (stochastic strategies "
+                    f"would consume the session PRNG chain per ingest "
+                    f"tick)")
+            if spec.seed is not None:
+                raise ValueError(
+                    f"spec {j}: standing queries never draw, so an "
+                    f"explicit seed has no effect — pass seed=None")
         if strat.name == "uniform" and sessions is not None:
             st = sessions.get(int(spec.sid))
             policy = (st.memory.eviction.name if st is not None

@@ -60,6 +60,7 @@ from repro.core.memory import (ArenaStackView, FrameStore, MemoryArena,
 from repro.core.queryplan import (QueryPlan, QueryResult, QuerySpec,
                                   build_plan, execute_plan)
 from repro.core.scene import Partition, StreamSegmenter
+from repro.core.standing import Alert, StandingRegistry
 
 # live managers, so test harnesses can reset every launch/transfer
 # counter between tests without threading references around
@@ -263,7 +264,9 @@ def release_pending(state: SessionState, closed: List[Partition]) -> None:
 
 
 def commit_jobs(sessions: Mapping[int, SessionState], embedder,
-                jobs: Sequence[EmbedJob]) -> int:
+                jobs: Sequence[EmbedJob], *,
+                standing: Optional[StandingRegistry] = None,
+                io_stats: Optional[Dict[str, int]] = None) -> int:
     """④ ONE batched MEM call over every index frame closed this tick,
     scattered into each owning session's memory with batched appends.
     Arena-backed sessions defer their device writes into the tick's
@@ -277,7 +280,15 @@ def commit_jobs(sessions: Mapping[int, SessionState], embedder,
     constant DEVICE memory. The raw-frame ``FrameStore`` (the paper's
     NVMe archive layer) is bounded separately: after the tick's commits
     the manager trims every host frame below the session's live
-    references — see ``SessionManager._trim_archives``."""
+    references — see ``SessionManager._trim_archives``.
+
+    ``standing`` hooks the standing-query registry into the tick: the
+    physical slots every ``insert_batch`` returns are collected per
+    session and — after the deferred scatters flush — evaluated with
+    ONE extra fused launch over only those new rows (never a
+    full-capacity re-scan; see ``repro.core.standing``). Fired alerts
+    land in the registry's priority queue; counters bump in
+    ``io_stats``."""
     if not jobs:
         return 0
     # fail fast on eviction="none" sessions about to overflow: raising
@@ -306,6 +317,7 @@ def commit_jobs(sessions: Mapping[int, SessionState], embedder,
     arenas = {id(a): a for a in
               (sessions[j.sid].memory.arena for j in jobs)
               if a is not None}
+    new_by_sid: Dict[int, List[np.ndarray]] = {}
     with contextlib.ExitStack() as stack:
         for a in arenas.values():
             stack.enter_context(a.deferred_appends())
@@ -313,11 +325,14 @@ def commit_jobs(sessions: Mapping[int, SessionState], embedder,
         for j in jobs:
             n = len(j.frame_ids)
             st = sessions[j.sid]
-            st.memory.insert_batch(
+            phys = st.memory.insert_batch(
                 embs[off:off + n], scene_ids=[j.scene_id] * n,
                 index_frames=j.frame_ids, member_lists=j.member_lists)
+            new_by_sid.setdefault(j.sid, []).append(phys)
             st.stats["frames_embedded"] += n
             off += n
+    if standing is not None:
+        standing.evaluate(sessions, new_by_sid, io_stats)
     return len(ids)
 
 
@@ -366,7 +381,12 @@ class SessionManager:
                          "stack_rebuilds": 0, "sessions_closed": 0,
                          "sharded_group_scans": 0,
                          "two_stage_groups": 0,
-                         "archive_trimmed_frames": 0}
+                         "archive_trimmed_frames": 0,
+                         "alerts_fired": 0, "alerts_suppressed": 0}
+        # standing queries: persistent per-session QuerySpecs evaluated
+        # inside commit_jobs against each tick's newly committed rows
+        # (one extra slab launch per tick — see repro.core.standing)
+        self.standing = StandingRegistry(cfg)
         # summed io_stats of closed sessions' memories: keeps the
         # service-level mem_* monitoring counters monotonic across
         # stream closes (a popped session takes its live dict with it)
@@ -454,6 +474,11 @@ class SessionManager:
             self.closed_frame_stats[k] = (
                 self.closed_frame_stats.get(k, 0) + v)
         st.frames.close()
+        # drop the session's standing specs: a recycled slot's next
+        # tenant must not inherit the old tenant's triggers (already
+        # fired alerts stay pollable — they reference history, which
+        # outlives the stream)
+        self.standing.drop_session(sid)
         self._stacks = {k: v for k, v in self._stacks.items()
                         if sid not in k}
         if self.arena is not None:
@@ -487,7 +512,9 @@ class SessionManager:
                                           self.annotation_fn))
             release_pending(st, closed)
         t_clu = time.perf_counter()
-        n_emb = commit_jobs(self.sessions, self.embedder, jobs)
+        n_emb = commit_jobs(self.sessions, self.embedder, jobs,
+                            standing=self.standing,
+                            io_stats=self.io_stats)
         n_trim = self._trim_archives(chunks.keys())
         t_emb = time.perf_counter()
         return {"segment": t_seg - t0, "cluster": t_clu - t_seg,
@@ -505,7 +532,8 @@ class SessionManager:
                                           self.annotation_fn))
             st.pending = []
             st.pending_base = st.stats["frames_seen"]
-        commit_jobs(self.sessions, self.embedder, jobs)
+        commit_jobs(self.sessions, self.embedder, jobs,
+                    standing=self.standing, io_stats=self.io_stats)
         self._trim_archives(sids)
 
     def _trim_archives(self, sids) -> int:
@@ -596,6 +624,53 @@ class SessionManager:
     def query_specs(self, specs: Sequence[QuerySpec]) -> List[QueryResult]:
         """Convenience: ``execute(plan(specs))``."""
         return self.execute(self.plan(specs))
+
+    # ------------------------------------------------------ standing queries
+    #
+    # The inverted loop: instead of ask-then-scan, a spec registered
+    # here is evaluated inside every ingest tick's ``commit_jobs``
+    # against ONLY that tick's newly committed rows (one extra fused
+    # launch over the (G, max_new, d) new-row slab — never a
+    # full-capacity re-scan; ``kops standing_scan_bytes`` pins it) and
+    # fires ``Alert`` records through threshold + hysteresis + cooldown
+    # debouncing. See repro.core.standing for the trigger semantics.
+
+    def register_standing(self, sid: int, spec: QuerySpec, *,
+                          threshold: float, hysteresis: float = 0.0,
+                          cooldown_ticks: int = 0,
+                          priority: float = 0.0) -> int:
+        """Register a persistent query on ``sid``; returns its spec id.
+
+        ``spec`` is validated through ``build_plan(standing=True)``
+        (deterministic fused strategy — ``topk`` — and no explicit
+        seed; budget/tau resolve exactly as an ad-hoc plan would, which
+        is what makes standing scores bitwise comparable to ad-hoc
+        ones). ``threshold`` is a raw cosine-similarity level (the
+        fused scan's top-k scores); an alert fires when the best new
+        row reaches it, then the spec re-arms only after the score
+        falls to ``threshold - hysteresis`` and ``cooldown_ticks``
+        committing ticks have drained. ``priority`` orders delivery in
+        ``poll_alerts``. Text specs are embedded once, here."""
+        assert sid in self.sessions, sid
+        emb = spec.embedding
+        if emb is None:
+            emb = np.asarray(
+                self.embedder.embed_queries([spec.text])[0], np.float32)
+        return self.standing.register(
+            sid, spec, emb, threshold=threshold, hysteresis=hysteresis,
+            cooldown_ticks=cooldown_ticks, priority=priority,
+            sessions=self.sessions)
+
+    def unregister_standing(self, spec_id: int) -> None:
+        """Remove one standing spec (already fired alerts stay
+        pollable)."""
+        self.standing.unregister(spec_id)
+
+    def poll_alerts(self, max_alerts: Optional[int] = None
+                    ) -> List[Alert]:
+        """Drain pending standing-query alerts, priority-ordered
+        (priority desc, score desc, tick, firing order)."""
+        return self.standing.poll_alerts(max_alerts)
 
     @staticmethod
     def _legacy_strategy(budget: Optional[int], use_akr: bool) -> str:

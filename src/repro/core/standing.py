@@ -1,0 +1,337 @@
+"""Standing queries: persistent triggers evaluated on the ingest path.
+
+Venus's plan/execute pair is pull-based — a user asks, the system
+scans. Surveillance/dashcam/broadcast deployments equally need the
+inverted loop: a query registered ONCE ("alert when X appears") that
+fires when matching content *arrives*. This module is that loop:
+
+* ``StandingRegistry`` — a per-session registry of persistent
+  ``QuerySpec``s (``SessionManager.register_standing``), each with a
+  firing ``threshold``, two-sided ``hysteresis`` band, debounce
+  ``cooldown_ticks``, and delivery ``priority``.
+* ``evaluate`` — called from ``commit_jobs`` each tick with the
+  PHYSICAL arena positions the tick's rows landed in. It gathers only
+  those rows into a compact ``(G, max_new, d)`` slab (host mirrors —
+  ring-wrap falls out of physical addressing, and ``quantise_rows``
+  reproduces the arena's int8 rows bitwise) and runs ONE extra fused
+  launch over it (``kops.fused_retrieve_stack(tier="standing")``),
+  never a full-capacity re-scan: the streamed bytes — counted into
+  ``standing_scan_bytes`` — are O(new_rows · d) by construction
+  because the slab IS the operand.
+* ``Alert`` — fired records, delivered priority-ordered (priority
+  desc, score desc, tick, registration order) through
+  ``poll_alerts()`` / ``on_alert`` callbacks.
+
+Determinism contract (the differential harness in
+``tests/test_standing.py`` pins it): a standing evaluation's per-spec
+scores and frame ids are BITWISE what an ad-hoc top-k ``QuerySpec``
+executed against the same rows produces. That holds because top-k
+scores are masked cosine similarities — per-lane math independent of
+operand padding, tau, and the other lanes — and ``lax.top_k``'s
+prefix is stable under larger k, so batching specs of different
+budgets into one launch changes nothing. Standing evaluation is
+fully deterministic (top-k only, no draws): it never touches a
+session's PRNG chain, so replayed tick sequences fire the identical
+alert stream draw-for-draw.
+
+Trigger state machine, per spec, stepped only on ticks that committed
+new rows for its session (the crossing/fire/re-arm decisions run
+device-side as one jitted program over all evaluated specs):
+
+    cooldown = max(cooldown - 1, 0)
+    crossed  = score >= threshold
+    fire     = crossed and armed and cooldown == 0
+               → emit Alert, armed = False, cooldown = cooldown_ticks
+    crossed and not fire → alerts_suppressed += 1 (debounced)
+    score <= threshold - hysteresis → armed = True   (re-arm band)
+
+``hysteresis`` widens the re-arm band below the threshold so a score
+flapping around it fires once per excursion, not once per tick;
+``cooldown_ticks`` additionally rate-limits re-fires after re-arming.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.memory import quantise_rows
+from repro.core.queryplan import QuerySpec, build_plan
+from repro.kernels import ops as kops
+
+# masked top-k slots carry ref.NEG_INF (-1e30); anything above this is
+# a real scored lane (same sentinel test as the two-stage executor)
+_VALID_SCORE = -1e29
+
+
+@dataclass
+class Alert:
+    """One standing-query firing. ``frame_ids`` are the matching new
+    rows' index-frame ids in rank (score-descending) order, capped at
+    the spec's budget; ``score`` is the best matching row's cosine
+    similarity; ``tick`` is the registry's committing-tick counter."""
+    sid: int
+    spec_id: int
+    frame_ids: np.ndarray
+    score: float
+    tick: int
+    priority: float = 0.0
+
+
+@dataclass
+class StandingEntry:
+    """A registered standing query plus its live trigger state."""
+    spec_id: int
+    sid: int
+    spec: QuerySpec                 # validated, embedding resolved
+    embedding: np.ndarray           # (d,) f32 query embedding
+    budget: int                     # alert frame_ids cap (resolved k)
+    threshold: float
+    hysteresis: float
+    cooldown_ticks: int
+    priority: float
+    armed: bool = True
+    cooldown: int = 0
+
+
+@jax.jit
+def _trigger_step(score, armed, cooldown, threshold, hysteresis,
+                  cooldown_ticks):
+    """Device-side threshold crossing + hysteresis + cooldown for every
+    evaluated spec at once: (L,) arrays in → (fire, suppressed,
+    armed', cooldown') out. One excursion above the threshold fires at
+    most once until the score falls back through the re-arm band
+    (threshold − hysteresis) AND the cooldown has drained."""
+    cd = jnp.maximum(cooldown - 1, 0)
+    crossed = score >= threshold
+    fire = crossed & armed & (cd == 0)
+    suppressed = crossed & ~fire
+    rearm = score <= threshold - hysteresis
+    armed_out = jnp.where(fire, False, armed | rearm)
+    cd_out = jnp.where(fire, cooldown_ticks, cd)
+    return fire, suppressed, armed_out, cd_out
+
+
+def _pow2(n: int, floor: int = 1) -> int:
+    """Next power of two ≥ max(n, floor) — buckets the slab shapes so
+    the per-tick launch compiles O(log) distinct shapes, while keeping
+    the padded operand within 2× of the real new-row count (the
+    ``standing_scan_bytes`` = O(new_rows · d) contract survives)."""
+    v = max(int(n), floor)
+    return 1 << (v - 1).bit_length()
+
+
+class StandingRegistry:
+    """Per-manager registry of standing queries + their alert queue.
+
+    Owned by ``SessionManager`` (one per manager); ``commit_jobs``
+    calls ``evaluate`` after the tick's deferred appends flush. All
+    host state (entries, trigger state, the alert heap) lives here;
+    the only device work per tick is the one slab launch plus the
+    jitted trigger step.
+    """
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.entries: Dict[int, StandingEntry] = {}
+        self.by_sid: Dict[int, List[int]] = {}
+        self._next_id = 0
+        self._seq = 0               # tie-break for the priority heap
+        self.tick = 0               # committing ticks seen (Alert.tick)
+        self._heap: List = []       # (-prio, -score, tick, seq, Alert)
+        self._callbacks: List[Callable[[Alert], None]] = []
+
+    # ---------------------------------------------------------- registration
+    @property
+    def n_specs(self) -> int:
+        return len(self.entries)
+
+    def register(self, sid: int, spec: QuerySpec, embedding: np.ndarray,
+                 *, threshold: float, hysteresis: float = 0.0,
+                 cooldown_ticks: int = 0, priority: float = 0.0,
+                 sessions: Optional[Mapping[int, object]] = None) -> int:
+        """Validate and register one standing spec; returns its id.
+
+        ``build_plan(..., standing=True)`` does the spec-level
+        validation (deterministic fused strategy, no explicit seed)
+        and resolves the budget the same way an ad-hoc plan would —
+        which is what keeps the differential harness honest."""
+        if not np.isfinite(threshold):
+            raise ValueError(f"threshold must be finite, got {threshold}")
+        if hysteresis < 0:
+            raise ValueError(
+                f"hysteresis must be >= 0, got {hysteresis}")
+        if cooldown_ticks < 0:
+            raise ValueError(
+                f"cooldown_ticks must be >= 0, got {cooldown_ticks}")
+        spec = replace(spec, sid=int(sid))
+        plan = build_plan([spec], self.cfg, sessions=sessions,
+                          standing=True)
+        key = plan.groups[0].key
+        emb = np.asarray(embedding, np.float32).reshape(-1)
+        spec_id = self._next_id
+        self._next_id += 1
+        self.entries[spec_id] = StandingEntry(
+            spec_id=spec_id, sid=int(sid), spec=spec, embedding=emb,
+            budget=int(key.budget), threshold=float(threshold),
+            hysteresis=float(hysteresis),
+            cooldown_ticks=int(cooldown_ticks),
+            priority=float(priority))
+        self.by_sid.setdefault(int(sid), []).append(spec_id)
+        return spec_id
+
+    def unregister(self, spec_id: int) -> None:
+        e = self.entries.pop(spec_id)
+        self.by_sid[e.sid].remove(spec_id)
+        if not self.by_sid[e.sid]:
+            del self.by_sid[e.sid]
+
+    def drop_session(self, sid: int) -> int:
+        """Remove every spec registered on ``sid`` (close_session /
+        slot-recycle hook: a recycled slot's new tenant must not
+        inherit the old tenant's triggers — no ghost-firing). Already
+        fired alerts STAY pollable; they reference the closed stream's
+        history, which outlives the stream."""
+        ids = list(self.by_sid.get(int(sid), ()))
+        for spec_id in ids:
+            self.unregister(spec_id)
+        return len(ids)
+
+    # --------------------------------------------------------------- alerts
+    def on_alert(self, callback: Callable[[Alert], None]) -> None:
+        """Register a delivery callback: invoked once per fired alert,
+        in priority order within each tick, right after the tick's
+        evaluation. Alerts remain pollable regardless — callbacks
+        observe the stream, ``poll_alerts`` drains it."""
+        self._callbacks.append(callback)
+
+    def poll_alerts(self, max_alerts: Optional[int] = None) -> List[Alert]:
+        """Drain (up to ``max_alerts`` of) the pending alerts,
+        priority-ordered: priority desc, then score desc, then tick,
+        then firing order."""
+        out: List[Alert] = []
+        while self._heap and (max_alerts is None
+                              or len(out) < max_alerts):
+            out.append(heapq.heappop(self._heap)[-1])
+        return out
+
+    @property
+    def pending_alerts(self) -> int:
+        return len(self._heap)
+
+    # ------------------------------------------------------------ evaluation
+    def evaluate(self, sessions: Mapping[int, object],
+                 new_by_sid: Mapping[int, Sequence[np.ndarray]],
+                 io_stats: Optional[Dict[str, int]] = None
+                 ) -> List[Alert]:
+        """Evaluate every registered spec against ONLY the tick's new
+        rows. ``new_by_sid`` maps sid → the list of physical-slot
+        arrays ``insert_batch`` returned for that sid this tick, in
+        commit order (chronological — which is also the order the rows
+        occupy the slab, so top-k tie-breaks match an ad-hoc scan over
+        the same rows).
+
+        Returns the alerts fired this tick (already enqueued and
+        delivered to callbacks)."""
+        self.tick += 1
+        live = [(sid, new_by_sid[sid]) for sid in sorted(new_by_sid)
+                if self.by_sid.get(sid) and
+                sum(len(p) for p in new_by_sid[sid])]
+        if not live:
+            return []
+        # --- the (G, max_new, d) new-row slab -------------------------
+        d = len(next(iter(self.entries.values())).embedding)
+        ents = [[self.entries[i] for i in self.by_sid[sid]]
+                for sid, _ in live]
+        phys = [np.concatenate([np.asarray(p, np.int64) for p in plist])
+                for _, plist in live]
+        g = len(live)
+        n_pad = _pow2(max(len(p) for p in phys))
+        q_pad = _pow2(max(len(e) for e in ents))
+        k = min(n_pad, max(e.budget for es in ents for e in es))
+        slab = np.zeros((g, n_pad, d), np.float32)
+        q_stack = np.zeros((g, q_pad, d), np.float32)
+        sizes = np.zeros((g,), np.int32)
+        ifr = np.zeros((g, n_pad), np.int64)
+        for gi, ((sid, _), p) in enumerate(zip(live, phys)):
+            mem = sessions[sid].memory
+            slab[gi, :len(p)] = mem._emb[p]
+            ifr[gi, :len(p)] = mem._index_frame[p]
+            sizes[gi] = len(p)
+            for qi, e in enumerate(ents[gi]):
+                q_stack[gi, qi] = e.embedding
+        index = slab
+        if getattr(self.cfg, "index_dtype", "float32") == "int8":
+            # per-row symmetric quantisation — bitwise the rows the
+            # append scatter stored in the arena (scales cancel under
+            # kernel row normalisation, exactly as on the query path)
+            index, _ = quantise_rows(slab)
+        # --- ONE fused launch over the slab (never the arena) ---------
+        # Always unsharded: the slab is a fresh compact operand (like
+        # the tiering stage-2 gather), so sharded-arena managers take
+        # the identical path — same launch, same bytes, same alerts.
+        fr = kops.fused_retrieve_stack(
+            jnp.asarray(q_stack), jnp.asarray(index),
+            tau=float(getattr(self.cfg, "tau", 0.1)),
+            valid=jnp.asarray(sizes),
+            targets=jnp.zeros((g, q_pad, 1), jnp.float32),
+            n_topk=k, tier="standing")
+        tv = np.asarray(fr.topk_v)          # (G, Q, K) masked sims
+        ti = np.asarray(fr.topk_i)          # (G, Q, K) slab row indices
+        # --- device-side trigger step over all evaluated specs --------
+        flat = [(gi, qi, e) for gi, es in enumerate(ents)
+                for qi, e in enumerate(es)]
+        n_flat = len(flat)
+        l_pad = _pow2(n_flat)
+        score = np.full((l_pad,), -np.inf, np.float32)
+        armed = np.zeros((l_pad,), bool)
+        cooldown = np.zeros((l_pad,), np.int32)
+        thr = np.full((l_pad,), np.inf, np.float32)
+        hys = np.zeros((l_pad,), np.float32)
+        cdt = np.zeros((l_pad,), np.int32)
+        for li, (gi, qi, e) in enumerate(flat):
+            score[li] = tv[gi, qi, 0]
+            armed[li] = e.armed
+            cooldown[li] = e.cooldown
+            thr[li] = e.threshold
+            hys[li] = e.hysteresis
+            cdt[li] = e.cooldown_ticks
+        fire, supp, armed_out, cd_out = (
+            np.asarray(x) for x in _trigger_step(
+                jnp.asarray(score), jnp.asarray(armed),
+                jnp.asarray(cooldown), jnp.asarray(thr),
+                jnp.asarray(hys), jnp.asarray(cdt)))
+        fired: List[Alert] = []
+        n_supp = 0
+        for li, (gi, qi, e) in enumerate(flat):
+            e.armed = bool(armed_out[li])
+            e.cooldown = int(cd_out[li])
+            if supp[li]:
+                n_supp += 1
+            if not fire[li]:
+                continue
+            kk = min(e.budget, k)
+            vals = tv[gi, qi, :kk]
+            sel = (vals >= e.threshold) & (vals > _VALID_SCORE)
+            fids = ifr[gi, ti[gi, qi, :kk][sel]]
+            fired.append(Alert(
+                sid=e.sid, spec_id=e.spec_id, frame_ids=fids,
+                score=float(tv[gi, qi, 0]), tick=self.tick,
+                priority=e.priority))
+        if io_stats is not None:
+            io_stats["alerts_fired"] = (
+                io_stats.get("alerts_fired", 0) + len(fired))
+            io_stats["alerts_suppressed"] = (
+                io_stats.get("alerts_suppressed", 0) + n_supp)
+        for a in sorted(fired, key=lambda a: (-a.priority, -a.score)):
+            heapq.heappush(self._heap,
+                           (-a.priority, -a.score, a.tick, self._seq, a))
+            self._seq += 1
+            for cb in self._callbacks:
+                cb(a)
+        return fired

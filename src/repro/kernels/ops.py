@@ -75,7 +75,7 @@ _scan_counts = {"similarity": 0, "similarity_stack": 0,
                 "dense_score_launches": 0,
                 "sharded_stack_launches": 0, "shard_gather_bytes": 0,
                 "coarse_scan_bytes": 0, "fine_gather_rows": 0,
-                "two_stage_scans": 0}
+                "two_stage_scans": 0, "standing_scan_bytes": 0}
 
 
 def _count_scan_bytes(index) -> None:
@@ -300,13 +300,21 @@ def fused_retrieve_stack(query, index, *, tau: float, valid, targets,
     hierarchical summary tier: identical math, but the streamed bytes
     are additionally counted into ``coarse_scan_bytes`` so the
     two-stage bandwidth claim stays a counter assertion.
+    ``tier="standing"`` marks the launch as a standing-query evaluation
+    over the tick's new-row slab: the streamed bytes additionally count
+    into ``standing_scan_bytes``, pinning the "no full-capacity
+    re-scan" contract (the operand is the compact slab, so the counter
+    is O(new_rows · d) by construction).
     """
-    assert tier in ("fine", "coarse"), tier
+    assert tier in ("fine", "coarse", "standing"), tier
     _scan_counts["similarity_stack"] += 1
     _scan_counts["fused_draw_launches"] += 1
     _count_scan_bytes(index)
     if tier == "coarse":
         _scan_counts["coarse_scan_bytes"] += int(
+            index.size * index.dtype.itemsize)
+    elif tier == "standing":
+        _scan_counts["standing_scan_bytes"] += int(
             index.size * index.dtype.itemsize)
     n = index.shape[1]
     if mesh is not None and mesh_axis_size(mesh, mesh_axis) > 1:

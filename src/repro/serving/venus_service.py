@@ -32,6 +32,7 @@ import numpy as np
 from repro.core.pipeline import patchify
 from repro.core.queryplan import QueryPlan, QuerySpec
 from repro.core.session import SessionManager
+from repro.core.standing import Alert
 from repro.kernels import ops as kops
 from repro.serving.engine import Request, ServingEngine
 
@@ -137,6 +138,39 @@ class VenusService:
         self.submit(queries)
         return self.engine.drain()
 
+    # ------------------------------------------------------ standing queries
+    def register_standing(self, sid: int, query, *, threshold: float,
+                          hysteresis: float = 0.0,
+                          cooldown_ticks: int = 0,
+                          priority: float = 0.0) -> int:
+        """Register a persistent trigger on a stream: evaluated inside
+        every ``ingest_tick`` against only that tick's newly committed
+        memory rows (one extra slab-sized fused launch — see
+        ``kops_standing_scan_bytes``), firing debounced ``Alert``s
+        through ``poll_alerts()`` / ``on_alert`` callbacks. ``query``
+        is a ``QuerySpec`` or a ``StreamQuery`` (converted via
+        ``to_spec``); returns the spec id for
+        ``manager.unregister_standing``."""
+        spec = query.to_spec() if isinstance(query, StreamQuery) else query
+        return self.manager.register_standing(
+            sid, spec, threshold=threshold, hysteresis=hysteresis,
+            cooldown_ticks=cooldown_ticks, priority=priority)
+
+    def poll_alerts(self, max_alerts: Optional[int] = None
+                    ) -> List[Alert]:
+        """Drain pending standing-query alerts, priority-ordered
+        (priority desc, then score desc, then tick/firing order) —
+        the pull half of the delivery surface."""
+        return self.manager.poll_alerts(max_alerts)
+
+    def on_alert(self, callback) -> None:
+        """Push half of the delivery surface: ``callback(alert)`` runs
+        once per fired alert, in priority order within each ingest
+        tick, immediately after the tick's standing evaluation. Alerts
+        remain pollable regardless — callbacks observe the stream,
+        ``poll_alerts`` drains it."""
+        self.manager.standing.on_alert(callback)
+
     # ------------------------------------------------------------ monitoring
     def io_stats(self) -> Dict[str, int]:
         """One monitoring surface over the whole service: the manager's
@@ -196,8 +230,18 @@ class VenusService:
         (spilled reads served from the LRU segment cache), and the
         gauge ``spill_disk_bytes`` (bytes currently in live sessions'
         segment files — returns to baseline when streams close, which
-        is the disk-leak invariant to alert on)."""
+        is the disk-leak invariant to alert on).
+
+        Standing-query deployments add ``standing_specs`` (gauge: live
+        registered specs), ``alerts_fired`` / ``alerts_suppressed``
+        (debounced trigger outcomes, from the manager counters), and
+        ``kops_standing_scan_bytes`` — the index bytes streamed by the
+        per-tick new-row slab launches. The invariant to alert on:
+        ``kops_standing_scan_bytes`` grows O(new_rows · dim) per tick,
+        NEVER O(capacity · dim) — standing evaluation must ride the
+        ingest path, not re-scan history."""
         out: Dict[str, int] = dict(self.manager.io_stats)
+        out["standing_specs"] = self.manager.standing.n_specs
         for k, v in kops.scan_counts().items():
             out[f"kops_{k}"] = v
         if self.manager.arena is not None:

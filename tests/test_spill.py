@@ -107,6 +107,68 @@ def test_lru_cache_hit_and_fault_counters(tmp_path):
     assert fs.io_stats["spill_cache_hits"] == 1
 
 
+def test_reopen_recovers_intact_segments(tmp_path):
+    """A clean reopen adopts every on-disk segment: the store resumes
+    at the spilled base and faults the history back bit-identically."""
+    frames = np.random.default_rng(1).standard_normal(
+        (16, 2, 2, 3)).astype(np.float32)
+    fs = FrameStore(str(tmp_path / "s0"), segment_frames=4)
+    fs.append(frames)
+    fs.trim(12)
+    fs.sync()
+    fs2 = FrameStore(str(tmp_path / "s0"), segment_frames=4)
+    assert fs2.recovered_frames == 12 and fs2.dropped_segments == 0
+    assert fs2.base == len(fs2) == 12 and fs2.spill_floor == 0
+    assert fs2.get(list(range(12))).tobytes() == frames[:12].tobytes()
+
+
+def test_reopen_detects_truncated_segment(tmp_path):
+    """Crash mid-write: the NEWEST segment file is truncated to half
+    its bytes. The next open must detect it — adopt only the intact
+    prefix, delete the short file, and fail reads past the recovered
+    base — instead of returning garbage frames."""
+    frames = np.random.default_rng(2).standard_normal(
+        (16, 2, 2, 3)).astype(np.float32)
+    fs = FrameStore(str(tmp_path / "s0"), segment_frames=4)
+    fs.append(frames)
+    fs.trim(12)                             # segments [0,4) [4,8) [8,12)
+    fs.sync()
+    segs = sorted(os.listdir(tmp_path / "s0"))
+    newest = tmp_path / "s0" / segs[-1]
+    with open(newest, "r+b") as f:
+        f.truncate(os.path.getsize(newest) // 2)
+    fs2 = FrameStore(str(tmp_path / "s0"), segment_frames=4)
+    assert fs2.recovered_frames == 8 and fs2.dropped_segments == 1
+    assert fs2.base == len(fs2) == 8
+    assert not newest.exists()              # short file cleaned up
+    assert fs2.get(list(range(8))).tobytes() == frames[:8].tobytes()
+    with pytest.raises(IndexError):
+        fs2.get([9])
+    # the store is fully live again: appends resume at the new base
+    fs2.append(frames[:2])
+    assert len(fs2) == 10
+    assert fs2.get([8, 9]).tobytes() == frames[:2].tobytes()
+
+
+def test_reopen_ignores_gapped_and_foreign_files(tmp_path):
+    """Recovery adopts the longest contiguous prefix only: a segment
+    whose start doesn't tile onto the previous end (a gap) is dropped
+    along with everything after it; non-segment files are ignored."""
+    frames = np.random.default_rng(3).standard_normal(
+        (12, 2, 2, 3)).astype(np.float32)
+    fs = FrameStore(str(tmp_path / "s0"), segment_frames=4)
+    fs.append(frames)
+    fs.trim(12)
+    fs.sync()
+    segs = sorted(os.listdir(tmp_path / "s0"))
+    os.remove(tmp_path / "s0" / segs[1])    # gap at [4,8)
+    (tmp_path / "s0" / "notes.txt").write_text("not a segment")
+    fs2 = FrameStore(str(tmp_path / "s0"), segment_frames=4)
+    assert fs2.recovered_frames == 4 and fs2.dropped_segments == 1
+    assert fs2.get([0, 1, 2, 3]).tobytes() == frames[:4].tobytes()
+    assert (tmp_path / "s0" / "notes.txt").exists()  # not ours: kept
+
+
 def test_spill_off_contract_unchanged():
     fs = FrameStore()
     fs.append(np.ones((5, 2, 2, 3), np.float32))

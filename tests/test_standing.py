@@ -1,0 +1,614 @@
+"""Standing queries: the inverted ask-then-scan loop
+(``repro.core.standing`` + the commit_jobs/session/service wiring).
+
+The headline contract is DIFFERENTIAL: a standing evaluation over a
+tick's newly committed rows must be bitwise what an ad-hoc top-k
+``QuerySpec`` produces against a fresh manager holding exactly those
+rows — same frame ids in the same rank order, same top score — under
+fp32 and the int8 quantised index, on flat and consolidated sessions,
+across a ring-wrap, for S=1 and mixed-session ticks. On top of that:
+
+* trigger semantics: threshold crossing fires once per excursion
+  (two-sided hysteresis re-arm band), ``cooldown_ticks`` debounces
+  re-fires, suppressed crossings are counted;
+* delivery: ``poll_alerts`` is priority-ordered, callbacks observe the
+  stream, alerts survive ``close_session``/slot-recycle without the
+  recycled slot ghost-firing the old tenant's specs;
+* the bandwidth claim: ``kops standing_scan_bytes`` is the padded-slab
+  bytes — O(new_rows · d) per tick, never the arena capacity — with
+  ``stack_rebuilds == 0``, on unsharded AND mesh-sharded managers.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.queryplan import QuerySpec
+from repro.core.session import SessionManager, VenusConfig
+from repro.core.standing import _pow2
+from repro.data.video import PixelEmbedder
+from repro.kernels import ops as kops
+from repro.launch.mesh import make_host_mesh
+from repro.serving.venus_service import VenusService
+
+DIM = 32
+
+FLAT = VenusConfig(memory_capacity=128, member_cap=8)
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count")
+
+
+def _unit(rows):
+    rows = np.asarray(rows, np.float32)
+    return rows / (np.linalg.norm(rows, axis=-1, keepdims=True) + 1e-12)
+
+
+class ArrayEmbedder:
+    """Planner stub for managers fed by direct ``insert_batch`` calls."""
+
+    def embed_queries(self, texts):
+        raise AssertionError("tests pass explicit embeddings")
+
+    def embed_frames(self, frames, aux=None, frame_ids=None):
+        raise AssertionError("tests insert rows directly")
+
+
+def _direct_manager(cfg, **kw):
+    return SessionManager(cfg, ArrayEmbedder(), embed_dim=DIM, **kw)
+
+
+def _insert(mgr, sid, rows, fid0):
+    """Insert rows straight into the session's memory (same deferred
+    arena scatter an ingest tick uses); returns the physical slots."""
+    mem = mgr.sessions[sid].memory
+    fids = np.arange(fid0, fid0 + len(rows))
+    with mgr.arena.deferred_appends():
+        phys = mem.insert_batch(rows, scene_ids=[0] * len(rows),
+                                index_frames=fids,
+                                member_lists=[[int(f)] for f in fids])
+    return np.asarray(phys)
+
+
+def _rows_with_sims(rng, emb, sims):
+    """Unit rows whose cosine similarity to ``emb`` is each of ``sims``
+    (constructed in the plane spanned by emb and a random orthogonal
+    direction, so the similarity is exact up to fp rounding)."""
+    out = []
+    for s in sims:
+        r = rng.normal(size=emb.shape)
+        u = r - (r @ emb) * emb
+        u /= np.linalg.norm(u)
+        out.append(s * emb + np.sqrt(max(1.0 - s * s, 0.0)) * u)
+    return _unit(out)
+
+
+def _twin_topk_ids(rows, fids, emb, budget, index_dtype="float32"):
+    """The ad-hoc oracle: a FRESH flat manager holding exactly ``rows``
+    answers a top-k plan — rank-ordered frame ids over the same rows
+    the standing evaluation saw."""
+    cfg = VenusConfig(memory_capacity=max(128, _pow2(len(rows))),
+                      member_cap=8, index_dtype=index_dtype)
+    mgr = _direct_manager(cfg)
+    sid = mgr.create_session()
+    mem = mgr.sessions[sid].memory
+    with mgr.arena.deferred_appends():
+        mem.insert_batch(rows, scene_ids=[0] * len(rows),
+                         index_frames=np.asarray(fids),
+                         member_lists=[[int(f)] for f in fids])
+    res = mgr.query_specs([QuerySpec(sid=sid, embedding=emb,
+                                     strategy="topk", budget=budget)])[0]
+    return np.asarray(res.frame_ids)
+
+
+def _evaluate(mgr, sid_phys):
+    """Run one standing evaluation tick over the given {sid: phys}."""
+    return mgr.standing.evaluate(
+        mgr.sessions, {sid: [phys] for sid, phys in sid_phys.items()},
+        mgr.io_stats)
+
+
+# ---------------------------------------------------------------------------
+# differential bit-identity: standing == ad-hoc top-k over the same rows
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("index_dtype", ["float32", "int8"])
+def test_differential_flat(index_dtype):
+    """S=1 flat session: the alert's frame ids are EXACTLY the ad-hoc
+    top-k plan's ids over the same rows, rank order included — under
+    fp32 and the int8 quantised index (the slab quantises per-row,
+    bitwise the arena's own rows)."""
+    rng = np.random.default_rng(0)
+    cfg = VenusConfig(memory_capacity=128, member_cap=8,
+                      index_dtype=index_dtype)
+    mgr = _direct_manager(cfg)
+    sid = mgr.create_session()
+    emb = _unit(rng.normal(size=(1, DIM)))[0]
+    rows = _rows_with_sims(rng, emb,
+                           [0.2, 0.9, 0.4, 0.95, 0.1, 0.7, 0.3, 0.85,
+                            0.5, 0.6])
+    spec_id = mgr.register_standing(
+        sid, QuerySpec(sid=sid, embedding=emb, strategy="topk",
+                       budget=4),
+        threshold=-1.0)
+    phys = _insert(mgr, sid, rows, 100)
+    fired = _evaluate(mgr, {sid: phys})
+    assert len(fired) == 1 and fired[0].spec_id == spec_id
+    want = _twin_topk_ids(rows, np.arange(100, 110), emb, 4,
+                          index_dtype=index_dtype)
+    np.testing.assert_array_equal(fired[0].frame_ids, want)
+
+
+def test_differential_score_bitwise_vs_direct_kernel():
+    """The alert's score is BITWISE a direct ``fused_retrieve_stack``
+    launch over an independently reconstructed slab of the same rows
+    (same pow2 padding) — no epsilon."""
+    rng = np.random.default_rng(1)
+    mgr = _direct_manager(FLAT)
+    sid = mgr.create_session()
+    emb = _unit(rng.normal(size=(1, DIM)))[0]
+    rows = _rows_with_sims(rng, emb, [0.3, 0.8, 0.55, 0.72, 0.15])
+    mgr.register_standing(
+        sid, QuerySpec(sid=sid, embedding=emb, strategy="topk",
+                       budget=3),
+        threshold=-1.0)
+    phys = _insert(mgr, sid, rows, 0)
+    fired = _evaluate(mgr, {sid: phys})
+    n_pad = _pow2(len(rows))
+    slab = np.zeros((1, n_pad, DIM), np.float32)
+    slab[0, :len(rows)] = rows
+    fr = kops.fused_retrieve_stack(
+        jnp.asarray(emb[None, None, :]), jnp.asarray(slab),
+        tau=FLAT.tau, valid=jnp.asarray([len(rows)], np.int32),
+        targets=jnp.zeros((1, 1, 1), jnp.float32), n_topk=3)
+    assert fired[0].score == float(np.asarray(fr.topk_v)[0, 0, 0])
+
+
+@pytest.mark.parametrize("index_dtype", ["float32", "int8"])
+def test_differential_consolidated(index_dtype):
+    """A consolidated session changes NOTHING for standing evaluation:
+    the slab gathers only the tick's new fine rows, so the alert still
+    matches a flat twin holding just those rows."""
+    rng = np.random.default_rng(2)
+    cfg = VenusConfig(memory_capacity=128, member_cap=8,
+                      eviction="consolidate", coarse_capacity=32,
+                      coarse_block=16, coarse_topb=4,
+                      index_dtype=index_dtype)
+    mgr = _direct_manager(cfg)
+    sid = mgr.create_session()
+    emb = _unit(rng.normal(size=(1, DIM)))[0]
+    fid = 0
+    for _ in range(5):                         # 160 rows > capacity 128
+        _insert(mgr, sid, _unit(rng.normal(size=(32, DIM))), fid)
+        fid += 32
+    assert mgr.arena.has_consolidated()
+    rows = _rows_with_sims(rng, emb,
+                           [0.1, 0.88, 0.4, 0.93, 0.2, 0.66])
+    mgr.register_standing(
+        sid, QuerySpec(sid=sid, embedding=emb, strategy="topk",
+                       budget=3),
+        threshold=-1.0)
+    phys = _insert(mgr, sid, rows, fid)
+    fired = _evaluate(mgr, {sid: phys})
+    want = _twin_topk_ids(rows, np.arange(fid, fid + len(rows)), emb, 3,
+                          index_dtype=index_dtype)
+    np.testing.assert_array_equal(fired[0].frame_ids, want)
+
+
+def test_differential_ring_wrap():
+    """New rows whose physical slots wrap the ring boundary gather
+    correctly (physical addressing makes wrap a non-event): alert ids
+    still match the flat twin over the same rows in commit order."""
+    rng = np.random.default_rng(3)
+    cfg = VenusConfig(memory_capacity=32, member_cap=8,
+                      eviction="sliding_window")
+    mgr = _direct_manager(cfg)
+    sid = mgr.create_session()
+    emb = _unit(rng.normal(size=(1, DIM)))[0]
+    _insert(mgr, sid, _unit(rng.normal(size=(28, DIM))), 0)
+    rows = _rows_with_sims(rng, emb,
+                           [0.3, 0.9, 0.5, 0.8, 0.2, 0.7, 0.6, 0.4])
+    mgr.register_standing(
+        sid, QuerySpec(sid=sid, embedding=emb, strategy="topk",
+                       budget=4),
+        threshold=-1.0)
+    phys = _insert(mgr, sid, rows, 28)
+    assert phys.max() > phys.min() and (np.diff(phys) < 0).any(), \
+        "test must actually cross the ring boundary"
+    fired = _evaluate(mgr, {sid: phys})
+    want = _twin_topk_ids(rows, np.arange(28, 36), emb, 4)
+    np.testing.assert_array_equal(fired[0].frame_ids, want)
+
+
+def test_differential_mixed_session_tick():
+    """One tick committing rows to three sessions — two with standing
+    specs (of DIFFERENT budgets, batched into one launch at the max k;
+    lax.top_k prefix-stability makes the smaller budget's ids identical
+    to its own ad-hoc plan), one without. Each alert matches its own
+    flat twin; the spec-less session contributes nothing."""
+    rng = np.random.default_rng(4)
+    mgr = _direct_manager(FLAT)
+    sids = [mgr.create_session() for _ in range(3)]
+    embs = [_unit(rng.normal(size=(1, DIM)))[0] for _ in range(3)]
+    rows_a = _rows_with_sims(rng, embs[0], [0.4, 0.9, 0.1, 0.7, 0.55])
+    rows_b = _rows_with_sims(
+        rng, embs[1], [0.2, 0.85, 0.6, 0.95, 0.3, 0.5, 0.75, 0.1, 0.45])
+    rows_c = _unit(rng.normal(size=(4, DIM)))
+    ids = {
+        "a3": mgr.register_standing(
+            sids[0], QuerySpec(sid=sids[0], embedding=embs[0],
+                               strategy="topk", budget=3),
+            threshold=-1.0),
+        "a5": mgr.register_standing(
+            sids[0], QuerySpec(sid=sids[0], embedding=embs[0],
+                               strategy="topk", budget=5),
+            threshold=-1.0),
+        "b4": mgr.register_standing(
+            sids[1], QuerySpec(sid=sids[1], embedding=embs[1],
+                               strategy="topk", budget=4),
+            threshold=-1.0),
+    }
+    phys = {sids[0]: _insert(mgr, sids[0], rows_a, 0),
+            sids[1]: _insert(mgr, sids[1], rows_b, 0),
+            sids[2]: _insert(mgr, sids[2], rows_c, 0)}
+    fired = {a.spec_id: a for a in _evaluate(mgr, phys)}
+    assert set(fired) == set(ids.values())
+    np.testing.assert_array_equal(
+        fired[ids["a3"]].frame_ids,
+        _twin_topk_ids(rows_a, np.arange(5), embs[0], 3))
+    np.testing.assert_array_equal(
+        fired[ids["a5"]].frame_ids,
+        _twin_topk_ids(rows_a, np.arange(5), embs[0], 5))
+    np.testing.assert_array_equal(
+        fired[ids["b4"]].frame_ids,
+        _twin_topk_ids(rows_b, np.arange(9), embs[1], 4))
+    assert all(a.sid != sids[2] for a in fired.values())
+
+
+# ---------------------------------------------------------------------------
+# trigger state machine: hysteresis, cooldown, suppression accounting
+# ---------------------------------------------------------------------------
+
+
+def _drive_sims(mgr, sid, emb, sims, rng):
+    """One single-row tick per similarity; returns fires-per-tick."""
+    out, fid = [], 0
+    for s in sims:
+        row = _rows_with_sims(rng, emb, [s])
+        phys = _insert(mgr, sid, row, fid)
+        fid += 1
+        out.append(len(_evaluate(mgr, {sid: phys})))
+    return out
+
+
+def test_hysteresis_fires_once_per_excursion():
+    """threshold .5, hysteresis .2: a score flapping above the
+    threshold fires once; it must fall through the re-arm band
+    (<= .3) — NOT merely below the threshold — before firing again."""
+    rng = np.random.default_rng(5)
+    mgr = _direct_manager(FLAT)
+    sid = mgr.create_session()
+    emb = _unit(rng.normal(size=(1, DIM)))[0]
+    mgr.register_standing(
+        sid, QuerySpec(sid=sid, embedding=emb, strategy="topk",
+                       budget=1),
+        threshold=0.5, hysteresis=0.2)
+    fires = _drive_sims(mgr, sid, emb,
+                        [0.6, 0.6, 0.45, 0.6, 0.25, 0.6], rng)
+    #                    fire  supp  band  supp  rearm fire
+    assert fires == [1, 0, 0, 0, 0, 1]
+    assert mgr.io_stats["alerts_fired"] == 2
+    assert mgr.io_stats["alerts_suppressed"] == 2
+
+
+def test_cooldown_debounces_refire():
+    """cooldown_ticks=3: after a fire, a re-armed spec whose score
+    crosses again while the cooldown drains is SUPPRESSED (counted),
+    then fires once the cooldown reaches zero."""
+    rng = np.random.default_rng(6)
+    mgr = _direct_manager(FLAT)
+    sid = mgr.create_session()
+    emb = _unit(rng.normal(size=(1, DIM)))[0]
+    mgr.register_standing(
+        sid, QuerySpec(sid=sid, embedding=emb, strategy="topk",
+                       budget=1),
+        threshold=0.5, cooldown_ticks=3)
+    fires = _drive_sims(mgr, sid, emb, [0.6, 0.2, 0.6, 0.6], rng)
+    #                                   fire  rearm supp  fire
+    assert fires == [1, 0, 0, 1]
+    assert mgr.io_stats["alerts_suppressed"] == 1
+
+
+def test_subthreshold_never_fires():
+    rng = np.random.default_rng(7)
+    mgr = _direct_manager(FLAT)
+    sid = mgr.create_session()
+    emb = _unit(rng.normal(size=(1, DIM)))[0]
+    mgr.register_standing(
+        sid, QuerySpec(sid=sid, embedding=emb, strategy="topk",
+                       budget=1),
+        threshold=0.9)
+    fires = _drive_sims(mgr, sid, emb, [0.1, 0.5, 0.8, 0.85], rng)
+    assert fires == [0, 0, 0, 0]
+    assert mgr.io_stats["alerts_fired"] == 0
+    assert mgr.standing.pending_alerts == 0
+
+
+def test_alert_frame_ids_are_thresholded():
+    """frame_ids carry only the rows AT OR ABOVE the threshold (within
+    the budget) — not the whole top-k block."""
+    rng = np.random.default_rng(8)
+    mgr = _direct_manager(FLAT)
+    sid = mgr.create_session()
+    emb = _unit(rng.normal(size=(1, DIM)))[0]
+    rows = _rows_with_sims(rng, emb, [0.95, 0.3, 0.92, 0.1, 0.2])
+    mgr.register_standing(
+        sid, QuerySpec(sid=sid, embedding=emb, strategy="topk",
+                       budget=4),
+        threshold=0.9)
+    fired = _evaluate(mgr, {sid: _insert(mgr, sid, rows, 0)})
+    np.testing.assert_array_equal(fired[0].frame_ids, [0, 2])
+
+
+# ---------------------------------------------------------------------------
+# delivery: priority ordering, callbacks, lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_poll_alerts_priority_ordered():
+    """poll_alerts drains priority desc, then score desc; max_alerts
+    caps the drain and the remainder stays pending."""
+    rng = np.random.default_rng(9)
+    mgr = _direct_manager(FLAT)
+    sid = mgr.create_session()
+    emb = _unit(rng.normal(size=(1, DIM)))[0]
+    lo = mgr.register_standing(
+        sid, QuerySpec(sid=sid, embedding=emb, strategy="topk",
+                       budget=1),
+        threshold=-1.0, priority=0.0)
+    hi = mgr.register_standing(
+        sid, QuerySpec(sid=sid, embedding=emb, strategy="topk",
+                       budget=1),
+        threshold=-1.0, priority=5.0)
+    rows = _rows_with_sims(rng, emb, [0.8])
+    _evaluate(mgr, {sid: _insert(mgr, sid, rows, 0)})
+    assert mgr.standing.pending_alerts == 2
+    first = mgr.poll_alerts(max_alerts=1)
+    assert [a.spec_id for a in first] == [hi]
+    assert mgr.standing.pending_alerts == 1
+    assert [a.spec_id for a in mgr.poll_alerts()] == [lo]
+    assert mgr.poll_alerts() == []
+
+
+def test_on_alert_callback_observes_stream():
+    rng = np.random.default_rng(10)
+    mgr = _direct_manager(FLAT)
+    svc = VenusService(mgr, engine=None)
+    sid = svc.create_stream()
+    emb = _unit(rng.normal(size=(1, DIM)))[0]
+    seen = []
+    svc.on_alert(seen.append)
+    spec_id = svc.register_standing(
+        sid, QuerySpec(sid=sid, embedding=emb, strategy="topk",
+                       budget=2),
+        threshold=0.5)
+    rows = _rows_with_sims(rng, emb, [0.9, 0.7, 0.2])
+    _evaluate(mgr, {sid: _insert(mgr, sid, rows, 0)})
+    assert [a.spec_id for a in seen] == [spec_id]
+    # callbacks observe; poll still drains the same alert
+    assert [a.spec_id for a in svc.poll_alerts()] == [spec_id]
+    stats = svc.io_stats()
+    assert stats["standing_specs"] == 1
+    assert stats["alerts_fired"] == 1
+
+
+def test_close_session_drops_specs_no_ghost_firing():
+    """Closing a stream drops its standing specs; the NEXT tenant of
+    the recycled arena slot must not fire them — while alerts already
+    fired for the closed stream stay pollable."""
+    rng = np.random.default_rng(11)
+    mgr = _direct_manager(FLAT)
+    sid = mgr.create_session()
+    emb = _unit(rng.normal(size=(1, DIM)))[0]
+    spec_id = mgr.register_standing(
+        sid, QuerySpec(sid=sid, embedding=emb, strategy="topk",
+                       budget=1),
+        threshold=0.5)
+    rows = _rows_with_sims(rng, emb, [0.9])
+    _evaluate(mgr, {sid: _insert(mgr, sid, rows, 0)})
+    assert mgr.standing.pending_alerts == 1     # fired, not yet polled
+    mgr.close_session(sid)
+    assert mgr.standing.n_specs == 0
+    sid2 = mgr.create_session()                 # recycles the slot
+    assert mgr.sessions[sid2].memory.slot == 0
+    fired = _evaluate(mgr, {sid2: _insert(mgr, sid2, rows, 0)})
+    assert fired == []                          # no ghost-firing
+    polled = mgr.poll_alerts()
+    assert [a.spec_id for a in polled] == [spec_id]
+    assert polled[0].sid == sid                 # the closed stream's
+
+
+def test_unregister_stops_evaluation():
+    rng = np.random.default_rng(12)
+    mgr = _direct_manager(FLAT)
+    sid = mgr.create_session()
+    emb = _unit(rng.normal(size=(1, DIM)))[0]
+    spec_id = mgr.register_standing(
+        sid, QuerySpec(sid=sid, embedding=emb, strategy="topk",
+                       budget=1),
+        threshold=-1.0)
+    rows = _rows_with_sims(rng, emb, [0.9])
+    assert len(_evaluate(mgr, {sid: _insert(mgr, sid, rows, 0)})) == 1
+    mgr.unregister_standing(spec_id)
+    assert mgr.standing.n_specs == 0
+    assert _evaluate(mgr, {sid: _insert(mgr, sid, rows, 1)}) == []
+
+
+# ---------------------------------------------------------------------------
+# validation: only deterministic fused specs, sane trigger params
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["sampling", "akr", "bolt",
+                                      "uniform"])
+def test_register_rejects_non_deterministic_strategies(strategy):
+    mgr = _direct_manager(FLAT)
+    sid = mgr.create_session()
+    emb = np.ones(DIM, np.float32) / np.sqrt(DIM)
+    with pytest.raises(ValueError, match="standing"):
+        mgr.register_standing(
+            sid, QuerySpec(sid=sid, embedding=emb, strategy=strategy,
+                           budget=4),
+            threshold=0.5)
+
+
+def test_register_rejects_explicit_seed_and_bad_trigger_params():
+    mgr = _direct_manager(FLAT)
+    sid = mgr.create_session()
+    emb = np.ones(DIM, np.float32) / np.sqrt(DIM)
+    spec = QuerySpec(sid=sid, embedding=emb, strategy="topk", budget=4)
+    with pytest.raises(ValueError, match="seed"):
+        mgr.register_standing(
+            sid, QuerySpec(sid=sid, embedding=emb, strategy="topk",
+                           budget=4, seed=7),
+            threshold=0.5)
+    with pytest.raises(ValueError, match="threshold"):
+        mgr.register_standing(sid, spec, threshold=float("inf"))
+    with pytest.raises(ValueError, match="hysteresis"):
+        mgr.register_standing(sid, spec, threshold=0.5, hysteresis=-0.1)
+    with pytest.raises(ValueError, match="cooldown"):
+        mgr.register_standing(sid, spec, threshold=0.5,
+                              cooldown_ticks=-1)
+    assert mgr.standing.n_specs == 0
+
+
+# ---------------------------------------------------------------------------
+# the bandwidth claim: standing_scan_bytes = padded slab, not capacity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("index_dtype,itemsize", [("float32", 4),
+                                                  ("int8", 1)])
+def test_standing_scan_bytes_is_slab_sized(index_dtype, itemsize):
+    """One tick over n new rows streams exactly the padded-slab bytes
+    G · pow2(n) · d · itemsize — within 2× of n·d·itemsize and far
+    below a capacity re-scan — with zero stack rebuilds."""
+    rng = np.random.default_rng(13)
+    cfg = VenusConfig(memory_capacity=4096, member_cap=8,
+                      index_dtype=index_dtype)
+    mgr = _direct_manager(cfg)
+    sid = mgr.create_session()
+    emb = _unit(rng.normal(size=(1, DIM)))[0]
+    mgr.register_standing(
+        sid, QuerySpec(sid=sid, embedding=emb, strategy="topk",
+                       budget=4),
+        threshold=-1.0)
+    n_new = 10
+    rows = _unit(rng.normal(size=(n_new, DIM)))
+    phys = _insert(mgr, sid, rows, 0)
+    kops.reset_scan_counts()
+    _evaluate(mgr, {sid: phys})
+    got = kops.scan_counts()["standing_scan_bytes"]
+    assert got == _pow2(n_new) * DIM * itemsize
+    assert got <= 2 * n_new * DIM * itemsize
+    assert got < cfg.memory_capacity * DIM * itemsize // 8
+    assert mgr.io_stats["stack_rebuilds"] == 0
+
+
+def test_empty_tick_scans_nothing():
+    """Ticks with no new rows for any spec'd session launch nothing."""
+    rng = np.random.default_rng(14)
+    mgr = _direct_manager(FLAT)
+    sid = mgr.create_session()
+    other = mgr.create_session()
+    emb = _unit(rng.normal(size=(1, DIM)))[0]
+    mgr.register_standing(
+        sid, QuerySpec(sid=sid, embedding=emb, strategy="topk",
+                       budget=1),
+        threshold=-1.0)
+    rows = _unit(rng.normal(size=(4, DIM)))
+    phys = _insert(mgr, other, rows, 0)         # spec-less session only
+    kops.reset_scan_counts()
+    assert _evaluate(mgr, {other: phys}) == []
+    assert kops.scan_counts()["standing_scan_bytes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end ingest path + sharded-manager pin
+# ---------------------------------------------------------------------------
+
+
+def _block_chunk(rng, n=16, hw=16, pool=8):
+    """n identical frames of one block-structured scene: random values
+    at the embedder's pool scale (zero-centred so distinct scenes pool
+    to near-orthogonal vectors — whole-frame means would all collapse
+    to the same gray direction)."""
+    blocks = rng.uniform(-1, 1, (hw // pool, hw // pool, 3)
+                         ).astype(np.float32)
+    frame = np.kron(blocks, np.ones((pool, pool, 1), np.float32))
+    return np.broadcast_to(frame, (n,) + frame.shape).copy()
+
+
+def _target_chunk(n=16):
+    return _block_chunk(np.random.default_rng(99), n=n)
+
+
+def _ingest_alert_stream(mesh=None):
+    """Alternate a constant 'target' scene with noise scenes through
+    the REAL ingest path; return (manager, polled alerts)."""
+    rng = np.random.default_rng(15)
+    embedder = PixelEmbedder(dim=64)
+    cfg = VenusConfig(max_partition_len=64, scene_threshold=0.075)
+    mgr = SessionManager(cfg, embedder, embed_dim=64, mesh=mesh)
+    sid = mgr.create_session()
+    target = embedder.embed_frames(_target_chunk())[0]
+    mgr.register_standing(
+        sid, QuerySpec(sid=sid, embedding=np.asarray(target, np.float32),
+                       strategy="topk", budget=4),
+        threshold=0.9, hysteresis=0.05)
+    for t in range(6):
+        chunk = _target_chunk() if t % 2 == 0 else _block_chunk(rng)
+        mgr.ingest_tick({sid: chunk})
+    mgr.flush()
+    return mgr, mgr.poll_alerts()
+
+
+def test_ingest_path_fires_on_matching_scenes():
+    """Registered once, the spec fires once per matching scene as its
+    cluster commits — never for the noise scenes between them — and
+    every alert's frames come from the matching chunks' id ranges."""
+    mgr, alerts = _ingest_alert_stream()
+    assert len(alerts) == 3
+    matching = set()
+    for t in (0, 2, 4):                        # constant-chunk ticks
+        matching.update(range(16 * t, 16 * (t + 1)))
+    for a in alerts:
+        assert a.score > 0.99
+        assert set(int(f) for f in a.frame_ids) <= matching
+    assert mgr.io_stats["alerts_fired"] == 3
+    assert mgr.io_stats["stack_rebuilds"] == 0
+    assert kops.scan_counts()["standing_scan_bytes"] > 0
+
+
+@multi_device
+def test_sharded_manager_same_alerts_and_bytes():
+    """A mesh-sharded arena takes the IDENTICAL standing path (the slab
+    is a fresh compact unsharded operand): same alert stream, same
+    slab-sized standing_scan_bytes, zero stack rebuilds."""
+    base_mgr, base = _ingest_alert_stream()
+    base_bytes = kops.scan_counts()["standing_scan_bytes"]
+    kops.reset_scan_counts()
+    mesh_mgr, got = _ingest_alert_stream(
+        mesh=make_host_mesh(model=len(jax.devices())))
+    assert len(got) == len(base) == 3
+    for a, b in zip(got, base):
+        assert (a.sid, a.spec_id, a.tick) == (b.sid, b.spec_id, b.tick)
+        assert a.score == b.score
+        np.testing.assert_array_equal(a.frame_ids, b.frame_ids)
+    assert kops.scan_counts()["standing_scan_bytes"] == base_bytes > 0
+    assert mesh_mgr.io_stats["stack_rebuilds"] == 0
+    assert base_mgr.io_stats["stack_rebuilds"] == 0

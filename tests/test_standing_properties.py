@@ -1,0 +1,188 @@
+"""Property tests for standing queries (``repro.core.standing``).
+
+Two invariants under random interleavings:
+
+* REPLAY EQUIVALENCE — any sequence of register / unregister / tick
+  operations fires the identical alert stream (sid, spec id, score
+  bitwise, frame ids, tick) when replayed op-for-op on a fresh
+  manager: standing evaluation keeps no hidden state beyond the
+  registry's own trigger fields, consumes no PRNG chain, and its
+  scores don't depend on what other specs exist or when they were
+  (un)registered.
+* READABILITY AT FIRE TIME — every alert's frame ids are readable
+  from the session's ``FrameStore`` the moment the alert is polled:
+  alerts only ever reference the tick's newly committed rows, which
+  the archive trim horizon keeps live — and with the spill tier
+  enabled they stay readable forever (faulted back from disk).
+"""
+
+import os
+import shutil
+import tempfile
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.queryplan import QuerySpec  # noqa: E402
+from repro.core.session import SessionManager, VenusConfig  # noqa: E402
+from repro.data.video import PixelEmbedder  # noqa: E402
+
+DIM = 32
+
+
+def _unit(rows):
+    rows = np.asarray(rows, np.float32)
+    return rows / (np.linalg.norm(rows, axis=-1, keepdims=True) + 1e-12)
+
+
+class ArrayEmbedder:
+    def embed_queries(self, texts):
+        raise AssertionError("tests pass explicit embeddings")
+
+    def embed_frames(self, frames, aux=None, frame_ids=None):
+        raise AssertionError("tests insert rows directly")
+
+
+def _draw_ops(data):
+    """A concrete op list — every array materialised up front, so the
+    replay applies EXACTLY the same inputs."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+    ops = []
+    for _ in range(data.draw(st.integers(3, 10))):
+        kind = data.draw(st.sampled_from(["register", "unregister",
+                                          "tick", "tick"]))
+        if kind == "register":
+            ops.append(("register", {
+                "s": data.draw(st.integers(0, 1)),
+                "emb": _unit(rng.normal(size=(1, DIM)))[0],
+                "budget": data.draw(st.integers(1, 4)),
+                "threshold": data.draw(st.sampled_from(
+                    [-1.0, 0.2, 0.6, 0.9])),
+                "hysteresis": data.draw(st.sampled_from([0.0, 0.1])),
+                "cooldown": data.draw(st.integers(0, 2)),
+            }))
+        elif kind == "unregister":
+            ops.append(("unregister", None))
+        else:
+            counts = [data.draw(st.integers(0, 5)) for _ in range(2)]
+            ops.append(("tick", [_unit(rng.normal(size=(n, DIM)))
+                                 if n else None for n in counts]))
+    return ops
+
+
+def _apply(ops):
+    """Run the op list on a fresh manager; return the alert stream."""
+    mgr = SessionManager(VenusConfig(memory_capacity=128, member_cap=8),
+                         ArrayEmbedder(), embed_dim=DIM)
+    sids = [mgr.create_session(), mgr.create_session()]
+    fid = [0, 0]
+    stream = []
+    for kind, arg in ops:
+        if kind == "register":
+            mgr.register_standing(
+                sids[arg["s"]],
+                QuerySpec(sid=sids[arg["s"]], embedding=arg["emb"],
+                          strategy="topk", budget=arg["budget"]),
+                threshold=arg["threshold"],
+                hysteresis=arg["hysteresis"],
+                cooldown_ticks=arg["cooldown"])
+        elif kind == "unregister":
+            if mgr.standing.entries:       # lowest live id — replay
+                mgr.unregister_standing(   # makes the same choice
+                    min(mgr.standing.entries))
+        else:
+            phys = {}
+            for s, rows in enumerate(arg):
+                if rows is None:
+                    continue
+                mem = mgr.sessions[sids[s]].memory
+                fids = np.arange(fid[s], fid[s] + len(rows))
+                fid[s] += len(rows)
+                with mgr.arena.deferred_appends():
+                    p = mem.insert_batch(
+                        rows, scene_ids=[0] * len(rows),
+                        index_frames=fids,
+                        member_lists=[[int(f)] for f in fids])
+                phys[sids[s]] = [p]
+            if phys:
+                for a in mgr.standing.evaluate(mgr.sessions, phys,
+                                               mgr.io_stats):
+                    stream.append((a.sid, a.spec_id, a.score,
+                                   tuple(int(f) for f in a.frame_ids),
+                                   a.tick))
+    stats = (mgr.io_stats["alerts_fired"],
+             mgr.io_stats["alerts_suppressed"])
+    return stream, stats
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_replay_fires_identical_alert_stream(data):
+    ops = _draw_ops(data)
+    first, first_stats = _apply(ops)
+    replay, replay_stats = _apply(ops)
+    assert replay == first
+    assert replay_stats == first_stats
+
+
+def _scene_chunk(rng, n=16, hw=16, pool=8):
+    blocks = rng.uniform(-1, 1, (hw // pool, hw // pool, 3)
+                         ).astype(np.float32)
+    frame = np.kron(blocks, np.ones((pool, pool, 1), np.float32))
+    return np.broadcast_to(frame, (n,) + frame.shape).copy()
+
+
+@settings(max_examples=8, deadline=None)
+@given(data=st.data(), spill=st.booleans())
+def test_alert_frame_ids_readable_at_fire_time(data, spill):
+    """Random target/noise scene sequences through the REAL ingest
+    path, under a window-evicting session that trims its archive:
+    every polled alert's frame ids must resolve through
+    ``FrameStore.get`` — bit-readable host frames, or spill faults
+    when the tier is on; never a trimmed-id IndexError."""
+    tmp = tempfile.mkdtemp() if spill else None
+    try:
+        cfg = VenusConfig(max_partition_len=32, memory_capacity=64,
+                          member_cap=8, eviction="sliding_window",
+                          spill_dir=(os.path.join(tmp, "s") if spill
+                                     else None),
+                          spill_segment_frames=8,
+                          host_retain=16 if spill else None)
+        embedder = PixelEmbedder(dim=64)
+        mgr = SessionManager(cfg, embedder, embed_dim=64)
+        sid = mgr.create_session()
+        target_rng_seed = data.draw(st.integers(0, 2**31 - 1))
+        target = _scene_chunk(np.random.default_rng(target_rng_seed))
+        mgr.register_standing(
+            sid, QuerySpec(
+                sid=sid, strategy="topk", budget=4,
+                embedding=np.asarray(
+                    embedder.embed_frames(target)[0], np.float32)),
+            threshold=0.9, hysteresis=0.1)
+        noise_rng = np.random.default_rng(
+            data.draw(st.integers(0, 2**31 - 1)))
+        n_alerts = 0
+        for _ in range(data.draw(st.integers(4, 8))):
+            match = data.draw(st.booleans())
+            chunk = (target.copy() if match
+                     else _scene_chunk(noise_rng))
+            mgr.ingest_tick({sid: chunk})
+            for a in mgr.poll_alerts():
+                n_alerts += 1
+                got = mgr[sid].frames.get(
+                    [int(f) for f in a.frame_ids])
+                assert got.shape[0] == len(a.frame_ids)
+        mgr.flush()
+        for a in mgr.poll_alerts():
+            n_alerts += 1
+            ids = [int(f) for f in a.frame_ids]
+            if spill:
+                assert mgr[sid].frames.get(ids).shape[0] == len(ids)
+        assert mgr.io_stats["alerts_fired"] == n_alerts
+    finally:
+        if tmp is not None:
+            shutil.rmtree(tmp, ignore_errors=True)
